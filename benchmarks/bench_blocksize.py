@@ -1,0 +1,41 @@
+"""Fig. 6 — effect of block size (8^3..64^3); small blocks lose CR."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CompressionSpec
+from repro.fields import CloudConfig, cavitation_fields
+
+from .common import emit, eps_sweep, save_json, sweep
+
+
+def run(quick: bool = True):
+    n = 128  # need divisibility by 64 for the largest block size
+    fields = cavitation_fields(CloudConfig(n=n), 9.4)
+    eps_list = eps_sweep(n=3 if quick else 6)
+    rows = []
+    t0 = time.time()
+    for q in ("p", "rho"):
+        for bs in (8, 16, 32, 64):
+            specs = [CompressionSpec(scheme="wavelet", wavelet="w3ai",
+                                     eps=e, block_size=bs) for e in eps_list]
+            for e, r in zip(eps_list, sweep(fields[q], specs)):
+                rows.append({"qoi": q, "block_size": bs, "eps": e,
+                             "cr": r["cr"], "psnr": r["psnr"]})
+    dt = time.time() - t0
+    save_json("fig6_blocksize", rows)
+
+    def mean_cr(bs):
+        return np.mean([r["cr"] for r in rows if r["block_size"] == bs])
+
+    emit("fig6_cr_bs8_over_bs32", dt * 1e6 / max(len(rows), 1),
+         f"{mean_cr(8) / mean_cr(32):.3f}")
+    emit("fig6_cr_bs64_over_bs32", dt * 1e6 / max(len(rows), 1),
+         f"{mean_cr(64) / mean_cr(32):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

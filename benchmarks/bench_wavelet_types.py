@@ -1,0 +1,41 @@
+"""Fig. 4 — CR vs PSNR for W4 / W4l / W3ai on p and rho after 10k steps."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CompressionSpec
+
+from .common import dataset, emit, eps_sweep, save_json, sweep
+
+
+def run(quick: bool = True):
+    fields = dataset("10k")
+    eps_list = eps_sweep(n=4 if quick else 8)
+    rows = []
+    t0 = time.time()
+    for q in ("p", "rho"):
+        for wav in ("w4i", "w4l", "w3ai"):
+            specs = [CompressionSpec(scheme="wavelet", wavelet=wav, eps=e)
+                     for e in eps_list]
+            for e, r in zip(eps_list, sweep(fields[q], specs)):
+                rows.append({"qoi": q, "wavelet": wav, "eps": e,
+                             "cr": r["cr"], "psnr": r["psnr"]})
+    dt = time.time() - t0
+    save_json("fig4_wavelet_types", rows)
+
+    # validation: at every eps W3ai CR >= 0.9x the best of the other two
+    ok = 0
+    tot = 0
+    for q in ("p", "rho"):
+        for e in eps_list:
+            by = {r["wavelet"]: r["cr"] for r in rows
+                  if r["qoi"] == q and r["eps"] == e}
+            tot += 1
+            if by["w3ai"] >= 0.9 * max(by["w4i"], by["w4l"]):
+                ok += 1
+    emit("fig4_w3ai_wins_frac", dt * 1e6 / max(len(rows), 1), f"{ok}/{tot}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,55 @@
+"""Shared benchmark helpers: datasets, sweeps, CSV/JSON output."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import CompressionSpec, analyze_field
+from repro.fields import CloudConfig, cavitation_fields
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "bench")
+
+# Default grid for benchmark datasets: 96^3 keeps every benchmark CPU-cheap
+# while leaving 3 wavelet levels at 32^3 blocks (27 blocks per field).
+BENCH_N = 96
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(t_label: str = "10k", n: int = BENCH_N):
+    from repro.fields.cavitation import PAPER_TIMES
+
+    t = PAPER_TIMES[t_label]
+    return cavitation_fields(CloudConfig(n=n), t)
+
+
+def sweep(field, specs: list[CompressionSpec]) -> list[dict]:
+    rows = []
+    for spec in specs:
+        t0 = time.time()
+        r = analyze_field(field, spec)
+        r["time_s"] = time.time() - t0
+        r["spec"] = spec.to_json()
+        rows.append(r)
+    return rows
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    """The harness CSV convention: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def eps_sweep(lo=1e-4, hi=1e-1, n=6):
+    return list(np.geomspace(lo, hi, n))

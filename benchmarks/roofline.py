@@ -1,0 +1,193 @@
+"""§Roofline — three-term roofline per (arch x shape) from the dry-run.
+
+Terms (seconds per step, per chip; single-pod 16x16 mesh):
+
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_bytes / link_bw      (50 GB/s per ICI link; we
+               charge one link — conservative single-direction model)
+
+All three inputs are **loop-aware** (benchmarks/../repro/launch/hlo_analysis
+multiplies while-loop bodies by their trip counts; stock cost_analysis()
+counts scan bodies once and under-reports a 64-layer model ~40x — see
+EXPERIMENTS.md §Dry-run).
+
+MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (decode); the
+ratio MODEL_FLOPS / HLO_FLOPs exposes redundant compute (masked-causal
+waste, remat recompute, attention replicated when head counts don't shard).
+
+roofline_fraction = ideal_useful_compute_time / max(term) — the score: how
+close the lowered step is to a perfectly-efficient, useful-compute-bound
+execution on this hardware.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts")
+
+
+def _advice(dom: str, row: dict) -> str:
+    if dom == "compute":
+        if row["useful_ratio"] < 0.5:
+            return ("cut redundant FLOPs: triangular causal attention, less "
+                    "remat, shard attention over seq (context parallelism)")
+        return "compute-bound at high usefulness: increase arithmetic intensity or accept"
+    if dom == "memory":
+        return ("raise arithmetic intensity: larger per-step tiles, fuse "
+                "elementwise chains, keep weights resident (reduce regathers)")
+    return ("shrink collective bytes: 2-axis FSDP regathers dominate — "
+            "overlap all-gathers with compute, or compress payloads "
+            "(gradient compression / bf16 collectives)")
+
+
+def load_cells(mesh: str = "single", tag: str = ""):
+    rows = []
+    suffix = f"__{mesh}{('__' + tag) if tag else ''}.json"
+    for p in sorted(glob.glob(os.path.join(ART, "dryrun", f"*{suffix}"))):
+        base = os.path.basename(p)
+        if not tag and base.count("__") != 2:
+            continue
+        d = json.load(open(p))
+        if not d.get("applicable"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "skipped": d.get("skip_reason", "")})
+            continue
+        if "error" in d:
+            continue
+        la = d["loop_aware"]
+        n_dev = d["n_devices"]
+        hbm = la.get("hbm_bytes_fused_per_device", la["hbm_bytes_per_device"])
+        t_c = la["flops_per_device"] / PEAK_FLOPS
+        t_m = hbm / HBM_BW
+        t_l = la["collective_bytes_per_device"] / LINK_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+        dom = max(terms, key=terms.get)
+        mf_dev = d["model_flops"] / n_dev
+        useful = mf_dev / max(la["flops_per_device"], 1e-9)
+        t_star = max(terms.values())
+        if d["kind"] == "decode":
+            # decode is legitimately bandwidth-bound: score vs the minimal
+            # traffic floor (params once + cache once per step, bf16)
+            ideal_bytes = (2.0 * d["params_active"] / n_dev
+                           + _cache_bytes(d) / n_dev)
+            frac = (ideal_bytes / HBM_BW) / max(t_star, 1e-12)
+        else:
+            frac = (mf_dev / PEAK_FLOPS) / max(t_star, 1e-12)
+        row = {
+            "arch": d["arch"], "shape": d["shape"], "mesh": mesh,
+            "kind": d["kind"],
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+            "dominant": dom, "useful_ratio": useful,
+            "roofline_fraction": frac,
+            "model_flops_per_dev": mf_dev,
+            "hlo_flops_per_dev": la["flops_per_device"],
+            "hbm_bytes_per_dev": hbm,
+            "hbm_bytes_unfused_per_dev": la["hbm_bytes_per_device"],
+            "attn_score_bytes_per_dev": la.get("attn_score_bytes_per_device", 0),
+            "coll_bytes_per_dev": la["collective_bytes_per_device"],
+            "mem_gib": (d["memory"]["argument_bytes"] + d["memory"]["temp_bytes"]
+                        + d["memory"]["output_bytes"]) / 2**30,
+        }
+        row["advice"] = _advice(dom, row)
+        rows.append(row)
+    return rows
+
+
+def _cache_bytes(d) -> float:
+    """Global KV/state cache bytes for a decode cell (bf16/f32 mixed)."""
+    from repro.configs import ARCHS, SHAPES
+    from repro.models import cache_spec
+
+    cfg = ARCHS[d["arch"]]
+    shape = SHAPES[d["shape"]]
+    import jax
+
+    specs = cache_spec(cfg, shape.global_batch, shape.seq_len, mode="spec")
+    total = 0
+    for leaf in jax.tree.leaves(specs):
+        n = 1
+        for x in leaf.shape:
+            n *= x
+        total += n * leaf.dtype.itemsize
+    return float(total)
+
+
+def render(rows, title="Roofline (single-pod 16x16, per chip)"):
+    out = [f"### {title}", ""]
+    out.append("| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+               "| useful (MODEL/HLO) | roofline_frac | mem GiB |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} | "
+            f"{r['mem_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def load_variants():
+    """Tagged hillclimb cells (arch__shape__single__tag.json)."""
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ART, "dryrun", "*__single__*.json"))):
+        tag = os.path.basename(p).split("__")[-1][:-5]
+        d = json.load(open(p))
+        if "error" in d or not d.get("applicable"):
+            continue
+        la = d["loop_aware"]
+        hbm = la.get("hbm_bytes_fused_per_device", la["hbm_bytes_per_device"])
+        terms = {"compute": la["flops_per_device"] / PEAK_FLOPS,
+                 "memory": hbm / HBM_BW,
+                 "collective": la["collective_bytes_per_device"] / LINK_BW}
+        mf = d["model_flops"] / d["n_devices"]
+        rows.append({"arch": d["arch"], "shape": d["shape"], "tag": tag,
+                     **{f"{k}_s": v for k, v in terms.items()},
+                     "roofline_fraction": (mf / PEAK_FLOPS) / max(terms.values(), key=abs)
+                     if max(terms.values()) > 0 else 0.0})
+        rows[-1]["roofline_fraction"] = (mf / PEAK_FLOPS) / max(terms.values())
+    return rows
+
+
+def render_variants(rows):
+    out = ["", "### §Perf variant cells (tagged artifacts)", "",
+           "| arch | shape | variant | compute_s | memory_s | collective_s | roofline_frac |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['arch']} | {r['shape']} | {r['tag']} | "
+                   f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+                   f"{r['collective_s']:.3e} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load_cells("single")
+    md = render(rows) + render_variants(load_variants())
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "roofline.md"), "w") as f:
+        f.write(md + "\n")
+    print(md)
+    real = [r for r in rows if "skipped" not in r]
+    if real:
+        worst = min(real, key=lambda r: r["roofline_fraction"])
+        collb = max(real, key=lambda r: r["collective_s"] / max(r["compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound:  {collb['arch']} x {collb['shape']} "
+              f"(coll/comp = {collb['collective_s']/max(collb['compute_s'],1e-12):.2f})")
+    with open(os.path.join(ART, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Quickstart: compress a 3D scientific field with every codec in 20 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import CompressionSpec, analyze_field
+from repro.fields import CloudConfig, cavitation_fields
+
+# a cloud-cavitation pressure snapshot (the paper's flagship dataset)
+field = cavitation_fields(CloudConfig(n=64), t=9.4)["p"]
+
+for spec in [
+    CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3),   # paper's best
+    CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-2, zero_bits=8),
+    CompressionSpec(scheme="zfpx", eps=1e-3),
+    CompressionSpec(scheme="szx", eps=1e-3),
+    CompressionSpec(scheme="fpzipx", precision=32),                # lossless
+]:
+    r = analyze_field(field, spec)
+    print(f"{spec.scheme:8s} eps={spec.eps:g} -> CR {r['cr']:7.2f}x  "
+          f"PSNR {r['psnr']:7.2f} dB  max|err| {r['max_err']:.2e}")

@@ -1,0 +1,8 @@
+"""Batched serving: prefill + greedy decode with a KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "smollm-135m", "--reduced", "--batch", "4",
+      "--prompt-len", "8", "--max-new", "16"])

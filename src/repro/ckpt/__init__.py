@@ -1,0 +1,8 @@
+"""Compressed distributed checkpointing (paper's parallel-I/O design)."""
+from .checkpoint import (  # noqa: F401
+    Checkpointer,
+    latest_step,
+    load_checkpoint,
+    restore_tree,
+    save_checkpoint,
+)

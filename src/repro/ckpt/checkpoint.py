@@ -1,0 +1,218 @@
+"""Compressed distributed checkpointing (the paper's I/O design, applied to
+training state).
+
+Layout mirrors CubismZ: **one file per quantity** ("params", "m", "v", ...),
+each the concatenation of per-shard compressed buffers whose offsets come
+from an exclusive prefix-sum over compressed sizes (``repro.dist.offsets`` —
+the MPI_Exscan analogue; here shards are written by one process but the
+offset计算 is the same collective structure a multi-host fleet would run).
+
+Codec: lossless ``fpzipx`` + byte-shuffle + ZLIB by default (the paper's
+restart-snapshot scheme, 2.6-4.3x there); optionally lossy wavelet/szx for
+optimizer moments.  Every quantity file carries per-shard CRC32; the commit
+is atomic (write to ``step_XXXX.tmp``, fsync, rename); ``latest`` resolves
+to the newest *complete* checkpoint, so a crash mid-write never corrupts
+restart.  Restore reshards to any device count (elastic scaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import zlib
+
+import numpy as np
+import jax
+
+from repro.core import CompressionSpec, compress_blocks, decompress_blocks
+from repro.dist.offsets import exclusive_offsets_np
+
+__all__ = ["Checkpointer", "save_checkpoint", "load_checkpoint", "latest_step"]
+
+_BS = 16                      # codec block side for flattened tensors
+_BLOCK = _BS ** 3
+
+
+def _leaf_key(path) -> str:
+    return "/".join(getattr(k, "key", str(k)) for k in path)
+
+
+def _to_blocks(arr: np.ndarray) -> tuple[np.ndarray, int]:
+    """Flatten to (nb, 16,16,16) float32 blocks (zero-padded); returns pad."""
+    flat = np.asarray(arr, np.float32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    return flat.reshape(-1, _BS, _BS, _BS), pad
+
+
+def _compress_leaf(arr: np.ndarray, spec: CompressionSpec, n_shards: int):
+    """Returns (list of shard bytes, meta).  Shards emulate per-host writers."""
+    if arr.dtype not in (np.float32, np.dtype("float32")):
+        raw = arr.tobytes()
+        buf = zlib.compress(raw, 1)
+        return [buf], {"codec": "raw+zlib", "dtype": str(arr.dtype)}
+    blocks, pad = _to_blocks(arr)
+    nb = blocks.shape[0]
+    per = max(1, nb // n_shards)
+    shards = []
+    for lo in range(0, nb, per):
+        comp = compress_blocks(blocks[lo : lo + per], spec)
+        payload = json.dumps(comp.header).encode() + b"\0" + b"".join(comp.chunks)
+        shards.append(payload)
+    return shards, {"codec": spec.scheme, "pad": pad, "dtype": "float32"}
+
+
+def _decompress_leaf(shard_bufs: list[bytes], meta: dict, shape, dtype):
+    if meta["codec"] == "raw+zlib":
+        raw = zlib.decompress(shard_bufs[0])
+        return np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(shape).copy()
+    from repro.core.codec import CompressedField
+
+    blocks = []
+    for buf in shard_bufs:
+        hdr, rest = buf.split(b"\0", 1)
+        header = json.loads(hdr)
+        chunks, off = [], 0
+        for sz in header["chunk_sizes"]:
+            chunks.append(rest[off : off + sz])
+            off += sz
+        blocks.append(decompress_blocks(CompressedField(chunks, header)))
+    flat = np.concatenate(blocks).reshape(-1)
+    if meta.get("pad"):
+        flat = flat[: -meta["pad"]] if meta["pad"] else flat
+    n = int(np.prod(shape)) if shape else 1
+    return flat[:n].astype(np.dtype(dtype)).reshape(shape)
+
+
+def save_checkpoint(ckpt_dir: str, state, step: int, *,
+                    spec: CompressionSpec | None = None, n_shards: int = 8) -> dict:
+    """Write one compressed checkpoint; returns manifest (incl. CR stats)."""
+    spec = spec or CompressionSpec(scheme="fpzipx", precision=32,
+                                   block_size=_BS, shuffle="byte")
+    tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    quantities: dict[str, list] = {}
+    for path, leaf in leaves:
+        key = _leaf_key(path)
+        qty = key.split("/", 1)[0]
+        quantities.setdefault(qty, []).append((key, np.asarray(leaf)))
+
+    manifest = {"step": step, "spec": spec.to_json(), "quantities": {},
+                "raw_bytes": 0, "compressed_bytes": 0}
+    for qty, items in quantities.items():
+        entries = []
+        bufs = []
+        for key, arr in items:
+            shards, meta = _compress_leaf(arr, spec, n_shards)
+            sizes = [len(s) for s in shards]
+            # exclusive prefix-sum offsets (the paper's parallel-write scheme)
+            base = sum(len(b) for b in bufs)
+            offsets = (exclusive_offsets_np(sizes) + base).tolist()
+            entries.append({
+                "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "meta": meta, "offsets": offsets, "sizes": sizes,
+                "crc32": [zlib.crc32(s) & 0xFFFFFFFF for s in shards],
+            })
+            bufs.extend(shards)
+            manifest["raw_bytes"] += arr.nbytes
+            manifest["compressed_bytes"] += sum(sizes)
+        with open(os.path.join(tmp, f"{qty}.czq"), "wb") as f:
+            for b in bufs:
+                f.write(b)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["quantities"][qty] = entries
+    manifest["cr"] = manifest["raw_bytes"] / max(1, manifest["compressed_bytes"])
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    return manifest
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int | None = None):
+    """Returns (flat dict key->np.ndarray, manifest). Elastic: the caller
+    device_puts with whatever sharding/mesh the *new* fleet uses."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = {}
+    for qty, entries in manifest["quantities"].items():
+        with open(os.path.join(d, f"{qty}.czq"), "rb") as f:
+            blob = f.read()
+        for e in entries:
+            shards = []
+            for off, sz, crc in zip(e["offsets"], e["sizes"], e["crc32"]):
+                buf = blob[off : off + sz]
+                if (zlib.crc32(buf) & 0xFFFFFFFF) != crc:
+                    raise IOError(f"CRC mismatch in {qty}:{e['key']} shard")
+                shards.append(buf)
+            out[e["key"]] = _decompress_leaf(shards, e["meta"], tuple(e["shape"]),
+                                             e["dtype"])
+    return out, manifest
+
+
+def restore_tree(template, flat: dict):
+    """Rebuild a pytree matching ``template`` from the flat key->array dict."""
+    def one(path, leaf):
+        arr = flat[_leaf_key(path)]
+        return arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+
+    return jax.tree_util.tree_map_with_path(one, template)
+
+
+class Checkpointer:
+    """Periodic checkpoint manager with retention and resume support."""
+
+    def __init__(self, ckpt_dir: str, every: int = 100, keep: int = 3,
+                 spec: CompressionSpec | None = None):
+        self.dir = ckpt_dir
+        self.every = every
+        self.keep = keep
+        self.spec = spec
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def maybe_save(self, state, step: int, force: bool = False):
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return None
+        manifest = save_checkpoint(self.dir, jax.device_get(state), step,
+                                   spec=self.spec)
+        self._gc()
+        return manifest
+
+    def _gc(self):
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    def resume(self, template):
+        step = latest_step(self.dir)
+        if step is None:
+            return None, None
+        flat, manifest = load_checkpoint(self.dir, step)
+        return restore_tree(template, flat), step

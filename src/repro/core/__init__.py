@@ -1,0 +1,12 @@
+"""CubismZ core: block-structured two-substage scientific data compression."""
+from .codec import (  # noqa: F401
+    SCHEMES,
+    CompressedField,
+    CompressionSpec,
+    analyze_field,
+    compress_blocks,
+    compress_field,
+    decompress_blocks,
+    decompress_field,
+)
+from .metrics import compression_ratio, mse, psnr  # noqa: F401

@@ -1,0 +1,109 @@
+"""CZ container: single file per quantity, chunked, random-access decompress.
+
+Mirrors CubismZ's output format design: one shared file per quantity with a
+metadata header, followed by independently-decompressible chunks (the
+per-thread aggregation buffers).  The reader keeps an LRU cache of recently
+decompressed chunks so neighbouring block fetches hit the cache instead of
+re-inflating (paper §2.3 "Data decompression").
+"""
+from __future__ import annotations
+
+import collections
+import json
+import struct
+import zlib
+
+import numpy as np
+
+from . import blocks as blk
+from .codec import CompressedField, CompressionSpec, compress_field, _deserialize_chunk
+
+__all__ = ["write_field", "read_field", "FieldReader", "MAGIC"]
+
+MAGIC = b"CZ1\0"
+
+
+def write_compressed(path: str, comp: CompressedField) -> int:
+    """Write a CompressedField; returns total bytes written."""
+    header = dict(comp.header)
+    header["chunk_crc32"] = [zlib.crc32(c) & 0xFFFFFFFF for c in comp.chunks]
+    hbytes = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(hbytes)))
+        f.write(hbytes)
+        for c in comp.chunks:
+            f.write(c)
+    return len(MAGIC) + 8 + len(hbytes) + sum(len(c) for c in comp.chunks)
+
+
+def write_field(path: str, field: np.ndarray, spec: CompressionSpec) -> int:
+    return write_compressed(path, compress_field(field, spec))
+
+
+def _read_header(f) -> tuple[dict, int]:
+    if f.read(4) != MAGIC:
+        raise ValueError("not a CZ container")
+    (hlen,) = struct.unpack("<Q", f.read(8))
+    header = json.loads(f.read(hlen))
+    return header, 12 + hlen
+
+
+def read_field(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        header, off = _read_header(f)
+        chunks = [f.read(sz) for sz in header["chunk_sizes"]]
+    for c, crc in zip(chunks, header["chunk_crc32"]):
+        if (zlib.crc32(c) & 0xFFFFFFFF) != crc:
+            raise IOError("chunk CRC mismatch — corrupt container")
+    comp = CompressedField(chunks, header)
+    from .codec import decompress_field
+
+    return decompress_field(comp)
+
+
+class FieldReader:
+    """Random block access with an LRU chunk cache (paper's decompressor)."""
+
+    def __init__(self, path: str, cache_chunks: int = 8):
+        self._f = open(path, "rb")
+        self.header, data_start = _read_header(self._f)
+        self.spec = CompressionSpec.from_json(self.header["spec"])
+        sizes = self.header["chunk_sizes"]
+        self._chunk_off = np.concatenate([[0], np.cumsum(sizes)])[:-1] + data_start
+        self._chunk_nblk = self.header["chunk_nblocks"]
+        self._blk0 = np.concatenate([[0], np.cumsum(self._chunk_nblk)])
+        self.shape = tuple(self.header["field_shape"])
+        self.nb = blk.num_blocks(self.shape, self.spec.block_size)
+        self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
+        self._cache_chunks = cache_chunks
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    def close(self):
+        self._f.close()
+
+    def _chunk(self, ci: int) -> np.ndarray:
+        if ci in self._cache:
+            self._cache.move_to_end(ci)
+            self.cache_hits += 1
+            return self._cache[ci]
+        self.cache_misses += 1
+        self._f.seek(self._chunk_off[ci])
+        buf = self._f.read(self.header["chunk_sizes"][ci])
+        out = _deserialize_chunk(buf, self._chunk_nblk[ci], self.spec)
+        self._cache[ci] = out
+        while len(self._cache) > self._cache_chunks:
+            self._cache.popitem(last=False)
+        return out
+
+    def read_block(self, bx: int, by: int, bz: int) -> np.ndarray:
+        """Decompress and return one (bs, bs, bs) block."""
+        _, by_n, bz_n = self.nb
+        flat = (bx * by_n + by) * bz_n + bz
+        ci = int(np.searchsorted(self._blk0, flat, side="right")) - 1
+        return self._chunk(ci)[flat - self._blk0[ci]]
+
+    def read_all(self) -> np.ndarray:
+        blocks = np.concatenate([self._chunk(i) for i in range(len(self._chunk_nblk))])
+        return np.asarray(blk.unblockify(blocks, self.shape))

@@ -1,0 +1,62 @@
+"""``fpzipx`` — FPZIP-style predictive float compression (lossless / precision).
+
+FPZIP (Lindstrom & Isenburg 2006) maps floats to a monotone integer code,
+predicts with the Lorenzo predictor and range-codes the residuals.  Our TPU
+adaptation keeps the exact integer pipeline:
+
+1. total-order map of fp32 bit patterns onto uint32 (monotone in the float
+   ordering, including negatives);
+2. optional precision truncation — keep ``precision`` most significant bits
+   (FPZIP's lossy "bits of precision" knob; 32 = bit-exact lossless);
+3. wrapping uint32 3D Lorenzo difference (block-local);
+4. host stage 2: byte shuffle + ZLIB (replaces the serial range coder).
+
+Decode inverts each step; the lossless path is bit-exact (tested).
+Used by the checkpoint subsystem for restart snapshots (the paper reports
+2.6-4.3x lossless FPZIP ratios for restart files).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .szx import lorenzo_fwd, lorenzo_inv
+
+__all__ = ["encode", "decode", "float_to_ordered", "ordered_to_float"]
+
+
+def float_to_ordered(x):
+    """Monotone map fp32 -> uint32 (sign-aware total order)."""
+    i = jnp.asarray(x, jnp.float32).view(jnp.int32)
+    u = i.view(jnp.uint32)
+    return jnp.where(i >= 0, u ^ jnp.uint32(0x80000000), ~u)
+
+
+def ordered_to_float(u):
+    i = jnp.where(
+        u >= jnp.uint32(0x80000000), u ^ jnp.uint32(0x80000000), ~u
+    ).view(jnp.int32)
+    return i.view(jnp.float32)
+
+
+def _truncate(u, precision: int):
+    if precision >= 32:
+        return u
+    drop = 32 - precision
+    return (u >> drop) << drop
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def encode(blocks, precision: int = 32):
+    """blocks (B, n, n, n) f32 -> uint32 Lorenzo deltas (wrapping)."""
+    u = float_to_ordered(blocks)
+    u = _truncate(u, precision)
+    return lorenzo_fwd(u.view(jnp.int32)).view(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode(deltas):
+    u = lorenzo_inv(deltas.view(jnp.int32)).view(jnp.uint32)
+    return ordered_to_float(u)

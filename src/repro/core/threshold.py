@@ -1,0 +1,71 @@
+"""Threshold decimation of wavelet detail coefficients (substage 1 output).
+
+The paper guarantees decimation error <= eps by zeroing detail coefficients
+with magnitude below the tolerance.  The approximation corner (coarsest
+level) is never thresholded.  ``topk_details`` is the fixed-shape variant
+used for TPU-friendly in-situ paths (gradient compression), where a static
+output size is required instead of a data-dependent significant count.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import wavelets as wv
+
+__all__ = ["threshold_details", "significant_mask", "topk_details"]
+
+
+def _detail_mask_for(x, levels):
+    n = x.shape[-1]
+    return jnp.asarray(wv.detail_mask(n, levels))
+
+
+def threshold_details(coeffs, eps: float, levels: int | None = None):
+    """Zero detail coefficients with |c| < eps; keep the approximation corner."""
+    dm = _detail_mask_for(coeffs, levels)
+    keep = (~dm) | (jnp.abs(coeffs) >= eps)
+    return jnp.where(keep, coeffs, jnp.zeros((), coeffs.dtype))
+
+
+def significant_mask(coeffs, eps: float, levels: int | None = None):
+    """Boolean mask of coefficients that survive decimation (details only)."""
+    dm = _detail_mask_for(coeffs, levels)
+    return dm & (jnp.abs(coeffs) >= eps)
+
+
+def topk_details(coeffs, k: int, levels: int | None = None):
+    """Keep the k largest-|.| detail coefficients per block (fixed shapes).
+
+    coeffs: (..., n, n, n).  Returns (values (..., k), flat_indices (..., k),
+    coarse (..., c, c, c)) — a static-size encoding suitable for use inside
+    jit (e.g. error-feedback gradient compression over the pod axis).
+    """
+    n = coeffs.shape[-1]
+    c = wv.coarse_side(n, levels)
+    dm = jnp.asarray(wv.detail_mask(n, levels)).reshape(-1)
+    flat = coeffs.reshape(*coeffs.shape[:-3], n * n * n)
+    mag = jnp.where(dm, jnp.abs(flat), -jnp.inf)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(flat, idx, axis=-1)
+    coarse = coeffs[..., :c, :c, :c]
+    return vals, idx.astype(jnp.int32), coarse
+
+
+def scatter_topk(vals, idx, coarse, n: int):
+    """Inverse of :func:`topk_details`: rebuild a dense coefficient cube."""
+
+    def one(v, i, co):
+        flat = jnp.zeros((n * n * n,), v.dtype).at[i].set(v)
+        cube = flat.reshape(n, n, n)
+        c = co.shape[-1]
+        return cube.at[:c, :c, :c].set(co)
+
+    batch = vals.shape[:-1]
+    if not batch:
+        return one(vals, idx, coarse)
+    f = one
+    for _ in batch:
+        f = jax.vmap(f)
+    return f(vals, idx, coarse)

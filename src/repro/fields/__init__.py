@@ -1,0 +1,3 @@
+"""Scientific-field substrate: cavitation QoI generator + mini Euler solver."""
+from .cavitation import PAPER_TIMES, QOIS, CloudConfig, cavitation_fields  # noqa: F401
+from .euler3d import EulerConfig, init_bubble_cloud, primitives, run, step  # noqa: F401

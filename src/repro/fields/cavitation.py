@@ -1,0 +1,135 @@
+"""Synthetic cloud-cavitation QoI fields (p, rho, E, alpha2).
+
+Parametric stand-in for the Cubism-MPCF datasets the paper compresses: a
+cloud of bubbles with lognormal radii uniformly placed in a sphere inside a
+cubic domain, evolved through collapse (bubbles shrink, pressure shocks are
+emitted around t_c ~ 7 us) and rebound.  Field statistics are calibrated to
+the paper's Table 1 (p in [49, ~1e4], rho in [16, 1000], E in [1.2e2, ~1e5],
+alpha2 in [0, 1]) and the fields reproduce the paper's compression phenomena:
+smooth away from interfaces, sharp discontinuities at bubble walls and shock
+fronts, CR rising while bubbles shrink and dropping when shocks propagate.
+
+All fields are band-limited (low-pass filtered background perturbations), so
+fine-scale wavelet details behave like real finite-volume output rather than
+white noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["CloudConfig", "cavitation_fields", "QOIS", "PAPER_TIMES"]
+
+QOIS = ("p", "rho", "E", "a2")
+# Paper snapshots: 5k steps (pre-collapse) and 10k steps (post-collapse peak).
+PAPER_TIMES = {"5k": 4.7, "10k": 9.4}
+_T_COLLAPSE = 7.0  # us, paper: "peak of the collapse happens around t = 7 us"
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudConfig:
+    n: int = 128                # grid points per side
+    n_bubbles: int = 70         # paper: 70-bubble cloud for 512^3
+    cloud_radius: float = 0.35  # fraction of domain side
+    r_mean: float = 0.035       # lognormal mean bubble radius (domain units)
+    r_sigma: float = 0.35       # lognormal sigma
+    seed: int = 1234
+    gamma: float = 1.4
+    p_ambient: float = 100.0
+    p_min: float = 49.0
+    rho_liquid: float = 1000.0
+    rho_gas: float = 16.0
+    sound_speed: float = 0.12   # domain units / us
+    shock_amp: float = 1500.0
+
+
+def _lowpass_noise(n: int, rng: np.random.Generator, cutoff: float = 0.08) -> np.ndarray:
+    """Band-limited unit-variance noise via spectral truncation."""
+    white = rng.standard_normal((n, n, n)).astype(np.float32)
+    F = np.fft.rfftn(white)
+    kx = np.fft.fftfreq(n)[:, None, None]
+    ky = np.fft.fftfreq(n)[None, :, None]
+    kz = np.fft.rfftfreq(n)[None, None, :]
+    k = np.sqrt(kx**2 + ky**2 + kz**2)
+    F *= np.exp(-((k / cutoff) ** 2))
+    out = np.fft.irfftn(F, s=(n, n, n)).astype(np.float32)
+    return out / (out.std() + 1e-12)
+
+
+def _bubbles(cfg: CloudConfig) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(cfg.seed)
+    # uniform in a sphere
+    u = rng.standard_normal((cfg.n_bubbles, 3))
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    rad = cfg.cloud_radius * rng.uniform(0, 1, cfg.n_bubbles) ** (1 / 3)
+    centers = 0.5 + u * rad[:, None]
+    radii = rng.lognormal(np.log(cfg.r_mean), cfg.r_sigma, cfg.n_bubbles)
+    return centers.astype(np.float32), radii.astype(np.float32)
+
+
+def _radius_at(r0: np.ndarray, dist_c: np.ndarray, t: float) -> tuple[np.ndarray, np.ndarray]:
+    """Rayleigh-like collapse + rebound; outer bubbles collapse first.
+
+    Returns (R(t), t_collapse per bubble)."""
+    tc = _T_COLLAPSE * (0.75 + 0.5 * (1.0 - dist_c))  # outer (dist_c~1) earlier
+    x = np.clip(1.0 - (t / tc) ** 2, 0.0, None) ** (1.0 / 3.0)
+    rebound = 0.35 * np.clip((t - tc) / (0.45 * tc), 0.0, 1.0) ** 0.5
+    R = r0 * np.maximum(x, rebound)
+    return np.maximum(R, 0.02 * r0), tc
+
+
+def cavitation_fields(cfg: CloudConfig = CloudConfig(), t: float = 4.7) -> dict[str, np.ndarray]:
+    """QoI snapshot at time ``t`` (microseconds). Returns float32 (n,n,n) fields."""
+    n = cfg.n
+    rng = np.random.default_rng(cfg.seed + int(t * 1000))
+    centers, radii = _bubbles(cfg)
+    dist_c = np.linalg.norm(centers - 0.5, axis=1) / cfg.cloud_radius
+    R, tc = _radius_at(radii, np.clip(dist_c, 0, 1), t)
+
+    ax = (np.arange(n, dtype=np.float32) + 0.5) / n
+    X = ax[:, None, None]
+    Y = ax[None, :, None]
+    Z = ax[None, None, :]
+    iw = 1.5 / n  # interface width
+
+    a2 = np.zeros((n, n, n), np.float32)
+    p_gas = np.zeros((n, n, n), np.float32)
+    shock = np.zeros((n, n, n), np.float32)
+    cs_t = cfg.sound_speed
+
+    for c, r0, r, tci in zip(centers, radii, R, tc):
+        d = np.sqrt((X - c[0]) ** 2 + (Y - c[1]) ** 2 + (Z - c[2]) ** 2)
+        chi = 0.5 * (1.0 - np.tanh((d - r) / iw))          # 1 inside bubble
+        a2 = a2 + chi - a2 * chi                            # fuzzy union
+        # adiabatic gas pressure rises as the bubble shrinks
+        pg = (cfg.p_min * 0.5) * (r0 / r) ** (3 * (cfg.gamma - 1) * 0.35)
+        p_gas += chi * pg
+        # outward shock annulus after this bubble's collapse; the front fades
+        # as it propagates and leaves a smooth elevated-pressure wake behind
+        if t > tci:
+            front = (t - tci) * cs_t
+            strength = cfg.shock_amp * (r0 / cfg.r_mean) ** 1.5
+            fade = np.exp(-(((t - tci) / 1.0) ** 2))
+            amp = strength * fade / (1.0 + 12.0 * front)
+            if amp > 1e-3:
+                shock += amp * np.exp(-(((d - front) / (2.5 * iw)) ** 2)).astype(np.float32)
+            wake = 0.04 * strength / (1.0 + 30.0 * (t - tci) ** 2)
+            if wake > 1e-4:
+                shock += wake * np.exp(-((d / (front + 0.08)) ** 2)).astype(np.float32)
+
+    a2 = np.clip(a2, 0.0, 1.0)
+    bg = _lowpass_noise(n, rng)
+    p = cfg.p_ambient * (1.0 + 2e-5 * bg) - (cfg.p_ambient - cfg.p_min) * a2 + p_gas * a2 + shock
+    p = np.maximum(p, cfg.p_min).astype(np.float32)
+
+    rho = cfg.rho_liquid * (1.0 + 2e-5 * bg) * (1.0 - a2) + cfg.rho_gas * a2 * (
+        1.0 + 0.5 * np.clip(shock / cfg.shock_amp, 0, 1)
+    )
+    rho = rho.astype(np.float32)
+
+    # stiffened-gas-flavoured total energy + kinetic contribution near shocks
+    kin = 0.5 * rho * (0.02 * cfg.sound_speed * shock / (cfg.p_ambient)) ** 2
+    E = (p / (cfg.gamma - 1.0) + 0.12 * rho + kin).astype(np.float32)
+
+    return {"p": p, "rho": rho, "E": E, "a2": a2.astype(np.float32)}

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compression hot spots (+ ops wrappers, refs)."""
+from .ops import (  # noqa: F401
+    lorenzo_decode,
+    lorenzo_encode,
+    wavelet_forward,
+    wavelet_inverse,
+    zfpx_decode,
+    zfpx_encode,
+)

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret=None`` auto-selects: real Pallas lowering on TPU, interpret mode
+elsewhere (this container is CPU-only; interpret mode executes the kernel
+body faithfully for correctness validation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .lorenzo import lorenzo_decode_pallas, lorenzo_encode_pallas
+from .wavelet3d import wavelet3d_forward, wavelet3d_inverse
+from .zfp_transform import zfpx_decode_pallas, zfpx_encode_pallas
+
+__all__ = [
+    "wavelet_forward",
+    "wavelet_inverse",
+    "zfpx_encode",
+    "zfpx_decode",
+    "lorenzo_encode",
+    "lorenzo_decode",
+]
+
+
+def _interp(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "levels", "interpret"))
+def wavelet_forward(blocks, kind: str = "w3ai", levels: int | None = None,
+                    interpret: bool | None = None):
+    return wavelet3d_forward(blocks, kind, levels, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "levels", "interpret"))
+def wavelet_inverse(blocks, kind: str = "w3ai", levels: int | None = None,
+                    interpret: bool | None = None):
+    return wavelet3d_inverse(blocks, kind, levels, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def zfpx_encode(blocks, eps: float = 1e-3, interpret: bool | None = None):
+    return zfpx_encode_pallas(blocks, eps, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "n", "interpret"))
+def zfpx_decode(emax, q, eps: float = 1e-3, n: int = 32,
+                interpret: bool | None = None):
+    return zfpx_decode_pallas(emax, q, eps, n, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def lorenzo_encode(blocks, eps: float = 1e-3, interpret: bool | None = None):
+    return lorenzo_encode_pallas(blocks, eps, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def lorenzo_decode(residuals, eps: float = 1e-3, interpret: bool | None = None):
+    return lorenzo_decode_pallas(residuals, eps, interpret=_interp(interpret))

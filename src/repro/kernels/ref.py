@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import szx, wavelets, zfpx
+
+__all__ = [
+    "wavelet3d_forward_ref",
+    "wavelet3d_inverse_ref",
+    "zfpx_encode_ref",
+    "zfpx_decode_ref",
+    "lorenzo_encode_ref",
+    "lorenzo_decode_ref",
+]
+
+
+def wavelet3d_forward_ref(blocks, kind="w3ai", levels=None):
+    return wavelets.forward3d(jnp.asarray(blocks, jnp.float32), kind, levels)
+
+
+def wavelet3d_inverse_ref(blocks, kind="w3ai", levels=None):
+    return wavelets.inverse3d(jnp.asarray(blocks, jnp.float32), kind, levels)
+
+
+def zfpx_encode_ref(blocks, eps=1e-3):
+    return zfpx.encode(jnp.asarray(blocks, jnp.float32), eps=eps)
+
+
+def zfpx_decode_ref(emax, q, eps=1e-3, n=32):
+    return zfpx.decode(emax, q, eps=eps, n=n)
+
+
+def lorenzo_encode_ref(blocks, eps=1e-3):
+    return szx.encode(jnp.asarray(blocks, jnp.float32), eps=eps)
+
+
+def lorenzo_decode_ref(residuals, eps=1e-3):
+    return szx.decode(jnp.asarray(residuals, jnp.int32), eps=eps)

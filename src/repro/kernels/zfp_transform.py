@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: zfpx encode stage (block-float + int lifting + reorder).
+
+Fuses the zfpx substage-1 pipeline for a VMEM-resident tile of blocks:
+exponent extraction, fixed-point conversion, the ZFP integer lifting
+transform along three axes, total-sequency reorder, and the eps-derived
+bit-plane truncation.  Everything is elementwise / static-slice int32 work —
+pure VPU, no divergent control flow (zero cells are handled by masking).
+
+The decode kernel inverts: un-truncate (shift back), inverse reorder,
+inverse lifting, dequantize.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import zfpx as _z
+
+__all__ = ["zfpx_encode_pallas", "zfpx_decode_pallas"]
+
+DEFAULT_TILE_BLOCKS = 4
+
+
+def _encode_kernel(x_ref, perm_ref, emax_ref, q_ref, *, eps: float):
+    x = x_ref[...]                                   # (tb, n, n, n) f32
+    perm = perm_ref[...]
+    cells = _z._to_cells(x)                          # (tb, nc, 4,4,4)
+    amax = jnp.max(jnp.abs(cells), axis=(-3, -2, -1))
+    _, e = jnp.frexp(amax)
+    emax = jnp.where(amax > 0, e, _z._ZERO_EMAX).astype(jnp.int32)
+    scale = jnp.exp2((_z.SCALE_BITS - emax).astype(jnp.float32))
+    q = jnp.round(cells * scale[..., None, None, None]).astype(jnp.int32)
+    q = _z.fwd_lift_cell(q)
+    q = jnp.take(q.reshape(*q.shape[:-3], 64), perm, axis=-1)
+    p = _z._drop_bits(emax, eps)[..., None]
+    q = jnp.where(emax[..., None] == _z._ZERO_EMAX, 0, (q >> p) << p)
+    emax_ref[...] = emax
+    q_ref[...] = q
+
+
+def _decode_kernel(emax_ref, q_ref, invperm_ref, o_ref, *, eps: float, n: int):
+    emax, q = emax_ref[...], q_ref[...]
+    inv = invperm_ref[...]
+    cells = jnp.take(q, inv, axis=-1).reshape(*q.shape[:-1], 4, 4, 4)
+    cells = _z.inv_lift_cell(cells)
+    scale = jnp.exp2((emax - _z.SCALE_BITS).astype(jnp.float32))
+    out = cells.astype(jnp.float32) * scale[..., None, None, None]
+    out = jnp.where((emax == _z._ZERO_EMAX)[..., None, None, None], 0.0, out)
+    o_ref[...] = _z._from_cells(out, n)
+
+
+def zfpx_encode_pallas(blocks, eps: float = 1e-3,
+                       tile_blocks: int = DEFAULT_TILE_BLOCKS, interpret: bool = True):
+    b, n = blocks.shape[0], blocks.shape[-1]
+    nc = (n // 4) ** 3
+    tb = min(tile_blocks, b)
+    if b % tb:
+        tb = 1
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, eps=eps),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n, n, n), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((64,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tb, nc, 64), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc), jnp.int32),
+            jax.ShapeDtypeStruct((b, nc, 64), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(blocks, jnp.float32), jnp.asarray(_z.sequency_perm()))
+
+
+def zfpx_decode_pallas(emax, q, eps: float = 1e-3, n: int = 32,
+                       tile_blocks: int = DEFAULT_TILE_BLOCKS, interpret: bool = True):
+    b, nc = emax.shape
+    tb = min(tile_blocks, b)
+    if b % tb:
+        tb = 1
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, eps=eps, n=n),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tb, nc, 64), lambda i: (i, 0, 0)),
+            pl.BlockSpec((64,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, n, n, n), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n, n), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(emax, jnp.int32), jnp.asarray(q, jnp.int32),
+      jnp.asarray(np.argsort(_z.sequency_perm()).astype(np.int32)))

@@ -1,0 +1,90 @@
+"""Ex-situ compression tool (the paper's standalone CubismZ CLI).
+
+Compresses 3D fields — from the cavitation generator, the Euler solver, or
+a raw .npy file — into CZ containers, reports CR/PSNR per quantity, and can
+decompress/verify.
+
+Examples:
+  python -m repro.launch.compress --source cavitation --t 9.4 --n 128 \
+      --scheme wavelet --wavelet w3ai --eps 1e-3 --out /tmp/fields
+  python -m repro.launch.compress --decompress /tmp/fields/p.cz --verify-against /tmp/p.npy
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import CompressionSpec, compression_ratio, psnr
+from repro.core import container
+from repro.fields import CloudConfig, cavitation_fields
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--source", default="cavitation",
+                    choices=["cavitation", "npy"])
+    ap.add_argument("--npy", default="", help="input .npy for --source npy")
+    ap.add_argument("--t", type=float, default=9.4, help="snapshot time (us)")
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--qoi", default="p,rho,E,a2")
+    ap.add_argument("--scheme", default="wavelet")
+    ap.add_argument("--wavelet", default="w3ai")
+    ap.add_argument("--eps", type=float, default=1e-3)
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--shuffle", default="byte")
+    ap.add_argument("--zero-bits", type=int, default=0)
+    ap.add_argument("--stage2", default="zlib")
+    ap.add_argument("--precision", type=int, default=32)
+    ap.add_argument("--out", default="artifacts/fields")
+    ap.add_argument("--decompress", default="")
+    ap.add_argument("--verify-against", default="")
+    args = ap.parse_args(argv)
+
+    if args.decompress:
+        t0 = time.time()
+        field = container.read_field(args.decompress)
+        print(f"decompressed {field.shape} in {time.time()-t0:.2f}s")
+        if args.verify_against:
+            ref = np.load(args.verify_against)
+            print(f"PSNR vs reference: {psnr(ref, field):.2f} dB "
+                  f"maxerr {np.max(np.abs(ref-field)):.3e}")
+        return
+
+    spec = CompressionSpec(
+        scheme=args.scheme, wavelet=args.wavelet, eps=args.eps,
+        block_size=args.block_size, shuffle=args.shuffle,
+        zero_bits=args.zero_bits, stage2=args.stage2, precision=args.precision)
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.source == "npy":
+        fields = {"field": np.load(args.npy).astype(np.float32)}
+    else:
+        fields = cavitation_fields(CloudConfig(n=args.n), args.t)
+        fields = {k: v for k, v in fields.items() if k in args.qoi.split(",")}
+
+    report = {}
+    for name, f in fields.items():
+        t0 = time.time()
+        path = os.path.join(args.out, f"{name}.cz")
+        nbytes = container.write_field(path, f, spec)
+        dt = time.time() - t0
+        dec = container.read_field(path)
+        report[name] = {
+            "cr": compression_ratio(f.nbytes, nbytes),
+            "psnr_db": psnr(f, dec),
+            "comp_MBps": f.nbytes / 2**20 / dt,
+            "bytes": nbytes,
+        }
+        print(f"{name:5s} CR={report[name]['cr']:8.2f} "
+              f"PSNR={report[name]['psnr_db']:7.2f} dB "
+              f"{report[name]['comp_MBps']:6.1f} MB/s -> {path}")
+    with open(os.path.join(args.out, "report.json"), "w") as f:
+        json.dump({"spec": spec.to_json(), "fields": report}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init): this container has one physical CPU device; the dry run needs
+512 placeholder devices so jax.make_mesh can build the production meshes.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--skip-existing] [--mesh both]
+    python -m repro.launch.dryrun --all --attn-impl triangular --tag tri
+
+Each cell writes artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json with
+memory_analysis, cost_analysis and the per-collective byte totals parsed
+from the post-SPMD compiled HLO — the inputs to benchmarks/roofline.py.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_applicable
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.costs import detailed_flops, model_flops
+from repro.models import ModelSettings, count_params, input_batch_specs, param_specs
+from repro.serve.step import build_decode_step, build_prefill_step
+from repro.train.sharding import batch_shardings, param_shardings
+from repro.train.step import build_train_step, train_state_specs
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\S+)\s+(" + "|".join(_COLL_OPS) + r")\(")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device output bytes of every collective op in compiled HLO."""
+    out = {op: {"bytes": 0, "count": 0} for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(type_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op]["bytes"] += nbytes
+        out[op]["count"] += 1
+    return out
+
+
+def _settings(args) -> ModelSettings:
+    return ModelSettings(attn_impl=args.attn_impl, q_chunk=args.q_chunk,
+                         kv_chunk=args.kv_chunk, remat=args.remat,
+                         act_shard=args.act_shard, rwkv_chunk=args.rwkv_chunk,
+                         attn_shard=args.attn_shard)
+
+
+def lower_cell(arch_name: str, shape_name: str, mesh_kind: str, args):
+    cfg = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+                "applicable": False, "skip_reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    st = _settings(args)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        batch_specs = input_batch_specs(cfg, shape)
+        micro = args.micro if args.micro else (4 if cfg.d_model >= 4096 else 1)
+        import jax.numpy as _jnp
+
+        pdt = {"f32": None, "bf16": _jnp.bfloat16}[args.param_dtype]
+        gc = args.grad_compress or None
+        state_specs = train_state_specs(cfg, param_dtype=pdt, grad_compress=gc)
+        _, jit_for, _ = build_train_step(cfg, mesh, settings=st, donate=False,
+                                         micro_batches=micro,
+                                         sharding_mode=args.sharding,
+                                         param_dtype=pdt, grad_compress=gc)
+        jitted = jit_for(batch_specs)
+        with mesh:
+            lowered = jitted.lower(state_specs, batch_specs)
+    elif shape.kind == "prefill":
+        pspecs = param_specs(cfg)
+        batch_specs = input_batch_specs(cfg, shape)
+        _, jit_for = build_prefill_step(cfg, mesh, settings=st)
+        jitted, nargs = jit_for(pspecs, batch_specs)
+        with mesh:
+            if nargs == 3:
+                lowered = jitted.lower(pspecs, batch_specs["tokens"],
+                                       batch_specs["frames"])
+            else:
+                lowered = jitted.lower(pspecs, batch_specs["tokens"])
+    else:  # decode
+        pspecs = param_specs(cfg)
+        dspecs = input_batch_specs(cfg, shape)
+        _, jit_for = build_decode_step(cfg, mesh, settings=st, donate_cache=True)
+        jitted = jit_for(pspecs, dspecs["cache"], dspecs["token"])
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh:
+            lowered = jitted.lower(pspecs, dspecs["cache"], dspecs["token"], pos)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = parse_collectives(hlo_text)
+    la = analyze_hlo(hlo_text)  # loop-aware (cost_analysis counts scan bodies once)
+    af = detailed_flops(cfg, shape, attn_impl=st.attn_impl, remat=st.remat)
+
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": shape.kind,
+        "applicable": True,
+        "n_devices": int(mesh.devices.size),
+        "attn_impl": st.attn_impl,
+        "remat": st.remat,
+        "act_shard": st.act_shard,
+        "sharding_mode": args.sharding,
+        "param_dtype": args.param_dtype,
+        "grad_compress": args.grad_compress or None,
+        "micro_batches": (args.micro if args.micro else (4 if cfg.d_model >= 4096 else 1)) if shape.kind == "train" else 1,
+        "time_lower_s": round(t_lower, 2),
+        "time_compile_s": round(t_compile, 2),
+        "flops_per_device": ca.get("flops"),
+        "bytes_accessed_per_device": ca.get("bytes accessed"),
+        "transcendentals": ca.get("transcendentals"),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "collectives": coll,
+        "collective_bytes_per_device": sum(v["bytes"] for v in coll.values()),
+        "loop_aware": {
+            "flops_per_device": la.flops,
+            "hbm_bytes_per_device": la.hbm_bytes,
+            "hbm_bytes_fused_per_device": la.hbm_bytes_fused,
+            "attn_score_bytes_per_device": la.attn_score_bytes,
+            "collectives": la.collectives,
+            "collective_bytes_per_device": la.collective_bytes,
+            "unknown_trip_whiles": la.unknown_trip_whiles,
+        },
+        "analytic": af,
+        "model_flops": model_flops(cfg, shape),
+        "params_total": count_params(cfg),
+        "params_active": count_params(cfg, active_only=True),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+    # prove-it-fits line (assignment requirement)
+    print(f"  memory_analysis: arg={ma.argument_size_in_bytes/2**30:.3f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.3f}GiB "
+          f"out={ma.output_size_in_bytes/2**30:.3f}GiB per device")
+    print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+          f"bytes={ca.get('bytes accessed', 0):.3e} per device")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--attn-impl", default="masked",
+                    choices=["masked", "triangular"])
+    ap.add_argument("--q-chunk", type=int, default=256)
+    ap.add_argument("--kv-chunk", type=int, default=512)
+    ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    ap.add_argument("--micro", type=int, default=0,
+                    help="microbatch count for train cells (0 = per-arch default)")
+    ap.add_argument("--act-shard", default="seq", choices=["none", "seq", "hidden"])
+    ap.add_argument("--rwkv-chunk", type=int, default=0)
+    ap.add_argument("--sharding", default="fsdp", choices=["fsdp", "tp"])
+    ap.add_argument("--param-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--attn-shard", default="auto",
+                    choices=["auto", "replicate", "heads", "cp"])
+    ap.add_argument("--grad-compress", default="",
+                    help="e.g. topk32 — cross-pod EF-compressed reduction (multi mesh)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"__{args.tag}" if args.tag else ""
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh_kind}{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {path}")
+                    continue
+                print(f"[cell] {arch} x {shape} x {mesh_kind}")
+                try:
+                    res = lower_cell(arch, shape, mesh_kind, args)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "applicable": True, "error": f"{type(e).__name__}: {e}"}
+                    failures.append((arch, shape, mesh_kind, str(e)))
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_)
+        raise SystemExit(1)
+    print("\nall requested cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Loop-aware analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop *body once*, so any
+scanned program (layer stacks, flash-attention chunk loops, microbatching,
+SSM time scans) is undercounted by its trip counts — we measured a 64-layer
+model reporting ~1/40 of its true FLOPs.  This module parses the HLO text,
+extracts while trip counts from their condition computations, and folds the
+multipliers through the call graph, yielding loop-aware:
+
+* ``flops``        — 2 * |result| * |contracted dims| summed over every dot
+                     (including dots nested in fusions);
+* ``hbm_bytes``    — per materializing instruction: result bytes (write) +
+                     operand bytes (reads).  Fusion internals are *not*
+                     counted (they never hit HBM) — the fusion op's own
+                     operands/results model the traffic;
+* ``collectives``  — per collective op: output bytes and instruction count.
+
+Everything is per-device (the HLO is the per-partition SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[\d,]*\]\S*)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+# ops that still hit HBM on TPU even under aggressive fusion
+_MOVEMENT_OPS = {"gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+                 "sort", "convolution", "reduce-window", "scatter-add"}
+
+_NO_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list = field(default_factory=list)   # (name, type_str, opcode, rest)
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0          # unfused upper bound (every instruction)
+    hbm_bytes_fused: float = 0.0    # TPU-fusion floor: dots + data movement
+    attn_score_bytes: float = 0.0   # fused-model bytes on (B,H,G,qc,kc) score
+                                    # blocks — eliminated by a Pallas flash
+                                    # kernel that keeps blocks in VMEM
+    transcendentals: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+    @property
+    def collective_bytes(self) -> int:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _parse(text: str) -> tuple[dict[str, _Comp], str, dict[str, str]]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    shapes: dict[str, str] = {}
+    cur = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = _Comp(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, type_str, opcode = mi.group(1), mi.group(2), mi.group(3)
+            rest = line[mi.end():]
+            cur.instrs.append((name, type_str, opcode, rest))
+            shapes[name] = type_str
+    return comps, entry, shapes
+
+
+def _trip_count(cond: _Comp) -> int | None:
+    best = None
+    for name, type_str, opcode, rest in cond.instrs:
+        if opcode == "constant" and type_str.startswith("s32[]"):
+            m = re.search(r"constant\((\-?\d+)\)", "constant(" + rest)
+            if m:
+                k = int(m.group(1))
+                best = k if best is None else max(best, k)
+    return best
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, entry, shapes = _parse(text)
+    stats_cache: dict[str, HloStats] = {}
+    flops_cache: dict[str, float] = {}
+
+    def dot_stats(comp: _Comp) -> tuple[float, float]:
+        """(dot MACs*2, fused-model HBM bytes), recursing into fusions."""
+        if comp.name in flops_cache:
+            return flops_cache[comp.name]
+        total = 0.0
+        fused_bytes = 0.0
+        score_bytes = 0.0
+        for name, type_str, opcode, rest in comp.instrs:
+            if opcode == "dot":
+                out_elems = 1
+                for d in _shape_dims(type_str):
+                    out_elems *= d
+                lhs = _OPERAND_RE.search(rest)  # first operand = lhs
+                k = 1
+                mcd = _LHS_CONTRACT_RE.search(rest)
+                if lhs and mcd and lhs.group(1) in shapes:
+                    ldims = _shape_dims(shapes[lhs.group(1)])
+                    for ci in mcd.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            k *= ldims[int(ci)]
+                total += 2.0 * out_elems * k
+                fused_bytes += _shape_bytes(type_str)
+                is_attn = "bhgqk" in rest        # score-space einsum metadata
+                if is_attn:
+                    score_bytes += _shape_bytes(type_str) if "->bhgqk" in rest else 0
+                for opname in _OPERAND_RE.findall(rest):
+                    if opname in shapes:
+                        fused_bytes += _shape_bytes(shapes[opname])
+                        if is_attn and "bhgqk," in rest and opname in shapes:
+                            pass
+                    else:
+                        break
+                if "bhgqk," in rest:             # score operand read back
+                    op0 = _OPERAND_RE.search(rest)
+                    if op0 and op0.group(1) in shapes:
+                        score_bytes += _shape_bytes(shapes[op0.group(1)])
+            elif opcode in _MOVEMENT_OPS:
+                # window ops touch only the window, not the full buffer:
+                #   dynamic-slice / gather: read+write |result|
+                #   dynamic-update-slice:   read+write |update| (operand 1)
+                #   scatter:                read+write |updates| (operand 2)
+                if opcode in ("dynamic-slice", "gather"):
+                    fused_bytes += 2 * _shape_bytes(type_str)
+                elif opcode == "dynamic-update-slice":
+                    ops_ = _OPERAND_RE.findall(rest)
+                    upd = ops_[1] if len(ops_) > 1 else None
+                    fused_bytes += 2 * _shape_bytes(shapes.get(upd, type_str))                         if upd in shapes else 2 * _shape_bytes(type_str)
+                elif opcode == "scatter":
+                    ops_ = _OPERAND_RE.findall(rest)
+                    upd = ops_[2] if len(ops_) > 2 else None
+                    fused_bytes += 2 * _shape_bytes(shapes.get(upd, type_str))                         if upd in shapes else 2 * _shape_bytes(type_str)
+                else:
+                    fused_bytes += _shape_bytes(type_str)
+                    for opname in _OPERAND_RE.findall(rest):
+                        if opname in shapes:
+                            fused_bytes += _shape_bytes(shapes[opname])
+                        else:
+                            break
+            elif opcode == "fusion":
+                mf = _CALLS_RE.search(rest)
+                if mf and mf.group(1) in comps:
+                    f2, b2, s2 = dot_stats(comps[mf.group(1)])
+                    total += f2
+                    fused_bytes += b2
+                    score_bytes += s2
+        flops_cache[comp.name] = (total, fused_bytes, score_bytes)
+        return total, fused_bytes, score_bytes
+
+    def analyze(comp_name: str) -> HloStats:
+        if comp_name in stats_cache:
+            return stats_cache[comp_name]
+        comp = comps[comp_name]
+        st = HloStats(collectives={op: {"bytes": 0, "count": 0} for op in _COLL_OPS})
+        st.flops, st.hbm_bytes_fused, st.attn_score_bytes = dot_stats(comp)
+        for name, type_str, opcode, rest in comp.instrs:
+            if opcode in _COLL_OPS or (opcode.endswith("-start") and opcode[:-6] in _COLL_OPS):
+                op = opcode[:-6] if opcode.endswith("-start") else opcode
+                st.collectives[op]["bytes"] += _shape_bytes(type_str)
+                st.collectives[op]["count"] += 1
+            if opcode == "while":
+                mb, mc = _BODY_RE.search(rest), _COND_RE.search(rest)
+                trip = None
+                if mc and mc.group(1) in comps:
+                    trip = _trip_count(comps[mc.group(1)])
+                if trip is None:
+                    trip = 1
+                    st.unknown_trip_whiles += 1
+                if mb and mb.group(1) in comps:
+                    sub = analyze(mb.group(1))
+                    st.flops += trip * sub.flops
+                    st.hbm_bytes += trip * sub.hbm_bytes
+                    st.hbm_bytes_fused += trip * sub.hbm_bytes_fused
+                    st.attn_score_bytes += trip * sub.attn_score_bytes
+                    st.unknown_trip_whiles += sub.unknown_trip_whiles
+                    for op, v in sub.collectives.items():
+                        st.collectives[op]["bytes"] += trip * v["bytes"]
+                        st.collectives[op]["count"] += trip * v["count"]
+                continue
+            if opcode in ("call", "conditional"):
+                for target in _CALLS_RE.findall(rest) + _BODY_RE.findall(rest):
+                    if target in comps:
+                        sub = analyze(target)
+                        st.flops += sub.flops
+                        st.hbm_bytes += sub.hbm_bytes
+                        st.hbm_bytes_fused += sub.hbm_bytes_fused
+                        st.attn_score_bytes += sub.attn_score_bytes
+                        for op, v in sub.collectives.items():
+                            st.collectives[op]["bytes"] += v["bytes"]
+                            st.collectives[op]["count"] += v["count"]
+                continue
+            if opcode in _NO_BYTES_OPS:
+                continue
+            # HBM traffic model: write result + read operands (fusion opaque)
+            wb = _shape_bytes(type_str)
+            rb = 0
+            for opname in _OPERAND_RE.findall(rest):
+                if opname in shapes:
+                    rb += _shape_bytes(shapes[opname])
+                else:
+                    break  # stop at metadata/computation refs
+            st.hbm_bytes += wb + rb
+        stats_cache[comp_name] = st
+        return st
+
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    return analyze(entry)

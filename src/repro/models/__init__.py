@@ -1,0 +1,12 @@
+"""Model stack: attention, MoE, SSM mixers, family composition, registry."""
+from .registry import (  # noqa: F401
+    ModelSettings,
+    cache_spec,
+    count_params,
+    decode_step,
+    init_params,
+    input_batch_specs,
+    lm_loss,
+    param_specs,
+    prefill,
+)

@@ -1,0 +1,377 @@
+"""GQA attention: chunked streaming-softmax (flash-style) with a custom VJP.
+
+Forward: outer loop over query chunks, inner ``lax.scan`` over KV chunks
+carrying the running (max, denom, accum) — never materializes an (S, S)
+score tensor, so 32k prefill fits.  Saves only (q, k, v, out, logsumexp).
+
+Backward: custom VJP recomputes each score block from the saved logsumexp
+(the FlashAttention recipe) — without it, scan-AD stores every per-chunk
+probability block and a 135M model wants ~36 GiB of temps at 4k.
+
+Causal modes:
+* ``impl="masked"``      — every q-chunk scans all kv chunks (baseline;
+                           ~2x causal-attention FLOPs at long S).
+* ``impl="triangular"``  — q-chunk i scans only kv chunks [0..i] (static
+                           Python loop); halves causal compute.  §Perf lever.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import rmsnorm, rope
+
+__all__ = ["attention", "decode_attention", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _divisor_chunk(chunk: int, S: int) -> int:
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def _mask_block(s, qi, ki, qc, kc, q_offset):
+    qpos = q_offset + qi * qc + jnp.arange(qc)
+    kpos = ki * kc + jnp.arange(kc)
+    mask = kpos[None, :] <= qpos[:, None]
+    return jnp.where(mask[None, None, None], s, NEG_INF)
+
+
+def _fwd_qchunk(qblk, kg, vg, qi, nk_hi, *, causal, qc, kc, q_offset, scale):
+    """One q chunk over kv chunks [0..nk_hi). qblk (B,qc,Hkv,G,hd).
+    Returns (out (B,qc,Hkv,G,hd) f32, lse (B,Hkv,G,qc) f32)."""
+    B, _, Hkv, G, hd = qblk.shape
+
+    def step(carry, inp):
+        kblk, vblk, ki = inp
+        m, l, acc = carry
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk).astype(jnp.float32) * scale
+        if causal:
+            s = _mask_block(s, qi, ki, qc, kc, q_offset)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+        return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+    init = (jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, qc), jnp.float32),
+            jnp.zeros((B, Hkv, G, qc, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init,
+        (kg[:, :nk_hi].swapaxes(0, 1), vg[:, :nk_hi].swapaxes(0, 1),
+         jnp.arange(nk_hi)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4), lse  # (B,qc,Hkv,G,hd), (B,Hkv,G,qc)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, q_chunk, kv_chunk, q_offset, impl, shard_axes):
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset,
+                             impl, shard_axes)
+    return out
+
+
+def _cp_constrain(x, shard_axes, n_dim=1):
+    """Shard the q-chunk grid dim over "model" (context parallelism)."""
+    if not shard_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    baxis, maxis = shard_axes
+    spec = [None] * x.ndim
+    spec[0] = baxis
+    spec[n_dim] = maxis
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _cp_mask(s, nq, qc, kc, ki, q_offset):
+    qpos = q_offset + (jnp.arange(nq) * qc)[:, None] + jnp.arange(qc)[None, :]
+    kpos = ki * kc + jnp.arange(kc)
+    mask = kpos[None, None, :] <= qpos[:, :, None]          # (nq, qc, kc)
+    return jnp.where(mask[None, :, None, None, :, :], s, NEG_INF)
+
+
+def _fwd_cp(qg, kg, vg, *, causal, qc, kc, q_offset, scale, shard_axes):
+    """Context-parallel flash: all q chunks vectorized (dim 1, sharded over
+    "model"), single scan over kv chunks.  No head-divisibility requirement,
+    no redundant compute: each device owns S/n_model query rows."""
+    B, nq, _, Hkv, G, hd = qg.shape
+    nk = kg.shape[1]
+    qg = _cp_constrain(qg, shard_axes)
+
+    def step(carry, inp):
+        kblk, vblk, ki = inp
+        m, l, acc = carry
+        s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qg, kblk).astype(jnp.float32) * scale
+        if causal:
+            s = _cp_mask(s, nq, qc, kc, ki, q_offset)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bnhgqk,bkhd->bnhgqd", p.astype(vblk.dtype), vblk)
+        return (m_new, l_new, acc * alpha[..., None] + pv.astype(jnp.float32)), None
+
+    init = (
+        _cp_constrain(jnp.full((B, nq, Hkv, G, qc), NEG_INF, jnp.float32), shard_axes),
+        _cp_constrain(jnp.zeros((B, nq, Hkv, G, qc), jnp.float32), shard_axes),
+        _cp_constrain(jnp.zeros((B, nq, Hkv, G, qc, hd), jnp.float32), shard_axes),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (kg.swapaxes(0, 1), vg.swapaxes(0, 1), jnp.arange(nk)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 1, 4, 2, 3, 5)                    # (B,nq,qc,Hkv,G,hd)
+    return out, lse                                          # lse (B,nq,Hkv,G,qc)
+
+
+def _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset, impl,
+                    shard_axes=None):
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qc = _divisor_chunk(q_chunk, Sq)
+    kc = _divisor_chunk(kv_chunk, Skv)
+    nq, nk = Sq // qc, Skv // kc
+    scale = hd ** -0.5
+    qg = q.reshape(B, nq, qc, Hkv, G, hd)
+    kg = k.reshape(B, nk, kc, Hkv, hd)
+    vg = v.reshape(B, nk, kc, Hkv, hd)
+
+    fwd1 = functools.partial(_fwd_qchunk, causal=causal, qc=qc, kc=kc,
+                             q_offset=q_offset, scale=scale)
+    if impl == "cp":
+        out, lse = _fwd_cp(qg, kg, vg, causal=causal, qc=qc, kc=kc,
+                           q_offset=q_offset, scale=scale,
+                           shard_axes=shard_axes)
+        out = out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+        return out, lse
+    if impl == "triangular" and causal:
+        outs, lses = [], []
+        for qi in range(nq):
+            hi = min(nk, -(-((qi + 1) * qc) // kc))
+            o, lse = fwd1(qg[:, qi], kg, vg, qi, hi)
+            outs.append(o)
+            lses.append(lse)
+        out = jnp.stack(outs, 1)          # (B,nq,qc,Hkv,G,hd)
+        lse = jnp.stack(lses, 1)          # (B,nq,Hkv,G,qc)
+    else:
+        def one(args):
+            qi, qblk = args
+            return fwd1(qblk, kg, vg, qi, nk)
+
+        out, lse = jax.lax.map(one, (jnp.arange(nq), qg.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)
+        lse = lse.swapaxes(0, 1)
+    out = out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+    return out, lse  # lse (B,nq,Hkv,G,qc)
+
+
+def _flash_fwd(q, k, v, causal, q_chunk, kv_chunk, q_offset, impl, shard_axes):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_offset,
+                               impl, shard_axes)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_cp(q, k, v, out, lse, dout, *, causal, qc, kc, q_offset, scale,
+            shard_axes):
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nq, nk = Sq // qc, Skv // kc
+    qg = _cp_constrain(q.reshape(B, nq, qc, Hkv, G, hd), shard_axes)
+    dog = _cp_constrain(dout.reshape(B, nq, qc, Hkv, G, hd), shard_axes)
+    kg = k.reshape(B, nk, kc, Hkv, hd)
+    vg = v.reshape(B, nk, kc, Hkv, hd)
+    Drow = (dout.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+    Drow = Drow.reshape(B, nq, qc, Hkv, G).transpose(0, 1, 3, 4, 2)
+
+    def kv_step(dq_acc, inp):
+        kblk, vblk, ki = inp
+        s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qg, kblk).astype(jnp.float32) * scale
+        if causal:
+            s = _cp_mask(s, nq, qc, kc, ki, q_offset)
+        p = jnp.exp(s - lse[..., None])
+        dv_j = jnp.einsum("bnhgqk,bnqhgd->bkhd", p.astype(dog.dtype), dog)
+        dp = jnp.einsum("bnqhgd,bkhd->bnhgqk", dog, vblk).astype(jnp.float32)
+        ds = p * (dp - Drow[..., None])
+        dq_c = jnp.einsum("bnhgqk,bkhd->bnqhgd", ds.astype(kblk.dtype), kblk)
+        dk_j = jnp.einsum("bnhgqk,bnqhgd->bkhd", ds.astype(qg.dtype), qg)
+        return dq_acc + dq_c.astype(jnp.float32) * scale, (
+            dk_j.astype(jnp.float32) * scale, dv_j.astype(jnp.float32))
+
+    dq0 = _cp_constrain(jnp.zeros((B, nq, qc, Hkv, G, hd), jnp.float32),
+                        shard_axes)
+    dq, (dk_js, dv_js) = jax.lax.scan(
+        kv_step, dq0, (kg.swapaxes(0, 1), vg.swapaxes(0, 1), jnp.arange(nk)))
+    dq = dq.reshape(B, Sq, Hq, hd)
+    dk = dk_js.swapaxes(0, 1).reshape(B, Skv, Hkv, hd)
+    dv = dv_js.swapaxes(0, 1).reshape(B, Skv, Hkv, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _flash_bwd(causal, q_chunk, kv_chunk, q_offset, impl, shard_axes, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qc = _divisor_chunk(q_chunk, Sq)
+    kc = _divisor_chunk(kv_chunk, Skv)
+    nq, nk = Sq // qc, Skv // kc
+    scale = hd ** -0.5
+    if impl == "cp":
+        return _bwd_cp(q, k, v, out, lse, dout, causal=causal, qc=qc, kc=kc,
+                       q_offset=q_offset, scale=scale, shard_axes=shard_axes)
+
+    qg = q.reshape(B, nq, qc, Hkv, G, hd)
+    kg = k.reshape(B, nk, kc, Hkv, hd)
+    vg = v.reshape(B, nk, kc, Hkv, hd)
+    dog = dout.reshape(B, nq, qc, Hkv, G, hd)
+    # D_i = rowsum(dout * out) per query position
+    Drow = (dout.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+    Drow = Drow.reshape(B, nq, qc, Hkv, G).transpose(0, 1, 3, 4, 2)  # (B,nq,Hkv,G,qc)
+
+    def qchunk_bwd(carry, inp):
+        dk_acc, dv_acc = carry
+        qi, qblk, doblk, lse_i, D_i = inp
+        # qblk (B,qc,Hkv,G,hd); doblk same; lse_i/D_i (B,Hkv,G,qc)
+
+        def kv_step(dq_acc, kv_inp):
+            kblk, vblk, ki = kv_inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk).astype(jnp.float32) * scale
+            if causal:
+                s = _mask_block(s, qi, ki, qc, kc, q_offset)
+            p = jnp.exp(s - lse_i[..., None])                      # (B,Hkv,G,qc,kc)
+            dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(doblk.dtype), doblk)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doblk, vblk).astype(jnp.float32)
+            ds = p * (dp - D_i[..., None])
+            dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(kblk.dtype), kblk)
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(qblk.dtype), qblk)
+            return dq_acc + dq_c.astype(jnp.float32) * scale, (
+                dk_j.astype(jnp.float32) * scale, dv_j.astype(jnp.float32))
+
+        dq_i = jnp.zeros((B, qc, Hkv, G, hd), jnp.float32)
+        dq_i, (dk_js, dv_js) = jax.lax.scan(
+            kv_step, dq_i,
+            (kg.swapaxes(0, 1), vg.swapaxes(0, 1), jnp.arange(nk)))
+        dk_acc = dk_acc + dk_js.swapaxes(0, 1).reshape(B, Skv, Hkv, hd)
+        dv_acc = dv_acc + dv_js.swapaxes(0, 1).reshape(B, Skv, Hkv, hd)
+        return (dk_acc, dv_acc), dq_i
+
+    init = (jnp.zeros((B, Skv, Hkv, hd), jnp.float32),
+            jnp.zeros((B, Skv, Hkv, hd), jnp.float32))
+    (dk, dv), dqs = jax.lax.scan(
+        qchunk_bwd, init,
+        (jnp.arange(nq), qg.swapaxes(0, 1), dog.swapaxes(0, 1),
+         lse.swapaxes(0, 1), Drow.swapaxes(0, 1)))
+    dq = dqs.swapaxes(0, 1).reshape(B, Sq, Hq, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_chunk: int = 256,
+                    kv_chunk: int = 512, impl: str = "masked",
+                    q_offset: int = 0, shard_axes=None):
+    """q (B,Sq,Hq,hd); k,v (B,Skv,Hkv,hd); Hq = Hkv*G -> (B,Sq,Hq,hd)."""
+    return _flash(q, k, v, causal, q_chunk, kv_chunk, q_offset, impl,
+                  shard_axes)
+
+
+def _project_qkv(x, p, cfg, positions, use_rope=True):
+    B, S, D = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qnorm"], cfg.norm_eps)
+        k = rmsnorm(k, p["knorm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(x, p, cfg, *, causal=True, impl="masked", q_chunk=256,
+              kv_chunk=512, attn_shard="auto", batch_axes=("data",),
+              n_model=1):
+    """Full-sequence attention (train/prefill). x: (B,S,D).
+
+    ``attn_shard``:
+      auto      — let GSPMD propagate (it may shard the contraction dim when
+                  head counts don't divide the mesh, paying a score
+                  all-reduce per flash chunk-step — measured 4.3 TB/step on
+                  qwen3 train_4k);
+      replicate — pin q/k/v replicated over "model": attention computes
+                  locally (redundant over the model axis, zero collectives);
+      heads     — shard q heads over "model" when divisible, k/v replicated
+                  (GQA: every device holds all 8 KV heads, its slice of the
+                  64 q heads; no collectives, no redundant compute).
+    """
+    B, S, D = x.shape
+    use_rope = cfg.family != "encdec"
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(x, p, cfg, positions, use_rope)
+    if attn_shard in ("replicate", "heads", "cp") and n_model > 1:
+        from jax.sharding import PartitionSpec as P
+
+        baxis = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        kv_spec = P(baxis, None, None, None)
+        if attn_shard == "heads" and cfg.n_heads % n_model == 0                 and (cfg.n_heads // cfg.n_kv_heads) % n_model == 0:
+            q = jax.lax.with_sharding_constraint(
+                q, P(baxis, None, "model", None))
+        else:
+            q = jax.lax.with_sharding_constraint(q, kv_spec)
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+    shard_axes = None
+    if attn_shard == "cp" and n_model > 1:
+        baxis = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        shard_axes = (baxis, "model")
+        impl = "cp"
+    elif attn_shard == "cp":
+        impl = "cp"
+    o = flash_attention(q, k, v, causal=causal, impl=impl,
+                        q_chunk=q_chunk, kv_chunk=kv_chunk,
+                        shard_axes=shard_axes)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def decode_attention(x, p, cfg, cache, pos):
+    """Single-token decode. x: (B,1,D); cache: dict(k,v) (B,S,Hkv,hd).
+
+    The new KV is written at ``pos``; attention masks positions > pos."""
+    B, _, D = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = cache["k"].shape[1]
+    use_rope = cfg.family != "encdec"
+    positions = jnp.full((B, 1), pos)
+    q, k_new, v_new = _project_qkv(x, p, cfg, positions, use_rope)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * hd ** -0.5
+    mask = jnp.arange(S)[None, None, None, None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, Hq * hd), p["wo"])
+    return out, {"k": k, "v": v}

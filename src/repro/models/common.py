@@ -1,0 +1,90 @@
+"""Shared model building blocks: norms, RoPE, positions, param makers."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Maker", "rmsnorm", "rope", "sinusoidal_positions", "gelu", "swiglu_act"]
+
+
+class Maker:
+    """Dual-mode parameter factory: ShapeDtypeStruct specs or real init.
+
+    Guarantees identical pytree structure between the dry-run (specs, no
+    allocation) and smoke tests / training (real arrays), because both paths
+    run the same builder code.
+    """
+
+    def __init__(self, mode: str, key=None, dtype=jnp.float32):
+        assert mode in ("spec", "init")
+        self.mode = mode
+        self.dtype = dtype
+        self._key = key
+        self._count = 0
+
+    def __call__(self, shape, kind: str = "normal", scale: float | None = None):
+        if self.mode == "spec":
+            return jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        self._count += 1
+        key = jax.random.fold_in(self._key, self._count)
+        if kind == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if kind == "ones":
+            return jnp.ones(shape, self.dtype)
+        if scale is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = fan_in ** -0.5
+        return (jax.random.normal(key, shape) * scale).astype(self.dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def _rope_freqs(hd: int, theta: float, positions):
+    half = hd // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    cos, sin = _rope_freqs(hd, theta, positions)
+    cos = cos[..., :, None, :]  # (..., S, 1, half)
+    sin = sin[..., :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset: int = 0):
+    pos = np.arange(offset, offset + seq, dtype=np.float32)
+    half = d // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half, dtype=np.float32) / max(half - 1, 1))
+    ang = pos[:, None] * freq[None, :]
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1))
+
+
+def sinusoidal_position_at(pos, d: int):
+    """Traced single-position sinusoidal embedding (decode path)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = pos.astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_act(gate, up):
+    return jax.nn.silu(gate) * up

@@ -1,0 +1,85 @@
+"""Mixture-of-Experts FFN: GShard-style grouped dispatch with capacity.
+
+Tokens are processed in groups of ``cfg.moe_group``; per group each token's
+top-k experts get a capacity slot (rank = order within the group, tokens
+over capacity are dropped — combine weight 0).  Dispatch/combine are dense
+einsums with static shapes, so the layer shards cleanly: the expert
+dimension E lives on the "model" mesh axis (expert parallelism) and GSPMD
+inserts the token<->expert all-to-alls.
+
+Aux losses (load-balance + router z-loss) are returned for the train loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import gelu, swiglu_act
+
+__all__ = ["moe_ffn", "dense_ffn"]
+
+
+def dense_ffn(x, p, cfg):
+    if cfg.act == "swiglu":
+        h = swiglu_act(jnp.einsum("...d,df->...f", x, p["w1"]),
+                       jnp.einsum("...d,df->...f", x, p["w3"]))
+    else:
+        h = gelu(jnp.einsum("...d,df->...f", x, p["w1"]))
+    return jnp.einsum("...f,fd->...d", h, p["w2"])
+
+
+def _expert_ffn(xin, p, cfg):
+    """xin (E, N, D) -> (E, N, D), expert weights stacked on axis 0."""
+    if cfg.act == "swiglu":
+        h = swiglu_act(jnp.einsum("end,edf->enf", xin, p["we1"]),
+                       jnp.einsum("end,edf->enf", xin, p["we3"]))
+    else:
+        h = gelu(jnp.einsum("end,edf->enf", xin, p["we1"]))
+    return jnp.einsum("enf,efd->end", h, p["we2"])
+
+
+def moe_ffn(x, p, cfg):
+    """x (B, S, D) -> (out (B, S, D), aux_losses dict)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group, B * S)
+    N = B * S
+    G = N // g
+    assert N % g == 0, f"tokens {N} not divisible by moe group {g}"
+    C = max(4, -(-g * K * int(cfg.capacity_factor * 100) // 100 // E))
+
+    xg = x.reshape(G, g, D)
+    logits = jnp.einsum("gnd,de->gne", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                       # (G,g,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)          # (G,g,K,E)
+    # rank of each assignment within its expert (priority: token order, then k)
+    flat = onehot.reshape(G, g * K, E)
+    rank = jnp.cumsum(flat, axis=1) - flat                        # exclusive
+    keep = (rank < C) * flat                                      # (G,gK,E)
+    rank = jnp.where(keep > 0, rank, 0.0)
+    pos_oh = jax.nn.one_hot(rank.astype(jnp.int32), C, dtype=jnp.float32) * keep[..., None]
+    # (G, gK, E, C) -> fold k back onto tokens
+    pos_oh = pos_oh.reshape(G, g, K, E, C)
+    combine = (pos_oh * top_p[..., None, None]).sum(2)            # (G,g,E,C)
+    dispatch = (pos_oh.sum(2) > 0).astype(x.dtype)                # (G,g,E,C)
+
+    expert_in = jnp.einsum("gnec,gnd->gecd", dispatch, xg)       # (G,E,C,D)
+    ein = expert_in.transpose(1, 0, 2, 3).reshape(E, G * C, D)
+    eout = _expert_ffn(ein, p, cfg)
+    eout = eout.reshape(E, G, C, D).transpose(1, 0, 2, 3)         # (G,E,C,D)
+    out = jnp.einsum("gecd,gnec->gnd", eout, combine.astype(x.dtype))
+
+    if cfg.shared_expert:
+        out = out + dense_ffn(x, {"w1": p["ws1"], "w3": p["ws3"], "w2": p["ws2"]}, cfg).reshape(G, g, D)
+
+    # aux losses (Switch/GShard style)
+    density = flat.reshape(G, g, K, E).sum(2).mean(1)             # (G,E) token fraction
+    mean_prob = probs.mean(1)                                     # (G,E)
+    lb = (density * mean_prob).sum(-1).mean() * (E ** 2) / K
+    z = (jax.nn.logsumexp(logits, axis=-1) ** 2).mean()
+    dropped = 1.0 - (keep.sum() / jnp.maximum(flat.sum(), 1.0))
+    aux = {"load_balance": lb, "router_z": z, "drop_fraction": dropped}
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,41 @@
+"""Model registry facade: params/loss/prefill/decode per ArchConfig."""
+from __future__ import annotations
+
+from .transformer import (  # noqa: F401
+    ModelSettings,
+    cache_spec,
+    count_params,
+    decode_step,
+    init_params,
+    lm_loss,
+    param_specs,
+    prefill,
+)
+
+
+def input_batch_specs(cfg, shape, dtype_tokens="int32"):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    import jax
+    import jax.numpy as jnp
+
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache_spec(cfg, B, S, mode="spec"),
+    }

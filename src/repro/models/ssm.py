@@ -1,0 +1,225 @@
+"""Attention-free mixers: RWKV6 (Finch) time-mix and Mamba selective SSM.
+
+Both are implemented in their *recurrent* form with ``lax.scan`` over time —
+exact for decode (one step) and correct for training.  The scan keeps the
+HLO small and the state in registers/VMEM; the chunked-parallel (GLA-style)
+formulation is a recorded §Perf candidate for the train shapes.
+
+RWKV6 time-mix (per head h, head dim d):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: d x d per head)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent decay  w_t = exp(-exp(w0 + tanh(x_t W_a) W_b)).
+
+Mamba (diagonal selective SSM):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t h_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import rmsnorm
+
+__all__ = ["rwkv6_timemix", "rwkv6_timemix_chunked", "rwkv6_channelmix",
+           "rwkv6_decode", "mamba_mix", "mamba_decode"]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, mu, x_prev=None):
+    """lerp(x_t, x_{t-1}, mu); x (B,S,D). x_prev: (B,1,D) carry for decode."""
+    if x_prev is None:
+        prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    else:
+        prev = x_prev
+    return x + mu * (prev - x)
+
+
+def _rwkv_proj(x, p, cfg, x_prev=None):
+    H, hd = cfg.n_heads, cfg.hd
+    r = jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_r"], x_prev), p["wr"])
+    k = jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_k"], x_prev), p["wk"])
+    v = jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_v"], x_prev), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_g"], x_prev), p["wg"]))
+    xw = _token_shift(x, p["mu_w"], x_prev)
+    dd = jnp.einsum("bsk,kd->bsd", jnp.tanh(jnp.einsum("bsd,dk->bsk", xw, p["ww1"])), p["ww2"])
+    logw = -jnp.exp(jnp.clip(p["w0"] + dd, -8.0, 4.0).astype(jnp.float32))   # log decay < 0
+    w = jnp.exp(logw)                                                        # (B,S,D) in (0,1)
+    B_, S, D = x.shape
+    shp = (B_, S, H, hd)
+    return (a.reshape(shp) for a in (r, k, v, w, g))
+
+
+def _wkv_step(S, inputs):
+    """S (B,H,dk,dv); r,k,v,w (B,H,d)."""
+    r, k, v, w, u = inputs
+    kv = k[..., :, None] * v[..., None, :]               # (B,H,dk,dv)
+    out = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S_new = w[..., :, None] * S + kv
+    return S_new, out
+
+
+def rwkv6_timemix(x, p, cfg, state=None, x_prev=None):
+    """x (B,S,D) -> (out, (new_state, new_x_prev)). State (B,H,hd,hd) f32."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    r, k, v, w, g = _rwkv_proj(x, p, cfg, x_prev)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    u = p["u"].astype(jnp.float32)                        # (H,hd) bonus
+
+    def step(S_, rkvw):
+        r_, k_, v_, w_ = rkvw
+        S_new, out = _wkv_step(S_, (r_, k_, v_, w_, u))
+        return S_new, out
+
+    seq = (r.swapaxes(0, 1).astype(jnp.float32).transpose(0, 1, 2, 3),
+           k.swapaxes(0, 1).astype(jnp.float32),
+           v.swapaxes(0, 1).astype(jnp.float32),
+           w.swapaxes(0, 1).astype(jnp.float32))
+    # scan over time: elements (B,H,hd)
+    state, outs = jax.lax.scan(step, state, tuple(s.reshape(S, B, H, hd) for s in seq))
+    o = outs.swapaxes(0, 1).reshape(B, S, H, hd)          # (B,S,H,hd)
+    o = rmsnorm(o, p["gn"].reshape(H, hd), cfg.norm_eps)  # per-head group norm
+    o = (o.reshape(B, S, D) * g.reshape(B, S, D)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"])
+    return out, (state, x[:, -1:, :])
+
+
+def rwkv6_timemix_chunked(x, p, cfg, state=None, x_prev=None, chunk: int = 16):
+    """Chunk-parallel WKV (GLA-style): O(T/c) state round-trips instead of
+    O(T) — the §Perf fix for the memory-bound rwkv train/prefill cells.
+
+    Per chunk (all per-channel decays; exponent differences are always <= 0,
+    so no clamping is needed):
+
+      l       = cumsum(log w)                 (inclusive), l_ex = l - log w
+      A[t,s]  = sum_d r[t,d] k[s,d] exp(l_ex[t,d] - l[s,d])   for s < t
+      A[t,t]  = (r_t * u) . k_t                               (bonus)
+      out     = A @ v + (r * exp(l_ex)) @ S_in
+      S_out   = exp(l_last) * S_in + (k * exp(l_last - l))^T @ v
+
+    Exactly equivalent to the sequential recurrence (tested to fp tolerance).
+    """
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    c = chunk
+    assert S % c == 0, f"seq {S} % chunk {c} != 0"
+    r, k, v, w, g = _rwkv_proj(x, p, cfg, x_prev)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    u = p["u"].astype(jnp.float32)
+
+    nc = S // c
+    def to_chunks(a):  # (B,S,H,hd) -> (nc, B, H, c, hd) f32
+        return a.reshape(B, nc, c, H, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)
+    lw = jnp.log(jnp.maximum(to_chunks(w), 1e-38))
+
+    causal = jnp.tril(jnp.ones((c, c), jnp.float32), -1)        # s < t strictly
+
+    def one_chunk(S_, inp):
+        r_, k_, v_, lw_ = inp                                    # (B,H,c,hd)
+        l = jnp.cumsum(lw_, axis=2)
+        l_ex = l - lw_
+        # intra-chunk scores with per-channel decay; exponents are <= 0 for
+        # every *used* (s < t) pair — clamp so the masked s >= t entries
+        # cannot overflow to inf (inf * 0 mask = NaN)
+        E2 = jnp.exp(jnp.minimum(
+            l_ex[:, :, :, None, :] - l[:, :, None, :, :], 0.0))  # (B,H,t,s,d)
+        A = jnp.einsum("bhtd,bhsd,bhtsd->bhts", r_, k_, E2)
+        A = A * causal
+        diag = jnp.einsum("bhtd,bhtd->bht", r_ * u[None, :, None, :], k_)
+        A = A + diag[..., None] * jnp.eye(c)
+        out = jnp.einsum("bhts,bhsv->bhtv", A, v_)
+        # inter-chunk: state contribution
+        out = out + jnp.einsum("bhtd,bhdv->bhtv", r_ * jnp.exp(l_ex), S_)
+        # state update
+        l_last = l[:, :, -1:, :]                                  # (B,H,1,hd)
+        kdec = k_ * jnp.exp(l_last - l)
+        S_new = jnp.exp(l_last[:, :, 0, :])[..., None] * S_ +             jnp.einsum("bhsd,bhsv->bhdv", kdec, v_)
+        return S_new, out
+
+    state, outs = jax.lax.scan(one_chunk, state, (rc, kc, vc, lw))
+    o = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)       # (B,S,H,hd)
+    o = rmsnorm(o, p["gn"].reshape(H, hd), cfg.norm_eps)
+    o = (o.reshape(B, S, D) * g.reshape(B, S, D)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"])
+    return out, (state, x[:, -1:, :])
+
+
+def rwkv6_decode(x, p, cfg, state, x_prev):
+    """Single-token decode: x (B,1,D)."""
+    return rwkv6_timemix(x, p, cfg, state=state, x_prev=x_prev)
+
+
+def rwkv6_channelmix(x, p, cfg, x_prev=None):
+    xk = _token_shift(x, p["mu_ck"], x_prev)
+    xr = _token_shift(x, p["mu_cr"], x_prev)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"]))
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"])
+    k = jnp.square(jax.nn.relu(k))
+    return r * jnp.einsum("bsf,fd->bsd", k, p["cv"]), x[:, -1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def _mamba_proj(x, p, cfg, conv_state=None):
+    """Returns (xz gate z, conv'd activation u, dt, Bc, Cc, new_conv_state)."""
+    B_, S, D = x.shape
+    Di = cfg.ssm_expand * D
+    K = cfg.conv_kernel
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])       # (B,S,2Di)
+    u, z = xz[..., :Di], xz[..., Di:]
+    # causal depthwise conv along time
+    if conv_state is None:
+        pad = jnp.zeros((B_, K - 1, Di), u.dtype)
+    else:
+        pad = conv_state
+    uc = jnp.concatenate([pad, u], axis=1)                # (B,S+K-1,Di)
+    new_conv_state = uc[:, -(K - 1):, :] if K > 1 else jnp.zeros((B_, 0, Di), u.dtype)
+    conv = sum(uc[:, i : i + S, :] * p["conv_w"][:, i] for i in range(K))
+    u = jax.nn.silu(conv + p["conv_b"])
+    bc = jnp.einsum("bse,en->bsn", u, p["x_bc"])          # (B,S,2*dstate)
+    ds = cfg.d_state
+    Bc, Cc = bc[..., :ds], bc[..., ds:]
+    dt = jnp.einsum("bse,er->bsr", u, p["w_dt1"])
+    dt = jnp.einsum("bsr,re->bse", dt, p["w_dt2"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))          # (B,S,Di)
+    return u, z, dt, Bc, Cc, new_conv_state
+
+
+def mamba_mix(x, p, cfg, state=None, conv_state=None):
+    """x (B,S,D) -> (out, (ssm_state (B,Di,ds) f32, conv_state))."""
+    B_, S, D = x.shape
+    Di = cfg.ssm_expand * D
+    ds = cfg.d_state
+    u, z, dt, Bc, Cc, new_conv = _mamba_proj(x, p, cfg, conv_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (Di,ds) negative
+    if state is None:
+        state = jnp.zeros((B_, Di, ds), jnp.float32)
+
+    def step(h, inp):
+        u_, dt_, B_t, C_t = inp                            # (B,Di),(B,Di),(B,ds),(B,ds)
+        a = jnp.exp(dt_[..., None] * A[None])              # (B,Di,ds)
+        bx = dt_[..., None] * B_t[:, None, :] * u_[..., None].astype(jnp.float32)
+        h = a * h + bx
+        y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    inps = (u.swapaxes(0, 1), dt.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state, inps)
+    y = ys.swapaxes(0, 1).astype(x.dtype)                  # (B,S,Di)
+    y = y + u * p["Dskip"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, (state, new_conv)
+
+
+def mamba_decode(x, p, cfg, state, conv_state):
+    return mamba_mix(x, p, cfg, state=state, conv_state=conv_state)

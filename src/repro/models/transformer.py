@@ -1,0 +1,561 @@
+"""Model composition: layer stacks, LM loss, prefill and decode paths.
+
+One code path per *family* (dense/vlm, moe, ssm, hybrid, encdec), all built
+from the same primitives and all scanned over layers (compile-time O(1) in
+depth) with configurable remat.  Parameters are dicts of stacked leaves
+(leading layer/period dim) so the layer scan carries them as xs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm
+from .attention import attention, decode_attention
+from .common import (Maker, gelu, rmsnorm, sinusoidal_position_at,
+                     sinusoidal_positions)
+from .moe import dense_ffn, moe_ffn
+
+__all__ = ["ModelSettings", "param_specs", "init_params", "lm_loss",
+           "prefill", "decode_step", "cache_spec", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSettings:
+    attn_impl: str = "masked"       # masked | triangular (§Perf)
+    q_chunk: int = 256
+    kv_chunk: int = 512
+    ce_chunk: int = 1024
+    remat: str = "full"             # none | dots | full
+    compute_dtype: Any = jnp.bfloat16
+    rwkv_chunk: int = 0             # 0 = sequential scan; >0 = chunked WKV (§Perf)
+    attn_shard: str = "auto"        # auto | replicate | heads (§Perf)
+    # distribution-aware fields (filled in by the step builders from the mesh)
+    act_shard: str = "seq"          # none | seq | hidden — layer-boundary
+    batch_axes: tuple = ("data",)   # mesh axes sharding the batch dim
+    n_model: int = 1                # "model" axis size (1 = no constraint)
+    n_batch: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (spec/init dual mode via Maker)
+# ---------------------------------------------------------------------------
+
+def _attn_leaves(mk, cfg, lead=()):
+    Hq, Hkv, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    p = {
+        "wq": mk((*lead, D, Hq * hd)),
+        "wk": mk((*lead, D, Hkv * hd)),
+        "wv": mk((*lead, D, Hkv * hd)),
+        "wo": mk((*lead, Hq * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p |= {"bq": mk((*lead, Hq * hd), "zeros"),
+              "bk": mk((*lead, Hkv * hd), "zeros"),
+              "bv": mk((*lead, Hkv * hd), "zeros")}
+    if cfg.qk_norm:
+        p |= {"qnorm": mk((*lead, hd), "ones"), "knorm": mk((*lead, hd), "ones")}
+    return p
+
+
+def _mlp_leaves(mk, cfg, lead=()):
+    D, F = cfg.d_model, cfg.d_ff
+    p = {"w1": mk((*lead, D, F)), "w2": mk((*lead, F, D))}
+    if cfg.act == "swiglu":
+        p["w3"] = mk((*lead, D, F))
+    return p
+
+
+def _moe_leaves(mk, cfg, lead=()):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": mk((*lead, D, E)),
+        "we1": mk((*lead, E, D, F)),
+        "we2": mk((*lead, E, F, D)),
+    }
+    if cfg.act == "swiglu":
+        p["we3"] = mk((*lead, E, D, F))
+    if cfg.shared_expert:
+        p |= {"ws1": mk((*lead, D, F)), "ws2": mk((*lead, F, D)),
+              "ws3": mk((*lead, D, F))}
+    return p
+
+
+def _rwkv_leaves(mk, cfg, lead=()):
+    D, H, hd, F = cfg.d_model, cfg.n_heads, cfg.hd, cfg.d_ff
+    lr = 64  # low-rank width of the data-dependent decay
+    tm = {
+        **{f"mu_{n}": mk((*lead, D), "zeros") for n in "rkvwg"},
+        "wr": mk((*lead, D, D)), "wk": mk((*lead, D, D)), "wv": mk((*lead, D, D)),
+        "wg": mk((*lead, D, D)), "wo": mk((*lead, D, D)),
+        "ww1": mk((*lead, D, lr)), "ww2": mk((*lead, lr, D)),
+        "w0": mk((*lead, D), "zeros"),
+        "u": mk((*lead, H, hd), "zeros"),
+        "gn": mk((*lead, D), "ones"),
+    }
+    cm = {
+        "mu_ck": mk((*lead, D), "zeros"), "mu_cr": mk((*lead, D), "zeros"),
+        "ck": mk((*lead, D, F)), "cv": mk((*lead, F, D)), "cr": mk((*lead, D, D)),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _mamba_leaves(mk, cfg, lead=()):
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    ds, K = cfg.d_state, cfg.conv_kernel
+    dtr = max(8, D // 16)
+    return {
+        "in_proj": mk((*lead, D, 2 * Di)),
+        "conv_w": mk((*lead, Di, K), scale=0.5),
+        "conv_b": mk((*lead, Di), "zeros"),
+        "x_bc": mk((*lead, Di, 2 * ds)),
+        "w_dt1": mk((*lead, Di, dtr)),
+        "w_dt2": mk((*lead, dtr, Di)),
+        "dt_bias": mk((*lead, Di), "zeros"),
+        "A_log": mk((*lead, Di, ds), "zeros"),
+        "Dskip": mk((*lead, Di), "ones"),
+        "out_proj": mk((*lead, Di, D)),
+    }
+
+
+def _blocks_params(mk, cfg):
+    L, D = cfg.n_layers, cfg.d_model
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"ln1": mk((L, D), "ones"), "ln2": mk((L, D), "ones"),
+                "attn": _attn_leaves(mk, cfg, (L,)), "mlp": _mlp_leaves(mk, cfg, (L,))}
+    if fam == "moe":
+        return {"ln1": mk((L, D), "ones"), "ln2": mk((L, D), "ones"),
+                "attn": _attn_leaves(mk, cfg, (L,)), "moe": _moe_leaves(mk, cfg, (L,))}
+    if fam == "ssm":  # rwkv6
+        return {"ln1": mk((L, D), "ones"), "ln2": mk((L, D), "ones"),
+                **_rwkv_leaves(mk, cfg, (L,))}
+    if fam == "hybrid":  # jamba periods
+        P = cfg.n_layers // cfg.attn_period
+        nm = cfg.attn_period - 1                    # mamba layers per period
+        nf = cfg.attn_period // cfg.moe_period      # moe ffns per period
+        nd = cfg.attn_period - nf                   # dense ffns per period
+        return {
+            "mamba_ln": mk((P, nm, D), "ones"),
+            "mamba": _mamba_leaves(mk, cfg, (P, nm)),
+            "attn_ln": mk((P, D), "ones"),
+            "attn": _attn_leaves(mk, cfg, (P,)),
+            "mlp_ln": mk((P, nd, D), "ones"),
+            "mlp": _mlp_leaves(mk, cfg, (P, nd)),
+            "moe_ln": mk((P, nf, D), "ones"),
+            "moe": _moe_leaves(mk, cfg, (P, nf)),
+        }
+    if fam == "encdec":
+        Le = cfg.encoder_layers
+        enc = {"ln1": mk((Le, D), "ones"), "ln2": mk((Le, D), "ones"),
+               "attn": _attn_leaves(mk, cfg, (Le,)), "mlp": _mlp_leaves(mk, cfg, (Le,))}
+        dec = {"ln1": mk((L, D), "ones"), "lnx": mk((L, D), "ones"),
+               "ln2": mk((L, D), "ones"),
+               "attn": _attn_leaves(mk, cfg, (L,)),
+               "xattn": _attn_leaves(mk, cfg, (L,)),
+               "mlp": _mlp_leaves(mk, cfg, (L,))}
+        return {"enc": enc, "dec": dec, "enc_norm": mk((D,), "ones")}
+    raise ValueError(f"unknown family {fam}")
+
+
+def _top_params(mk, cfg):
+    D, V = cfg.d_model, cfg.vocab
+    p = {"embed": mk((V, D), scale=0.02), "blocks": _blocks_params(mk, cfg),
+         "final_norm": mk((D,), "ones")}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = mk((D, V), scale=D ** -0.5)
+    return p
+
+
+def param_specs(cfg, dtype=jnp.float32):
+    return _top_params(Maker("spec", dtype=dtype), cfg)
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    return _top_params(Maker("init", key=key, dtype=dtype), cfg)
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    specs = param_specs(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        key = "/".join(getattr(k, "key", str(k)) for k in path)
+        if active_only and "/we" in key:
+            n = n * (cfg.top_k / cfg.n_experts)
+        total += n
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _zero_aux():
+    return {"load_balance": jnp.float32(0), "router_z": jnp.float32(0),
+            "drop_fraction": jnp.float32(0)}
+
+
+def _ffn_or_moe(x, bp, cfg, moe_key="moe"):
+    if moe_key in bp:
+        return moe_ffn(x, bp[moe_key], cfg)
+    return dense_ffn(x, bp["mlp"], cfg), _zero_aux()
+
+
+def _decoder_body(x, bp, cfg, st: ModelSettings):
+    """One dense/moe decoder layer; returns (x, aux)."""
+    h = attention(rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg,
+                  causal=True, impl=st.attn_impl, q_chunk=st.q_chunk,
+                  kv_chunk=st.kv_chunk, attn_shard=st.attn_shard,
+                  batch_axes=st.batch_axes, n_model=st.n_model)
+    x = x + h
+    y, aux = _ffn_or_moe(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp, cfg)
+    return x + y, aux
+
+
+def _rwkv_body(x, bp, cfg, st):
+    xin = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if st.rwkv_chunk > 0 and x.shape[1] % st.rwkv_chunk == 0:
+        h, _ = ssm.rwkv6_timemix_chunked(xin, bp["tm"], cfg,
+                                         chunk=st.rwkv_chunk)
+    else:
+        h, _ = ssm.rwkv6_timemix(xin, bp["tm"], cfg)
+    x = x + h
+    y, _ = ssm.rwkv6_channelmix(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["cm"], cfg)
+    return x + y, _zero_aux()
+
+
+def _hybrid_period_body(x, bp, cfg, st):
+    """One jamba period: attn_period sublayers (mamba x (p-1), attn x 1),
+    FFN alternating dense/MoE every moe_period.  Each mamba mixer is
+    individually rematerialized: its inner time-scan saves per-step primals
+    for the backward pass, and without per-mixer checkpointing all 7 layers'
+    saved xs are live at once (~30 GiB at 4k x 16 batch)."""
+    P_at = cfg.attn_period
+    attn_pos = P_at // 2
+    aux_acc = _zero_aux()
+    mi = di = oi = 0
+
+    def mamba_fn(xin, lp):
+        return ssm.mamba_mix(xin, lp, cfg)[0]
+
+    if st.remat != "none":
+        mamba_fn = jax.checkpoint(
+            mamba_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    for i in range(P_at):
+        if i == attn_pos:
+            h = attention(rmsnorm(x, bp["attn_ln"], cfg.norm_eps), bp["attn"], cfg,
+                          causal=True, impl=st.attn_impl, q_chunk=st.q_chunk,
+                          kv_chunk=st.kv_chunk, attn_shard=st.attn_shard,
+                          batch_axes=st.batch_axes, n_model=st.n_model)
+        else:
+            lp = jax.tree.map(lambda a: a[mi], bp["mamba"])
+            h = mamba_fn(rmsnorm(x, bp["mamba_ln"][mi], cfg.norm_eps), lp)
+            mi += 1
+        x = x + h
+        if i % cfg.moe_period == 1:
+            lp = jax.tree.map(lambda a: a[oi], bp["moe"])
+            y, aux = moe_ffn(rmsnorm(x, bp["moe_ln"][oi], cfg.norm_eps), lp, cfg)
+            aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc, aux)
+            oi += 1
+        else:
+            lp = jax.tree.map(lambda a: a[di], bp["mlp"])
+            y = dense_ffn(rmsnorm(x, bp["mlp_ln"][di], cfg.norm_eps), lp, cfg)
+            di += 1
+        x = x + y
+    return x, aux_acc
+
+
+def _enc_body(x, bp, cfg, st):
+    h = attention(rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg,
+                  causal=False, impl="masked", q_chunk=st.q_chunk,
+                  kv_chunk=st.kv_chunk, attn_shard=st.attn_shard,
+                  batch_axes=st.batch_axes, n_model=st.n_model)
+    x = x + h
+    y = dense_ffn(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+    return x + y, _zero_aux()
+
+
+def _cross_attention(x, enc_out, p, cfg, st):
+    """Decoder cross-attention: q from x, k/v from encoder output."""
+    B, S, D = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, Hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(B, -1, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(B, -1, Hkv, hd)
+    from .attention import flash_attention
+
+    o = flash_attention(q, k, v, causal=False, q_chunk=st.q_chunk,
+                        kv_chunk=st.kv_chunk)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def _dec_body(x, enc_out, bp, cfg, st):
+    h = attention(rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg,
+                  causal=True, impl=st.attn_impl, q_chunk=st.q_chunk,
+                  kv_chunk=st.kv_chunk, attn_shard=st.attn_shard,
+                  batch_axes=st.batch_axes, n_model=st.n_model)
+    x = x + h
+    x = x + _cross_attention(rmsnorm(x, bp["lnx"], cfg.norm_eps), enc_out,
+                             bp["xattn"], cfg, st)
+    y = dense_ffn(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+    return x + y, _zero_aux()
+
+
+def _act_constraint(x, st: ModelSettings):
+    """Layer-boundary activation sharding (Megatron-style sequence sharding
+    over "model" keeps the scan carry 1/n_model as large — see DESIGN.md §5)."""
+    if st.act_shard == "none" or st.n_model <= 1 or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    B, S, D = x.shape
+    spec = [None, None, None]
+    if st.n_batch > 1 and B % st.n_batch == 0:
+        spec[0] = st.batch_axes if len(st.batch_axes) > 1 else st.batch_axes[0]
+    if st.act_shard == "seq" and S % st.n_model == 0 and S >= st.n_model:
+        spec[1] = "model"
+    elif st.act_shard == "hidden" and D % st.n_model == 0:
+        spec[2] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _scan_blocks(x, blocks, body, st: ModelSettings):
+    def f(carry, bp):
+        carry = _act_constraint(carry, st)
+        out, aux = body(carry, bp)
+        return out, aux
+
+    if st.remat == "full":
+        f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+    elif st.remat == "dots":
+        f = jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    x, auxs = jax.lax.scan(f, x, blocks)
+    return x, jax.tree.map(jnp.mean, auxs)
+
+
+def forward_hidden(params, tokens, cfg, st: ModelSettings, enc_inputs=None):
+    """tokens (B,S) int32 -> (hidden (B,S,D), aux).  For encdec, enc_inputs
+    is the stubbed frame-embedding tensor (B, frames, D)."""
+    cdt = st.compute_dtype
+    x = params["embed"][tokens].astype(cdt)
+    fam = cfg.family
+    if fam == "encdec":
+        e = enc_inputs.astype(cdt) + sinusoidal_positions(
+            enc_inputs.shape[1], cfg.d_model
+        ).astype(cdt)
+        e, _ = _scan_blocks(
+            e, _cast_blocks(params["blocks"]["enc"], cdt),
+            lambda a, bp: _enc_body(a, bp, cfg, st), st)
+        enc_out = rmsnorm(e, params["blocks"]["enc_norm"].astype(cdt), cfg.norm_eps)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(cdt)
+        h, aux = _scan_blocks(
+            x, _cast_blocks(params["blocks"]["dec"], cdt),
+            lambda a, bp: _dec_body(a, enc_out, bp, cfg, st), st)
+    else:
+        body = {
+            "dense": _decoder_body, "vlm": _decoder_body, "moe": _decoder_body,
+            "ssm": _rwkv_body, "hybrid": _hybrid_period_body,
+        }[fam]
+        h, aux = _scan_blocks(x, _cast_blocks(params["blocks"], cdt),
+                              lambda a, bp: body(a, bp, cfg, st), st)
+    return rmsnorm(h, params["final_norm"].astype(cdt), cfg.norm_eps), aux
+
+
+def _cast_blocks(blocks, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype), blocks)
+
+
+def _chunked_ce(h, labels, head, chunk):
+    B, S, D = h.shape
+    nc = max(1, S // chunk)
+    c = S // nc
+    hc = h.reshape(B, nc, c, D).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+    def stepf(tot, inp):
+        hh, ll = inp
+        logits = jnp.einsum("bsd,dv->bsv", hh, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return tot + (lse - gold).sum(), None
+
+    tot, _ = jax.lax.scan(stepf, jnp.float32(0), (hc, lc))
+    return tot / (B * S)
+
+
+def _head(params, cfg, dtype):
+    if cfg.tie_embeddings:
+        return params["embed"].astype(dtype).T
+    return params["lm_head"].astype(dtype)
+
+
+def lm_loss(params, batch, cfg, st: ModelSettings = ModelSettings()):
+    """batch: dict(tokens (B,S), labels (B,S) [, frames (B,F,D)])."""
+    h, aux = forward_hidden(params, batch["tokens"], cfg, st,
+                            enc_inputs=batch.get("frames"))
+    ce = _chunked_ce(h, batch["labels"], _head(params, cfg, st.compute_dtype),
+                     st.ce_chunk)
+    loss = ce + 0.01 * aux["load_balance"] + 0.001 * aux["router_z"]
+    return loss, {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, seq: int, dtype=jnp.bfloat16, mode="spec"):
+    """Decode-state pytree (specs or zeros) for one serve step."""
+    mk = (lambda shape, dt=dtype: jax.ShapeDtypeStruct(tuple(shape), dt)) \
+        if mode == "spec" else (lambda shape, dt=dtype: jnp.zeros(shape, dt))
+    L, D = cfg.n_layers, cfg.d_model
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"k": mk((L, batch, seq, Hkv, hd)), "v": mk((L, batch, seq, Hkv, hd))}
+    if fam == "ssm":
+        return {"wkv": mk((L, batch, cfg.n_heads, hd, hd), jnp.float32),
+                "x_tm": mk((L, batch, 1, D)), "x_cm": mk((L, batch, 1, D))}
+    if fam == "hybrid":
+        P = cfg.n_layers // cfg.attn_period
+        nm = cfg.attn_period - 1
+        Di = cfg.ssm_expand * D
+        return {
+            "ssm": mk((P, nm, batch, Di, cfg.d_state), jnp.float32),
+            "conv": mk((P, nm, batch, cfg.conv_kernel - 1, Di)),
+            "k": mk((P, batch, seq, Hkv, hd)), "v": mk((P, batch, seq, Hkv, hd)),
+        }
+    if fam == "encdec":
+        F = cfg.enc_frames
+        return {"k": mk((L, batch, seq, Hkv, hd)), "v": mk((L, batch, seq, Hkv, hd)),
+                "xk": mk((L, batch, F, Hkv, hd)), "xv": mk((L, batch, F, Hkv, hd))}
+    raise ValueError(fam)
+
+
+def _decode_layer_dense(x, bp, cfg, kv, pos):
+    h, kv2 = decode_attention(rmsnorm(x, bp["ln1"], cfg.norm_eps), bp["attn"],
+                              cfg, kv, pos)
+    x = x + h
+    y, _ = _ffn_or_moe(rmsnorm(x, bp["ln2"], cfg.norm_eps), bp, cfg)
+    return x + y, kv2
+
+
+def _decode_layer_rwkv(x, bp, cfg, state, xtm, xcm):
+    h, (s2, xtm2) = ssm.rwkv6_decode(rmsnorm(x, bp["ln1"], cfg.norm_eps),
+                                     bp["tm"], cfg, state, xtm)
+    x = x + h
+    xn = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    y, xcm2 = ssm.rwkv6_channelmix(xn, bp["cm"], cfg, xcm)
+    return x + y, s2, xtm2, xcm2
+
+
+def decode_step(params, cache, token, pos, cfg, st: ModelSettings = ModelSettings()):
+    """token (B,1) int32, pos scalar int32 -> (logits (B,1,V), new cache)."""
+    cdt = st.compute_dtype
+    x = params["embed"][token].astype(cdt)
+    fam = cfg.family
+    blocks = _cast_blocks(params["blocks"] if fam != "encdec"
+                          else params["blocks"]["dec"], cdt)
+    if fam in ("dense", "vlm", "moe"):
+        def f(carry, inp):
+            bp, kv = inp
+            x2, kv2 = _decode_layer_dense(carry, bp, cfg, kv, pos)
+            return x2, kv2
+        x, kv_new = jax.lax.scan(f, x, (blocks, {"k": cache["k"], "v": cache["v"]}))
+        new_cache = kv_new
+    elif fam == "ssm":
+        x = x + 0  # positions implicit in recurrence
+        def f(carry, inp):
+            bp, (s, xtm, xcm) = inp
+            x2, s2, xtm2, xcm2 = _decode_layer_rwkv(carry, bp, cfg, s, xtm, xcm)
+            return x2, (s2, xtm2, xcm2)
+        x, (s_new, xtm_new, xcm_new) = jax.lax.scan(
+            f, x, (blocks, (cache["wkv"], cache["x_tm"], cache["x_cm"])))
+        new_cache = {"wkv": s_new, "x_tm": xtm_new, "x_cm": xcm_new}
+    elif fam == "hybrid":
+        def f(carry, inp):
+            bp, (sst, cst, k, v) = inp
+            x2 = carry
+            P_at = cfg.attn_period
+            attn_pos = P_at // 2
+            mi = di = oi = 0
+            s_out, c_out = [], []
+            kv2 = {"k": k, "v": v}
+            for i in range(P_at):
+                if i == attn_pos:
+                    h, kv2 = decode_attention(
+                        rmsnorm(x2, bp["attn_ln"], cfg.norm_eps), bp["attn"],
+                        cfg, kv2, pos)
+                else:
+                    lp = jax.tree.map(lambda a: a[mi], bp["mamba"])
+                    h, (s2, c2) = ssm.mamba_decode(
+                        rmsnorm(x2, bp["mamba_ln"][mi], cfg.norm_eps), lp, cfg,
+                        sst[mi], cst[mi])
+                    s_out.append(s2)
+                    c_out.append(c2)
+                    mi += 1
+                x2 = x2 + h
+                if i % cfg.moe_period == 1:
+                    lp = jax.tree.map(lambda a: a[oi], bp["moe"])
+                    y, _ = moe_ffn(rmsnorm(x2, bp["moe_ln"][oi], cfg.norm_eps), lp, cfg)
+                    oi += 1
+                else:
+                    lp = jax.tree.map(lambda a: a[di], bp["mlp"])
+                    y = dense_ffn(rmsnorm(x2, bp["mlp_ln"][di], cfg.norm_eps), lp, cfg)
+                    di += 1
+                x2 = x2 + y
+            return x2, (jnp.stack(s_out), jnp.stack(c_out), kv2["k"], kv2["v"])
+        x, (s_new, c_new, k_new, v_new) = jax.lax.scan(
+            f, x, (blocks, (cache["ssm"], cache["conv"], cache["k"], cache["v"])))
+        new_cache = {"ssm": s_new, "conv": c_new, "k": k_new, "v": v_new}
+    elif fam == "encdec":
+        x = x + sinusoidal_position_at(pos, cfg.d_model).astype(cdt)
+        Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        def f(carry, inp):
+            bp, (k, v, xk, xv) = inp
+            x2, kv2 = None, None
+            h, kv2 = decode_attention(rmsnorm(carry, bp["ln1"], cfg.norm_eps),
+                                      bp["attn"], cfg, {"k": k, "v": v}, pos)
+            x2 = carry + h
+            # cross-attention against precomputed encoder KV
+            xq = jnp.einsum("bsd,dh->bsh", rmsnorm(x2, bp["lnx"], cfg.norm_eps),
+                            bp["xattn"]["wq"]).reshape(x2.shape[0], 1, Hq, hd)
+            G = Hq // Hkv
+            qg = xq.reshape(x2.shape[0], 1, Hkv, G, hd)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, xk).astype(jnp.float32) * hd ** -0.5
+            w = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(xv.dtype), xv)
+            o = jnp.einsum("bsh,hd->bsd", o.reshape(x2.shape[0], 1, Hq * hd),
+                           bp["xattn"]["wo"])
+            x2 = x2 + o
+            y = dense_ffn(rmsnorm(x2, bp["ln2"], cfg.norm_eps), bp["mlp"], cfg)
+            return x2 + y, kv2
+        x, kv_new = jax.lax.scan(
+            f, x, (blocks, (cache["k"], cache["v"], cache["xk"], cache["xv"])))
+        new_cache = {**kv_new, "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        raise ValueError(fam)
+    h = rmsnorm(x, params["final_norm"].astype(cdt), cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, _head(params, cfg, cdt))
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill(params, tokens, cfg, st: ModelSettings = ModelSettings(),
+            enc_inputs=None):
+    """Forward over the prompt; returns last-position logits.
+
+    (Cache materialization for the serving path reuses forward_hidden
+    activations; for the dry-run cells the lowered artifact is the full
+    prompt forward, which dominates prefill cost.)"""
+    h, _ = forward_hidden(params, tokens, cfg, st, enc_inputs=enc_inputs)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], _head(params, cfg, st.compute_dtype))
+    return logits.astype(jnp.float32)

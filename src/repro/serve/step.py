@@ -1,0 +1,62 @@
+"""Serve-step builders: batched single-token decode and prompt prefill,
+jitted with production-mesh shardings (KV sequence axis sharded over
+"model", batch over "data")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ModelSettings, decode_step, prefill
+from repro.train.sharding import batch_shardings, cache_shardings, param_shardings
+
+__all__ = ["build_decode_step", "build_prefill_step"]
+
+
+def build_decode_step(cfg, mesh, *, settings: ModelSettings = ModelSettings(),
+                      donate_cache: bool = True):
+    """decode(params, cache, token, pos) -> (logits, new_cache)."""
+
+    def fn(params, cache, token, pos):
+        return decode_step(params, cache, token, pos, cfg, settings)
+
+    def jit_for(param_tree, cache_tree, token_spec):
+        in_sh = (
+            param_shardings(param_tree, mesh, hybrid=(cfg.family == "hybrid")),
+            cache_shardings(cache_tree, mesh),
+            batch_shardings(token_spec, mesh),
+            NamedSharding(mesh, P()),
+        )
+        out_sh = (None, cache_shardings(cache_tree, mesh))
+        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(1,) if donate_cache else ())
+
+    return fn, jit_for
+
+
+def build_prefill_step(cfg, mesh, *, settings: ModelSettings = ModelSettings()):
+    import dataclasses as _dc
+
+    from repro.launch.mesh import batch_axes as _baxes
+
+    baxes = _baxes(mesh)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    settings = _dc.replace(settings, batch_axes=baxes,
+                           n_model=mesh.shape["model"], n_batch=nb)
+
+    def fn(params, tokens, frames=None):
+        return prefill(params, tokens, cfg, settings, enc_inputs=frames)
+
+    def jit_for(param_tree, batch_specs):
+        in_sh = [param_shardings(param_tree, mesh, hybrid=(cfg.family == "hybrid")),
+                 batch_shardings(batch_specs["tokens"], mesh)]
+        nargs = 2
+        if "frames" in batch_specs:
+            in_sh.append(batch_shardings(batch_specs["frames"], mesh))
+            nargs = 3
+        return jax.jit(fn, in_shardings=tuple(in_sh), out_shardings=None), nargs
+
+    return fn, jit_for

@@ -1,0 +1,148 @@
+"""Error-feedback compressed cross-pod gradient reduction.
+
+The CubismZ insight applied to the training fabric: the pod-to-pod
+interconnect is the slowest link, and gradients tolerate ε-bounded lossy
+compression *with error feedback*.  Structure:
+
+* ``shard_map`` manual over the "pod" axis only ("data"/"model" stay under
+  GSPMD inside the body) — each pod computes gradients on its half of the
+  global batch;
+* per-leaf top-k selection (the fixed-shape TPU analogue of the paper's
+  wavelet threshold decimation — see ``repro.core.threshold.topk_details``)
+  on the error-feedback-corrected gradient;
+* the (values, indices) payload — 2*k*(4+4) bytes instead of 4*n — is
+  all-gathered across pods and scatter-added locally;
+* the unsent residual is carried to the next step (error feedback), which
+  keeps convergence close to dense all-reduce (bench_gradcomp.py).
+
+Cross-pod traffic drops by ~ratio/4 (values+indices vs dense f32); the
+effect is visible in the dry-run HLO as smaller all-gather operand sizes on
+the pod groups (§Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pod_compressed_grads", "topk_compress", "topk_decompress"]
+
+
+_BLOCK = 1 << 20   # top-k block length (paper-style block-structured selection)
+
+
+def topk_compress(g, ratio: int):
+    """Blockwise top-|k| selection: the flat tensor is split into 2^20-long
+    blocks and each keeps its top (block/ratio) entries — the fixed-shape,
+    int32-safe analogue of the paper's per-block threshold decimation
+    (billion-element stacked leaves overflow a single top_k).
+    Returns (vals (nb, k), idx int32 (nb, k) block-local)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    bl = min(_BLOCK, n)
+    pad = (-n) % bl
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    rows = flat.reshape(-1, bl)
+    k = max(1, bl // ratio)
+    _, idx = jax.lax.top_k(jnp.abs(rows), k)
+    vals = jnp.take_along_axis(rows, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def topk_decompress(vals, idx, shape):
+    n = 1
+    for s in shape:
+        n *= s
+    bl = min(_BLOCK, n)
+    nb = -(-n // bl)
+    rows = jnp.zeros((nb, bl), jnp.float32)
+    rows = rows.at[jnp.arange(nb)[:, None], idx].add(vals)
+    return rows.reshape(-1)[:n].reshape(shape)
+
+
+def pod_compressed_grads(loss_fn, params, residual, batch, cfg, settings,
+                         mesh, method: str = "topk32"):
+    """Returns ((loss, metrics), grads, new_residual, compress_metrics).
+
+    ``loss_fn(params)`` must close over nothing pod-dependent; the batch is
+    split across pods here.
+    """
+    import dataclasses
+
+    ratio = int(method.replace("topk", "") or 32)
+    n_pods = mesh.shape["pod"]
+
+    from repro.models import lm_loss
+
+    # inside the manual-"pod" region only auto axes may appear in sharding
+    # constraints; the per-pod batch is sharded over "data" alone
+    settings = dataclasses.replace(
+        settings,
+        batch_axes=tuple(a for a in settings.batch_axes if a != "pod"),
+        n_batch=max(1, settings.n_batch // n_pods))
+
+    def body(params, residual, batch):
+        # per-pod gradients on this pod's slice of the global batch
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, batch, cfg, settings), has_aux=True)(params)
+
+        def one_small(g, r):
+            corrected = g.astype(jnp.float32) + r
+            vals, idx = topk_compress(corrected, ratio)
+            # what this pod actually transmits
+            sent = topk_decompress(vals, idx, g.shape)
+            new_r = corrected - sent
+            # exchange compressed payloads across pods; replicate the
+            # payload within the pod first so the pod-axis collective has
+            # trivial device groups (SPMD partitioner CHECKs otherwise)
+            vals = jax.lax.with_sharding_constraint(vals, P(None, None))
+            idx = jax.lax.with_sharding_constraint(idx, P(None, None))
+            all_vals = jax.lax.all_gather(vals, "pod")      # (n_pods, nb, k)
+            all_idx = jax.lax.all_gather(idx, "pod")
+            mean = sum(
+                topk_decompress(all_vals[i], all_idx[i], g.shape)
+                for i in range(n_pods)) / n_pods
+            return mean.astype(g.dtype), new_r
+
+        def one(g, r):
+            if g.size < 4 * ratio:          # tiny leaf: send dense
+                g_sum = jax.lax.psum(g, "pod") / n_pods
+                return g_sum, jnp.zeros_like(r)
+            if g.size < (1 << 28):
+                return one_small(g, r)
+            # XLA-CPU top-k/scatter lowerings abort near the int32 element
+            # boundary: loop the leading (layer-stack) dim, slices stay small
+            L0 = g.shape[0]
+            gs = g.reshape(L0, -1)
+            rs = r.reshape(L0, -1)
+            out_g, out_r = jax.lax.map(lambda ab: one_small(ab[0], ab[1]),
+                                       (gs, rs))
+            return out_g.reshape(g.shape).astype(g.dtype), out_r.reshape(g.shape)
+
+        out = jax.tree.map(one, grads, residual)
+        new_grads = jax.tree.map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        new_resid = jax.tree.map(lambda o: o[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        loss = jax.lax.pmean(loss, "pod")
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+        return (loss, metrics), new_grads, new_resid
+
+    # manual over "pod" only; GSPMD keeps handling data/model inside
+    shmapped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(), P("pod")),
+        out_specs=((P(), P()), P(), P()),
+        axis_names=frozenset({"pod"}),
+        check_vma=False,
+    )
+    batch_split = jax.tree.map(lambda a: a, batch)  # batch dim: P("pod") slices
+    (loss, metrics), grads, new_residual = shmapped(params, residual, batch_split)
+    n_leaves = len(jax.tree.leaves(params))
+    cmx = {"grad_compress_ratio": jnp.float32(ratio),
+           "grad_compress_leaves": jnp.float32(n_leaves)}
+    return (loss, metrics), grads, new_residual, cmx

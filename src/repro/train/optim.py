@@ -1,0 +1,71 @@
+"""AdamW with global-norm clipping and cosine LR schedule (built from
+scratch — no optax in this environment)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_step", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_step(params, grads, opt_state, cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    t = (step + 1).astype(jnp.float32)
+    lr = lr_at(cfg, step)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * g32 * g32
+        mh = m2 / (1 - b1 ** t)
+        vh = v2 / (1 - b2 ** t)
+        p2 = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,203 @@
+"""Sharding rules: FSDP-style baseline (+ expert parallelism) for every arch.
+
+Baseline policy (must compile for all 40 dry-run cells):
+
+* every parameter is sharded along its largest "model"-divisible axis
+  (ZeRO-3 semantics: GSPMD all-gathers weights at use; avoids head-count
+  divisibility hazards — qwen2.5 has 40 heads, smollm 9);
+* expert-stacked leaves (``we*``) shard the expert axis when divisible
+  (expert parallelism);
+* scanned layer-stack axes (leading 1-2 dims of ``blocks`` leaves) are never
+  sharded (the scan carries them);
+* activations/batches shard over ("pod","data");
+* decode caches shard batch over "data" when divisible and the KV sequence
+  axis over "model" (the long-context axis — this is what makes
+  decode_32k x 128 batch fit).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "state_shardings", "path_str"]
+
+
+def path_str(path) -> str:
+    return "/".join(getattr(k, "key", str(k)) for k in path)
+
+
+def _n_stack_dims(pstr: str, hybrid: bool = False) -> int:
+    if "blocks" not in pstr:
+        return 0
+    if hybrid:
+        # jamba sub-stacks carry (P, n_sub, ...) leading dims
+        segs = pstr.split("/")
+        if any(seg in ("mamba", "mlp", "moe") for seg in segs[:-1]):
+            return 2
+    return 1
+
+
+def _largest_divisible_dim(shape, start: int, n_model: int,
+                           prefer: int | None = None) -> int | None:
+    if prefer is not None and prefer < len(shape) and shape[prefer] % n_model == 0:
+        return prefer
+    best, best_size = None, 0
+    for i in range(start, len(shape)):
+        if shape[i] % n_model == 0 and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    return best
+
+
+def _param_pspec(pstr: str, shape, n_model: int, n_data: int = 1,
+                 hybrid: bool = False) -> P:
+    if len(shape) == 0:
+        return P()
+    stack = min(_n_stack_dims(pstr, hybrid), len(shape) - 1)
+    prefer = None
+    leaf = pstr.rsplit("/", 1)[-1]
+    if leaf.startswith("we"):            # experts (.., E, D, F) -> shard E
+        prefer = stack
+    if leaf == "embed":                  # (V, D) -> shard V
+        prefer = 0
+    spec = [None] * len(shape)
+    dim = _largest_divisible_dim(shape, stack, n_model, prefer)
+    if dim is not None:
+        spec[dim] = "model"
+    if n_data > 1:
+        # second FSDP axis: shard another dim over "data" (ZeRO-3 within the
+        # pod; params stay replicated across pods to bound cross-pod traffic)
+        best2, best2_size = None, 0
+        for i in range(stack, len(shape)):
+            if i != dim and shape[i] % n_data == 0 and shape[i] > best2_size:
+                best2, best2_size = i, shape[i]
+        if best2 is not None:
+            spec[best2] = "data"
+    return P(*spec)
+
+
+_TP_LAST = {"wq", "wk", "wv", "w1", "w3", "ws1", "ws3", "ck", "bq", "bk",
+            "bv", "wr", "wg", "in_proj"}
+_TP_FIRST_OF_TAIL = {"wo", "w2", "ws2", "cv", "out_proj"}
+
+
+def _param_pspec_tp(pstr: str, shape, n_model: int, n_data: int,
+                    hybrid: bool = False) -> P:
+    """Megatron-style tensor parallelism: shard heads/ffn dims over "model";
+    params carry no data-axis sharding (pure TP within the pod; optimizer
+    moments still use the 2-axis FSDP rule -> ZeRO-1 reduce-scatter/gather
+    appears once per step instead of per layer)."""
+    if len(shape) == 0:
+        return P()
+    stack = min(_n_stack_dims(pstr, hybrid), len(shape) - 1)
+    leaf = pstr.rsplit("/", 1)[-1]
+    spec = [None] * len(shape)
+    dim = None
+    if leaf in _TP_LAST:
+        dim = len(shape) - 1
+    elif leaf in _TP_FIRST_OF_TAIL:
+        dim = len(shape) - 2
+    elif leaf == "embed":
+        dim = 0
+    elif leaf == "lm_head":
+        dim = 1
+    elif leaf.startswith("we"):
+        dim = stack                      # experts stay expert-parallel
+    if dim is not None and dim >= stack and shape[dim] % n_model == 0:
+        spec[dim] = "model"
+        return P(*spec)
+    # fall back to the FSDP rule when TP does not divide
+    return _param_pspec(pstr, shape, n_model, 1, hybrid)
+
+
+def param_shardings(param_tree, mesh, hybrid: bool = False, mode: str = "fsdp"):
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape.get("data", 1)
+
+    fn = _param_pspec_tp if mode == "tp" else _param_pspec
+
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, fn(path_str(path), leaf.shape, n_model, n_data, hybrid))
+
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def state_shardings(state_tree, mesh, hybrid: bool = False, mode: str = "fsdp"):
+    """Optimizer state mirrors parameter sharding; scalars replicated."""
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        pstr = path_str(path)
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        # m/v/residual trees live under their own key; strip it for the rule
+        is_param = pstr.startswith("params/")
+        for pre in ("m/", "v/", "params/", "residual/"):
+            if pstr.startswith(pre):
+                pstr = pstr[len(pre):]
+        if mode == "tp" and is_param:
+            # compute path uses TP params; moments keep 2-axis ZeRO sharding
+            return NamedSharding(
+                mesh, _param_pspec_tp(pstr, leaf.shape, n_model, n_data, hybrid))
+        return NamedSharding(
+            mesh, _param_pspec(pstr, leaf.shape, n_model, n_data, hybrid))
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+def batch_shardings(batch_tree, mesh):
+    from repro.launch.mesh import batch_axes
+
+    baxes = batch_axes(mesh)
+    n_batch = 1
+    for a in baxes:
+        n_batch *= mesh.shape[a]
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) and shape[0] % n_batch == 0 and shape[0] > 0:
+            spec[0] = baxes if len(baxes) > 1 else baxes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh):
+    """Decode caches: batch -> data (if divisible), KV seq -> model."""
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape["data"]
+
+    def one(path, leaf):
+        pstr = path_str(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        leafname = pstr.rsplit("/", 1)[-1]
+        if leafname in ("k", "v", "xk", "xv"):
+            # (L_or_P, B, S, Hkv, hd)
+            if shape[1] % n_data == 0:
+                spec[1] = "data"
+            if shape[2] % n_model == 0:
+                spec[2] = "model"
+        elif leafname in ("wkv",):        # (L, B, H, hd, hd)
+            if shape[1] % n_data == 0:
+                spec[1] = "data"
+            if shape[2] % n_model == 0:
+                spec[2] = "model"
+        elif leafname in ("ssm", "conv"):  # (P, nm, B, Di, ds) / (P, nm, B, K-1, Di)
+            if shape[2] % n_data == 0:
+                spec[2] = "data"
+            di_dim = 3 if leafname == "ssm" else 4
+            if shape[di_dim] % n_model == 0:
+                spec[di_dim] = "model"
+        else:                              # x_tm/x_cm (L, B, 1, D)
+            if shape[1] % n_data == 0:
+                spec[1] = "data"
+            if shape[-1] % n_model == 0:
+                spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,147 @@
+"""Train-step builder: loss -> grads -> (optional compressed cross-pod
+reduce) -> AdamW, jitted with explicit in/out shardings on the production
+mesh.
+
+The paper-faithful baseline uses plain data parallelism (GSPMD reduces
+gradients over all batch axes).  With ``grad_compress`` set and a "pod" axis
+present, gradients are computed per pod (shard_map manual over "pod", auto
+over "data"/"model"), compressed with the CubismZ codec stack (top-k wavelet
+details with error feedback), summed over the pod interconnect, and
+decompressed — the §Perf collective-bytes optimization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ModelSettings, lm_loss, param_specs
+from .optim import OptConfig, adamw_step, init_opt_state
+from .sharding import batch_shardings, state_shardings
+
+__all__ = ["build_train_step", "train_state_specs", "train_state_shardings"]
+
+
+def train_state_specs(cfg, dtype=jnp.float32, grad_compress=None,
+                      param_dtype=None):
+    p = param_specs(cfg, param_dtype or dtype)
+    mv = param_specs(cfg, dtype)
+    state = {
+        "params": p,
+        "m": mv,
+        "v": mv,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if grad_compress:
+        state["residual"] = mv  # error-feedback memory
+    return state
+
+
+def train_state_shardings(cfg, mesh, grad_compress=None, mode: str = "fsdp",
+                          param_dtype=None):
+    return state_shardings(
+        train_state_specs(cfg, grad_compress=grad_compress,
+                          param_dtype=param_dtype),
+        mesh, hybrid=(cfg.family == "hybrid"), mode=mode)
+
+
+def init_train_state(cfg, key, grad_compress=None):
+    from repro.models import init_params
+
+    params = init_params(cfg, key)
+    state = {"params": params, **init_opt_state(params)}
+    if grad_compress:
+        state["residual"] = jax.tree.map(jnp.zeros_like, params)
+    return state
+
+
+def build_train_step(cfg, mesh, *, settings: ModelSettings = ModelSettings(),
+                     opt: OptConfig = OptConfig(), grad_compress: str | None = None,
+                     donate: bool = True, micro_batches: int = 1,
+                     sharding_mode: str = "fsdp", param_dtype=None):
+    """Returns (jitted_fn, in_shardings, out_shardings).
+
+    jitted_fn(state, batch) -> (state, metrics)
+    """
+    import dataclasses as _dc
+
+    from repro.launch.mesh import batch_axes as _baxes
+
+    baxes = _baxes(mesh)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    settings = _dc.replace(settings, batch_axes=baxes,
+                           n_model=mesh.shape["model"], n_batch=nb)
+    multi_pod = "pod" in mesh.axis_names
+
+    def grads_of(params, batch):
+        """(loss, metrics), grads — with optional microbatch accumulation
+        (gradient accumulation keeps live activation memory ~1/micro_batches;
+        the production fit-guarantee knob for the big train cells)."""
+        if micro_batches == 1:
+            return jax.value_and_grad(
+                lambda p: lm_loss(p, batch, cfg, settings), has_aux=True)(params)
+
+        mb_batch = jax.tree.map(
+            lambda a: a.reshape(micro_batches, a.shape[0] // micro_batches,
+                                *a.shape[1:]), batch)
+
+        def one_micro(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, _), g = jax.value_and_grad(
+                lambda p: lm_loss(p, mb, cfg, settings), has_aux=True)(params)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, loss_acc + loss), None
+
+        g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+        (g_acc, loss_sum), _ = jax.lax.scan(one_micro, (g0, jnp.float32(0)),
+                                            mb_batch)
+        inv = 1.0 / micro_batches
+        grads = jax.tree.map(lambda a: a * inv, g_acc)
+        return (loss_sum * inv, {"ce": loss_sum * inv}), grads
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return lm_loss(p, batch, cfg, settings)
+
+        if grad_compress and multi_pod:
+            from .grad_compress import pod_compressed_grads
+
+            (loss, metrics), grads, residual, cmx = pod_compressed_grads(
+                loss_fn, state["params"], state["residual"], batch, cfg,
+                settings, mesh, method=grad_compress)
+            metrics = {**metrics, **cmx}
+        else:
+            (loss, metrics), grads = grads_of(state["params"], batch)
+            residual = state.get("residual")
+
+        params, opt_state, om = adamw_step(state["params"], grads,
+                                           {"m": state["m"], "v": state["v"],
+                                            "step": state["step"]}, opt)
+        new_state = {"params": params, **opt_state}
+        if residual is not None:
+            new_state["residual"] = residual
+        return new_state, {"loss": loss, **metrics, **om}
+
+    state_sh = train_state_shardings(cfg, mesh, grad_compress=grad_compress,
+                                     mode=sharding_mode, param_dtype=param_dtype)
+
+    def batch_sh(batch_specs):
+        return batch_shardings(batch_specs, mesh)
+
+    def jit_for(batch_specs):
+        metrics_sh = None
+        return jax.jit(
+            train_step,
+            in_shardings=(state_sh, batch_sh(batch_specs)),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,) if donate else (),
+        )
+
+    return train_step, jit_for, state_sh

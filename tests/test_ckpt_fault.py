@@ -1,0 +1,148 @@
+"""Checkpoint/restart, fault tolerance, offsets, data pipeline tests."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import (
+    Checkpointer,
+    latest_step,
+    load_checkpoint,
+    restore_tree,
+    save_checkpoint,
+)
+from repro.core import CompressionSpec
+from repro.data.tokens import DataConfig, batch_at
+from repro.dist.fault import StragglerWatchdog, elastic_plan
+from repro.dist.offsets import exclusive_offsets_np
+
+
+def small_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (64, 32)),
+                   "b": jnp.zeros((32,))},
+        "m": {"w": jnp.ones((64, 32)) * 0.1, "b": jnp.zeros((32,))},
+        "v": {"w": jnp.ones((64, 32)) * 0.2, "b": jnp.zeros((32,))},
+        "step": jnp.int32(7),
+    }
+
+
+def test_checkpoint_roundtrip_lossless(tmp_path):
+    state = small_state()
+    save_checkpoint(str(tmp_path), state, 7)
+    flat, manifest = load_checkpoint(str(tmp_path))
+    assert manifest["step"] == 7
+    restored = restore_tree(state, flat)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["cr"] > 0.9  # random data ~1x; structured params compress
+
+
+def test_checkpoint_atomic_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), every=1, keep=2)
+    st = small_state()
+    for s in (1, 2, 3, 4):
+        ck.maybe_save(st, s)
+    steps = sorted(int(n[5:]) for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert steps == [3, 4]
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    state = small_state()
+    save_checkpoint(str(tmp_path), state, 1)
+    qfile = os.path.join(tmp_path, "step_00000001", "params.czq")
+    with open(qfile, "r+b") as f:
+        f.seek(10)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError):
+        load_checkpoint(str(tmp_path), 1)
+
+
+def test_checkpoint_wavelet_lossy_ckpt(tmp_path):
+    state = {"params": {"w": jnp.asarray(
+        np.random.default_rng(0).standard_normal((32, 32)).astype(np.float32))}}
+    spec = CompressionSpec(scheme="szx", eps=1e-3, block_size=16)
+    save_checkpoint(str(tmp_path), state, 1, spec=spec)
+    flat, m = load_checkpoint(str(tmp_path), 1)
+    err = np.max(np.abs(flat["params/w"] - np.asarray(state["params"]["w"])))
+    assert err <= 1e-3 * 1.01 + 1e-6
+
+
+def test_exclusive_offsets():
+    sizes = [5, 0, 7, 3]
+    np.testing.assert_array_equal(exclusive_offsets_np(sizes), [0, 5, 5, 12])
+
+
+def test_offsets_sharded_matches_np():
+    devs = jax.devices()
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.dist.offsets import exclusive_offsets_sharded
+
+    sizes = jnp.asarray([3, 9, 1, 4], jnp.int32)
+    with mesh:
+        out = exclusive_offsets_sharded(sizes, mesh, "data")
+    np.testing.assert_array_equal(np.asarray(out), [0, 3, 12, 13])
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(window=8, flag_ratio=1.5, redispatch_ratio=3.0)
+    for i in range(10):
+        rep = w.observe(i, 1.0)
+        assert rep.action == "ok"
+    rep = w.observe(10, 2.0)
+    assert rep.action == "flag"
+    rep = w.observe(11, 5.0)
+    assert rep.action == "redispatch"
+    assert len(w.reports) == 2
+
+
+def test_elastic_plan():
+    p = elastic_plan(256, 240, global_batch=256)
+    assert p["mesh_shape"][0] * p["mesh_shape"][1] == 240
+    p = elastic_plan(256, 256, global_batch=256)
+    assert p["mesh_shape"] == (16, 16)
+
+
+def test_data_deterministic_and_learnable_structure():
+    cfg = DataConfig(vocab=64, batch=4, seq=32, seed=9)
+    a = batch_at(cfg, 5)
+    b = batch_at(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_at(cfg, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def _run_train(args, tmp):
+    cmd = [sys.executable, "-m", "repro.launch.train"] + args
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd="/root/repo", timeout=900)
+
+
+@pytest.mark.slow
+def test_train_kill_resume_end_to_end(tmp_path):
+    """Fault injection: die at step 6, resume from the step-5 checkpoint."""
+    ck = str(tmp_path / "ck")
+    base = ["--arch", "smollm-135m", "--reduced", "--steps", "12",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", ck,
+            "--ckpt-every", "5", "--log-every", "4"]
+    r1 = _run_train(base + ["--fail-at-step", "6"], tmp_path)
+    assert r1.returncode == 17, r1.stderr[-2000:]
+    assert latest_step(ck) == 5
+    out = str(tmp_path / "m.json")
+    r2 = _run_train(base + ["--metrics-out", out], tmp_path)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "[resume] from step 5" in r2.stdout
+    with open(out) as f:
+        m = json.load(f)
+    assert m["steps"] == 7  # steps 5..11

@@ -1,0 +1,71 @@
+"""Cavitation generator + mini Euler solver sanity tests."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.fields import (
+    CloudConfig,
+    EulerConfig,
+    cavitation_fields,
+    init_bubble_cloud,
+    primitives,
+    run,
+)
+from repro.fields.euler3d import cfl_dt
+
+
+def test_cavitation_fields_stats():
+    cfg = CloudConfig(n=64, n_bubbles=20)
+    for t in (4.7, 9.4):
+        f = cavitation_fields(cfg, t)
+        assert set(f) == {"p", "rho", "E", "a2"}
+        for q, a in f.items():
+            assert a.shape == (64, 64, 64)
+            assert a.dtype == np.float32
+            assert np.isfinite(a).all(), q
+        assert f["a2"].min() >= 0.0 and f["a2"].max() <= 1.0
+        assert f["p"].min() >= cfg.p_min - 1e-3
+        assert f["rho"].max() <= cfg.rho_liquid * 1.6
+
+
+def test_cavitation_collapse_dynamics():
+    """Bubbles shrink toward collapse -> gas fraction decreases; shocks appear."""
+    cfg = CloudConfig(n=64, n_bubbles=20)
+    early = cavitation_fields(cfg, 1.0)
+    late = cavitation_fields(cfg, 6.5)
+    post = cavitation_fields(cfg, 9.4)
+    assert late["a2"].mean() < early["a2"].mean()
+    assert post["p"].max() > early["p"].max()  # emitted shocks raise peak p
+
+
+def test_cavitation_deterministic():
+    cfg = CloudConfig(n=32, n_bubbles=5)
+    a = cavitation_fields(cfg, 4.7)["p"]
+    b = cavitation_fields(cfg, 4.7)["p"]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_euler_conservation_and_stability():
+    cfg = EulerConfig(n=32, n_bubbles=3)
+    U0 = init_bubble_cloud(cfg)
+    dt = cfl_dt(U0)
+    U = run(U0, steps=20, dt=dt)
+    u = np.asarray(U)
+    assert np.isfinite(u).all()
+    # conservative scheme on a periodic box: totals preserved to fp rounding
+    for comp in range(5):
+        tot0 = float(jnp.sum(U0[comp]))
+        tot1 = float(jnp.sum(U[comp]))
+        scale = max(float(jnp.sum(jnp.abs(U0[comp]))), float(jnp.sum(jnp.abs(U[comp]))), 1.0)
+        assert abs(tot1 - tot0) <= 1e-4 * scale, comp
+    # pressure stays positive
+    _, _, p = primitives(U)
+    assert float(jnp.min(p)) > 0.0
+
+
+def test_euler_waves_propagate():
+    cfg = EulerConfig(n=32, n_bubbles=3)
+    U0 = init_bubble_cloud(cfg)
+    U = run(U0, steps=30)
+    # collapse generates motion: kinetic energy becomes nonzero
+    ke = float(jnp.sum(jnp.asarray(U)[1:4] ** 2))
+    assert ke > 1e-8
