@@ -39,8 +39,9 @@ def run(quick: bool = True):
     cfg = reduced(ARCHS["smollm-135m"])
     st = ModelSettings(q_chunk=16, kv_chunk=32, ce_chunk=32, remat="none",
                        compute_dtype=jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     state = init_train_state(cfg, jax.random.PRNGKey(0))
     dc = DataConfig(vocab=cfg.vocab, batch=4, seq=32)
     _, jit_for, _ = build_train_step(cfg, mesh, settings=st, donate=True)

@@ -29,8 +29,9 @@ from repro.models import ModelSettings, input_batch_specs
 from repro.train.step import build_train_step, train_state_specs, init_train_state
 
 cfg = reduced(ARCHS["smollm-135m"])
-mesh = jax.make_mesh((2, 4, 1), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4, 1), ("pod", "data", "model"))
 st = ModelSettings(q_chunk=16, kv_chunk=16, ce_chunk=32, remat="none",
                    compute_dtype=jnp.float32)
 shape = ShapeConfig("tiny", 64, 8, "train")

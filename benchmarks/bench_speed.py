@@ -6,20 +6,21 @@ from __future__ import annotations
 
 import time
 
-from repro.core import CompressionSpec, compress_field, decompress_field
+from repro.core import CompressionSpec, Pipeline
 
 from .common import dataset, emit, save_json
 
 
 def _timed(field, spec, repeats=1):
+    pipe = Pipeline(spec)
     comp = None
     t0 = time.time()
     for _ in range(repeats):
-        comp = compress_field(field, spec)
+        comp = pipe.compress(field)
     t_c = (time.time() - t0) / repeats
     t0 = time.time()
     for _ in range(repeats):
-        decompress_field(comp)
+        pipe.decompress(comp)
     t_d = (time.time() - t0) / repeats
     mb = field.nbytes / 2**20
     return mb / t_c, mb / t_d, comp.header["raw_bytes"] / comp.nbytes

@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from repro.core import CompressionSpec, analyze_field
+from repro.core import CompressionSpec, Pipeline
 from repro.fields import CloudConfig, cavitation_fields
 
 ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -31,7 +31,7 @@ def sweep(field, specs: list[CompressionSpec]) -> list[dict]:
     rows = []
     for spec in specs:
         t0 = time.time()
-        r = analyze_field(field, spec)
+        r = Pipeline(spec).analyze(field)
         r["time_s"] = time.time() - t0
         r["spec"] = spec.to_json()
         rows.append(r)

@@ -1,12 +1,12 @@
 """Ex-situ compression of CFD output (the CubismZ tool use case):
-compress all four QoIs to CZ containers, then random-access one block
-through the chunk cache without decompressing the file.
+compress all four QoIs into CZ2 containers — the writer streams chunks from
+``Pipeline.iter_chunks``, so the compressed chunk list is never held in
+memory — then random-access one block through the chunk cache without
+decompressing the file.
 
 Run:  PYTHONPATH=src python examples/compress_cfd.py
 """
 import os
-
-import numpy as np
 
 from repro.core import CompressionSpec, container
 from repro.fields import CloudConfig, cavitation_fields
@@ -19,13 +19,16 @@ spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3,
 
 for q, f in fields.items():
     path = os.path.join(out, f"{q}.cz")
+    # streaming write: field -> Pipeline.iter_chunks -> disk, chunk by chunk
     nbytes = container.write_field(path, f, spec)
     print(f"{q:4s}: {f.nbytes/2**20:.1f} MiB -> {nbytes/2**20:.2f} MiB "
           f"(CR {f.nbytes/nbytes:.1f}x) -> {path}")
 
-# random block access via the decompression chunk cache (paper §2.3)
+# random block access via the decompression chunk cache (paper §2.3);
+# the reader dispatches on the scheme recorded in the CZ2 header
 r = container.FieldReader(os.path.join(out, "p.cz"))
 block = r.read_block(1, 0, 1)
 print(f"block (1,0,1): shape {block.shape}, mean {block.mean():.3f}, "
+      f"scheme {r.header['scheme']!r} (format {r.format}), "
       f"cache hits/misses = {r.cache_hits}/{r.cache_misses}")
 r.close()

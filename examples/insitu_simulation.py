@@ -9,7 +9,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import CompressionSpec, compress_field
+from repro.core import CompressionSpec, Pipeline
 from repro.fields import EulerConfig, init_bubble_cloud
 from repro.fields.euler3d import cfl_dt, primitives, run
 
@@ -27,7 +27,8 @@ for snap in range(5):
     p = np.asarray(p, np.float32)
     t0 = time.time()
     eps = 1e-4 * float(p.max() - p.min())
-    comp = compress_field(p, CompressionSpec(scheme="wavelet", eps=eps, block_size=16))
+    comp = Pipeline(CompressionSpec(scheme="wavelet", eps=eps,
+                                    block_size=16)).compress(p)
     io_t += time.time() - t0
     print(f"snapshot {snap}: p in [{p.min():.2f},{p.max():.2f}] "
           f"CR {comp.header['raw_bytes']/comp.nbytes:6.1f}x")

@@ -1,14 +1,17 @@
 """Quickstart: compress a 3D scientific field with every codec in 20 lines.
 
+The scheme registry is open — ``repro.core.schemes.register_scheme`` plugs a
+new compressor into the same ``Pipeline``/container/CLI without touching core.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import CompressionSpec, analyze_field
+from repro.core import CompressionSpec, Pipeline, SCHEMES
 from repro.fields import CloudConfig, cavitation_fields
 
 # a cloud-cavitation pressure snapshot (the paper's flagship dataset)
 field = cavitation_fields(CloudConfig(n=64), t=9.4)["p"]
+
+print(f"registered schemes: {', '.join(sorted(SCHEMES))}\n")
 
 for spec in [
     CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3),   # paper's best
@@ -17,6 +20,6 @@ for spec in [
     CompressionSpec(scheme="szx", eps=1e-3),
     CompressionSpec(scheme="fpzipx", precision=32),                # lossless
 ]:
-    r = analyze_field(field, spec)
+    r = Pipeline(spec).analyze(field)
     print(f"{spec.scheme:8s} eps={spec.eps:g} -> CR {r['cr']:7.2f}x  "
           f"PSNR {r['psnr']:7.2f} dB  max|err| {r['max_err']:.2e}")

@@ -25,7 +25,7 @@ import zlib
 import numpy as np
 import jax
 
-from repro.core import CompressionSpec, compress_blocks, decompress_blocks
+from repro.core import CompressedField, CompressionSpec, Pipeline
 from repro.dist.offsets import exclusive_offsets_np
 
 __all__ = ["Checkpointer", "save_checkpoint", "load_checkpoint", "latest_step"]
@@ -47,7 +47,7 @@ def _to_blocks(arr: np.ndarray) -> tuple[np.ndarray, int]:
     return flat.reshape(-1, _BS, _BS, _BS), pad
 
 
-def _compress_leaf(arr: np.ndarray, spec: CompressionSpec, n_shards: int):
+def _compress_leaf(arr: np.ndarray, pipe: Pipeline, n_shards: int):
     """Returns (list of shard bytes, meta).  Shards emulate per-host writers."""
     if arr.dtype not in (np.float32, np.dtype("float32")):
         raw = arr.tobytes()
@@ -58,18 +58,16 @@ def _compress_leaf(arr: np.ndarray, spec: CompressionSpec, n_shards: int):
     per = max(1, nb // n_shards)
     shards = []
     for lo in range(0, nb, per):
-        comp = compress_blocks(blocks[lo : lo + per], spec)
+        comp = pipe.compress_blocks(blocks[lo : lo + per])
         payload = json.dumps(comp.header).encode() + b"\0" + b"".join(comp.chunks)
         shards.append(payload)
-    return shards, {"codec": spec.scheme, "pad": pad, "dtype": "float32"}
+    return shards, {"codec": pipe.spec.scheme, "pad": pad, "dtype": "float32"}
 
 
 def _decompress_leaf(shard_bufs: list[bytes], meta: dict, shape, dtype):
     if meta["codec"] == "raw+zlib":
         raw = zlib.decompress(shard_bufs[0])
         return np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(shape).copy()
-    from repro.core.codec import CompressedField
-
     blocks = []
     for buf in shard_bufs:
         hdr, rest = buf.split(b"\0", 1)
@@ -78,7 +76,9 @@ def _decompress_leaf(shard_bufs: list[bytes], meta: dict, shape, dtype):
         for sz in header["chunk_sizes"]:
             chunks.append(rest[off : off + sz])
             off += sz
-        blocks.append(decompress_blocks(CompressedField(chunks, header)))
+        comp = CompressedField(chunks, header)
+        # registry-driven decode; header["format"] keeps pre-v2 shards readable
+        blocks.append(Pipeline(comp.spec).decompress_blocks(comp))
     flat = np.concatenate(blocks).reshape(-1)
     if meta.get("pad"):
         flat = flat[: -meta["pad"]] if meta["pad"] else flat
@@ -91,6 +91,7 @@ def save_checkpoint(ckpt_dir: str, state, step: int, *,
     """Write one compressed checkpoint; returns manifest (incl. CR stats)."""
     spec = spec or CompressionSpec(scheme="fpzipx", precision=32,
                                    block_size=_BS, shuffle="byte")
+    pipe = Pipeline(spec)
     tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
@@ -108,7 +109,7 @@ def save_checkpoint(ckpt_dir: str, state, step: int, *,
         entries = []
         bufs = []
         for key, arr in items:
-            shards, meta = _compress_leaf(arr, spec, n_shards)
+            shards, meta = _compress_leaf(arr, pipe, n_shards)
             sizes = [len(s) for s in shards]
             # exclusive prefix-sum offsets (the paper's parallel-write scheme)
             base = sum(len(b) for b in bufs)

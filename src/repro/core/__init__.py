@@ -1,8 +1,32 @@
-"""CubismZ core: block-structured two-substage scientific data compression."""
-from .codec import (  # noqa: F401
-    SCHEMES,
+"""CubismZ core: block-structured two-substage scientific data compression.
+
+Module map:
+
+* ``blocks``     — field <-> (nblk, bs, bs, bs) block layout (cluster layer)
+* ``schemes/``   — open registry of substage-1 compressors (``Scheme`` ABC,
+  ``@register_scheme``); one self-registering module per scheme:
+  ``wavelet``, ``zfpx``, ``szx``, ``fpzipx``, ``raw``.  Third-party schemes
+  plug in without touching core.
+* ``pipeline``   — ``CompressionSpec`` + ``Pipeline``: validated spec bound
+  to its scheme; ``compress``/``decompress`` and the streaming
+  ``iter_chunks`` generator (one aggregation buffer at a time)
+* ``lossless``   — substage-2 host coders (zlib/lzma/bz2/spdp)
+* ``shuffle``    — byte/bit shuffle + low-bit zeroing of value streams
+* ``container``  — CZ2 on-disk format (streaming writer, JSON footer,
+  registry-driven ``FieldReader`` with LRU chunk cache; reads legacy CZ1)
+* ``codec``      — seed-era thin wrappers (``compress_field`` & co.)
+* ``wavelets`` / ``threshold`` / ``zfpx`` / ``szx`` / ``fpzipx`` — the device
+  transform math the built-in schemes call into
+* ``metrics``    — CR / MSE / PSNR
+"""
+from .pipeline import (  # noqa: F401
+    CODEC_FORMAT,
     CompressedField,
     CompressionSpec,
+    Pipeline,
+)
+from .schemes import SCHEMES, Scheme, get_scheme, register_scheme  # noqa: F401
+from .codec import (  # noqa: F401
     analyze_field,
     compress_blocks,
     compress_field,

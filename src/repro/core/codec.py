@@ -1,280 +1,49 @@
-"""Two-substage compression pipeline (paper Fig. 1) + codec registry.
+"""Back-compat codec facade over the scheme registry and Pipeline.
 
-Data flow (mirrors CubismZ):
-
-  field -> blocks -> [substage 1: wavelet+threshold | zfpx | szx | fpzipx]
-        -> per-"thread" aggregation buffers (~4 MB of blocks)
-        -> optional byte shuffle / bit zeroing
-        -> [substage 2: zlib | lzma | bz2 | ...]
-        -> chunk list + JSON header (the file payload)
-
-Substage 1 runs on device (jit; Pallas kernels available in repro.kernels),
-substage 2 and serialization on the host at the I/O boundary — the same
-split the paper uses between its core layer and its cluster-layer writer.
+The two-substage pipeline itself lives in :mod:`repro.core.pipeline`; the
+per-scheme device transforms and byte layouts live in
+:mod:`repro.core.schemes` (one self-registering module per scheme).  This
+module keeps the original seed-era entry points — ``compress_field``,
+``decompress_field``, ``compress_blocks``, ``decompress_blocks``,
+``analyze_field``, ``CompressionSpec`` — as thin wrappers so existing call
+sites keep working unchanged.  New code should use :class:`Pipeline`.
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 from typing import Any
 
 import numpy as np
-import jax.numpy as jnp
 
-from . import blocks as blk
-from . import fpzipx, lossless, metrics
-from . import shuffle as shuf
-from . import szx, threshold, wavelets, zfpx
+from .pipeline import (  # noqa: F401  (re-exports)
+    CODEC_FORMAT,
+    CompressedField,
+    CompressionSpec,
+    Pipeline,
+)
+from .schemes import SCHEMES  # noqa: F401  (live registry view)
 
-__all__ = ["CompressionSpec", "CompressedField", "compress_field", "decompress_field",
-           "compress_blocks", "decompress_blocks", "analyze_field", "SCHEMES"]
-
-SCHEMES = ("wavelet", "zfpx", "szx", "fpzipx", "raw")
-
-
-@dataclasses.dataclass(frozen=True)
-class CompressionSpec:
-    scheme: str = "wavelet"      # wavelet | zfpx | szx | fpzipx | raw
-    wavelet: str = "w3ai"        # w4i | w4l | w3ai
-    eps: float = 1e-3            # absolute error tolerance (wavelet/zfpx/szx)
-    block_size: int = 32
-    levels: int | None = None    # wavelet levels (None = max for block size)
-    shuffle: str = "byte"        # none | byte | bit
-    zero_bits: int = 0           # Z4/Z8 bit zeroing of detail coefficients
-    stage2: str = "zlib"         # see repro.core.lossless.METHODS
-    buffer_bytes: int = 4 << 20  # per-thread aggregation buffer (paper: 4 MB)
-    precision: int = 32          # fpzipx bits of precision (32 = lossless)
-
-    def validate(self) -> "CompressionSpec":
-        if self.scheme not in SCHEMES:
-            raise ValueError(f"unknown scheme {self.scheme}")
-        if self.wavelet not in wavelets.WAVELETS:
-            raise ValueError(f"unknown wavelet {self.wavelet}")
-        if self.shuffle not in ("none", "byte", "bit"):
-            raise ValueError(f"unknown shuffle {self.shuffle}")
-        if self.stage2 not in lossless.METHODS:
-            raise ValueError(f"unknown stage2 {self.stage2}")
-        blk.check_block_size(self.block_size)
-        if self.scheme == "zfpx" and self.block_size % 4:
-            raise ValueError("zfpx needs block_size % 4 == 0")
-        return self
-
-    def to_json(self) -> dict:
-        return dataclasses.asdict(self)
-
-    @staticmethod
-    def from_json(d: dict) -> "CompressionSpec":
-        return CompressionSpec(**d)
-
-
-class CompressedField:
-    """In-memory compressed representation: chunk list + JSON-able header."""
-
-    def __init__(self, chunks: list[bytes], header: dict):
-        self.chunks = chunks
-        self.header = header
-
-    @property
-    def nbytes(self) -> int:
-        return sum(len(c) for c in self.chunks) + len(json.dumps(self.header))
-
-    @property
-    def spec(self) -> CompressionSpec:
-        return CompressionSpec.from_json(self.header["spec"])
-
-
-def _shuffle_bytes(buf: bytes, mode: str, itemsize: int) -> bytes:
-    if mode == "none" or itemsize == 1:
-        return buf
-    fn = shuf.byte_shuffle if mode == "byte" else shuf.bit_shuffle
-    return fn(buf, itemsize)
-
-
-def _unshuffle_bytes(buf: bytes, mode: str, itemsize: int) -> bytes:
-    if mode == "none" or itemsize == 1:
-        return buf
-    fn = shuf.byte_unshuffle if mode == "byte" else shuf.bit_unshuffle
-    return fn(buf, itemsize)
-
-
-# ---------------------------------------------------------------------------
-# Substage 1 — device transforms (whole block batch at once)
-# ---------------------------------------------------------------------------
-
-def _stage1(blocks_np: np.ndarray, spec: CompressionSpec) -> dict[str, np.ndarray]:
-    x = jnp.asarray(blocks_np, jnp.float32)
-    n = spec.block_size
-    if spec.scheme == "wavelet":
-        coeffs = wavelets.forward3d(x, spec.wavelet, spec.levels)
-        mask = threshold.significant_mask(coeffs, spec.eps, spec.levels)
-        c = wavelets.coarse_side(n, spec.levels)
-        return {
-            "mask": np.asarray(mask),
-            "coeffs": np.asarray(coeffs),
-            "coarse": np.asarray(coeffs[..., :c, :c, :c]),
-        }
-    if spec.scheme == "zfpx":
-        emax, q = zfpx.encode(x, eps=spec.eps)
-        return {"emax": np.asarray(emax), "q": np.asarray(q)}
-    if spec.scheme == "szx":
-        szx.check_eps(float(jnp.max(jnp.abs(x))), spec.eps)
-        return {"res": np.asarray(szx.encode(x, eps=spec.eps))}
-    if spec.scheme == "fpzipx":
-        return {"delta": np.asarray(fpzipx.encode(x, precision=spec.precision))}
-    return {"raw": np.asarray(x)}  # scheme == "raw"
-
-
-# ---------------------------------------------------------------------------
-# Chunk serialization (host) — one aggregation buffer at a time
-# ---------------------------------------------------------------------------
-
-def _serialize_chunk(s1: dict, lo: int, hi: int, spec: CompressionSpec) -> bytes:
-    if spec.scheme == "wavelet":
-        mask = s1["mask"][lo:hi]
-        coeffs = s1["coeffs"][lo:hi]
-        coarse = s1["coarse"][lo:hi].astype(np.float32)
-        details = coeffs[mask].astype(np.float32)
-        if spec.zero_bits:
-            details = shuf.zero_low_bits_np(details, spec.zero_bits)
-        counts = mask.reshape(mask.shape[0], -1).sum(-1).astype(np.uint32)
-        values = np.concatenate([coarse.reshape(-1), details])
-        payload = (
-            counts.tobytes()
-            + np.packbits(mask.reshape(-1)).tobytes()
-            + _shuffle_bytes(values.tobytes(), spec.shuffle, 4)
-        )
-    elif spec.scheme == "zfpx":
-        emax = np.clip(s1["emax"][lo:hi], -127, 127).astype(np.int8)
-        q = s1["q"][lo:hi].astype(np.int32)
-        payload = emax.tobytes() + _shuffle_bytes(q.tobytes(), spec.shuffle, 4)
-    elif spec.scheme == "szx":
-        r = s1["res"][lo:hi].reshape(-1)
-        small = np.abs(r) <= 127
-        stream = np.where(small, r, -128).astype(np.int8)
-        outliers = r[~small].astype(np.int32)
-        payload = (
-            np.uint32(outliers.size).tobytes()
-            + stream.tobytes()
-            + outliers.tobytes()
-        )
-    elif spec.scheme == "fpzipx":
-        d = s1["delta"][lo:hi].astype(np.uint32)
-        payload = _shuffle_bytes(d.tobytes(), spec.shuffle, 4)
-    else:  # raw
-        payload = _shuffle_bytes(s1["raw"][lo:hi].astype(np.float32).tobytes(), spec.shuffle, 4)
-    return lossless.encode(payload, spec.stage2)
-
-
-def _deserialize_chunk(buf: bytes, nblk: int, spec: CompressionSpec) -> np.ndarray:
-    n = spec.block_size
-    payload = lossless.decode(buf, spec.stage2)
-    if spec.scheme == "wavelet":
-        c = wavelets.coarse_side(n, spec.levels)
-        counts = np.frombuffer(payload[: 4 * nblk], np.uint32)
-        off = 4 * nblk
-        mask_bytes = nblk * n * n * n // 8
-        mask = np.unpackbits(np.frombuffer(payload[off : off + mask_bytes], np.uint8))
-        mask = mask[: nblk * n * n * n].astype(bool).reshape(nblk, n, n, n)
-        off += mask_bytes
-        values = np.frombuffer(
-            _unshuffle_bytes(payload[off:], spec.shuffle, 4), np.float32
-        )
-        ncoarse = nblk * c * c * c
-        coarse = values[:ncoarse].reshape(nblk, c, c, c)
-        details = values[ncoarse:]
-        coeffs = np.zeros((nblk, n, n, n), np.float32)
-        coeffs[mask] = details
-        coeffs[:, :c, :c, :c] = coarse
-        out = wavelets.inverse3d(jnp.asarray(coeffs), spec.wavelet, spec.levels)
-        return np.asarray(out)
-    if spec.scheme == "zfpx":
-        nc = (n // 4) ** 3
-        emax = np.frombuffer(payload[: nblk * nc], np.int8).astype(np.int32)
-        q = np.frombuffer(
-            _unshuffle_bytes(payload[nblk * nc :], spec.shuffle, 4), np.int32
-        )
-        emax = emax.reshape(nblk, nc)
-        q = q.reshape(nblk, nc, 64)
-        return np.asarray(zfpx.decode(jnp.asarray(emax), jnp.asarray(q), eps=spec.eps, n=n))
-    if spec.scheme == "szx":
-        n_out = int(np.frombuffer(payload[:4], np.uint32)[0])
-        nvals = nblk * n * n * n
-        stream = np.frombuffer(payload[4 : 4 + nvals], np.int8)
-        outliers = np.frombuffer(payload[4 + nvals : 4 + nvals + 4 * n_out], np.int32)
-        r = stream.astype(np.int32)
-        esc = stream == -128
-        r[esc] = outliers
-        r = r.reshape(nblk, n, n, n)
-        return np.asarray(szx.decode(jnp.asarray(r), eps=spec.eps))
-    if spec.scheme == "fpzipx":
-        d = np.frombuffer(_unshuffle_bytes(payload, spec.shuffle, 4), np.uint32)
-        d = d.reshape(nblk, n, n, n)
-        return np.asarray(fpzipx.decode(jnp.asarray(d)))
-    raw = np.frombuffer(_unshuffle_bytes(payload, spec.shuffle, 4), np.float32)
-    return raw.reshape(nblk, n, n, n).copy()
-
-
-# ---------------------------------------------------------------------------
-# Public API
-# ---------------------------------------------------------------------------
-
-def _blocks_per_chunk(spec: CompressionSpec) -> int:
-    raw_block = 4 * spec.block_size ** 3
-    return max(1, spec.buffer_bytes // raw_block)
+__all__ = ["CompressionSpec", "CompressedField", "Pipeline", "CODEC_FORMAT",
+           "compress_field", "decompress_field", "compress_blocks",
+           "decompress_blocks", "analyze_field", "SCHEMES"]
 
 
 def compress_blocks(blocks_np: np.ndarray, spec: CompressionSpec,
                     extra_header: dict | None = None) -> CompressedField:
-    spec = spec.validate()
-    nblocks = blocks_np.shape[0]
-    s1 = _stage1(blocks_np, spec)
-    bpc = _blocks_per_chunk(spec)
-    chunks, chunk_nblocks = [], []
-    for lo in range(0, nblocks, bpc):
-        hi = min(lo + bpc, nblocks)
-        chunks.append(_serialize_chunk(s1, lo, hi, spec))
-        chunk_nblocks.append(hi - lo)
-    header = {
-        "spec": spec.to_json(),
-        "nblocks": nblocks,
-        "chunk_nblocks": chunk_nblocks,
-        "chunk_sizes": [len(c) for c in chunks],
-        "raw_bytes": int(blocks_np.size * 4),
-    }
-    if extra_header:
-        header.update(extra_header)
-    return CompressedField(chunks, header)
+    return Pipeline(spec).compress_blocks(blocks_np, extra_header)
 
 
 def decompress_blocks(comp: CompressedField) -> np.ndarray:
-    spec = comp.spec
-    outs = [
-        _deserialize_chunk(buf, nb, spec)
-        for buf, nb in zip(comp.chunks, comp.header["chunk_nblocks"])
-    ]
-    return np.concatenate(outs, axis=0)
+    return Pipeline(comp.spec).decompress_blocks(comp)
 
 
 def compress_field(field: np.ndarray, spec: CompressionSpec) -> CompressedField:
-    spec = spec.validate()
-    blocks_np = np.asarray(blk.blockify(np.asarray(field, np.float32), spec.block_size))
-    return compress_blocks(blocks_np, spec, extra_header={"field_shape": list(field.shape)})
+    return Pipeline(spec).compress_field(field)
 
 
 def decompress_field(comp: CompressedField) -> np.ndarray:
-    blocks_np = decompress_blocks(comp)
-    return np.asarray(blk.unblockify(blocks_np, tuple(comp.header["field_shape"])))
+    return Pipeline(comp.spec).decompress(comp)
 
 
 def analyze_field(field: np.ndarray, spec: CompressionSpec) -> dict[str, Any]:
     """Compress + decompress + measure (CR, PSNR, error bound) in one call."""
-    comp = compress_field(field, spec)
-    dec = decompress_field(comp)
-    return {
-        "cr": metrics.compression_ratio(comp.header["raw_bytes"], comp.nbytes),
-        "psnr": metrics.psnr(field, dec),
-        "max_err": float(np.max(np.abs(np.asarray(field) - dec))),
-        "comp_bytes": comp.nbytes,
-        "raw_bytes": comp.header["raw_bytes"],
-        "spec": spec,
-    }
+    return Pipeline(spec).analyze(field)

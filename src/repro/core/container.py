@@ -1,10 +1,27 @@
 """CZ container: single file per quantity, chunked, random-access decompress.
 
-Mirrors CubismZ's output format design: one shared file per quantity with a
-metadata header, followed by independently-decompressible chunks (the
-per-thread aggregation buffers).  The reader keeps an LRU cache of recently
-decompressed chunks so neighbouring block fetches hit the cache instead of
-re-inflating (paper §2.3 "Data decompression").
+Mirrors CubismZ's output format design: one shared file per quantity with
+independently-decompressible chunks (the per-thread aggregation buffers).
+
+Two on-disk layouts:
+
+* **CZ2** (current, written) — ``b"CZ2\\0"`` magic, a u64 pointer to a JSON
+  *footer*, then the chunk data, then the footer.  Because the metadata
+  (chunk sizes, CRCs, scheme name + params) comes last, the writer streams
+  chunks straight from :meth:`Pipeline.iter_chunks` and patches the pointer
+  at the end — the compressed chunk list is never materialized (only one
+  compressed chunk is held at a time, beyond the stage-1 transform output
+  for the batch), the paper's per-thread-buffer writer.
+* **CZ1** (legacy, read-only) — ``b"CZ1\\0"`` magic with the JSON header up
+  front.  Seed-era files read back bit-exact: a missing ``format`` field in
+  the header marks the v1 chunk byte layout and decode dispatches through
+  ``Scheme.decode_spec``.
+
+The reader keeps an LRU cache of recently decompressed chunks so
+neighbouring block fetches hit the cache instead of re-inflating
+(paper §2.3 "Data decompression").  Decode is registry-driven: any scheme
+recorded in the header — including third-party ones registered via
+``repro.core.schemes.register_scheme`` — round-trips.
 """
 from __future__ import annotations
 
@@ -12,54 +29,138 @@ import collections
 import json
 import struct
 import zlib
+from typing import Iterable, Iterator
 
 import numpy as np
 
 from . import blocks as blk
-from .codec import CompressedField, CompressionSpec, compress_field, _deserialize_chunk
+from .pipeline import CompressedField, CompressionSpec, Pipeline
 
-__all__ = ["write_field", "read_field", "FieldReader", "MAGIC"]
+__all__ = ["write_field", "write_compressed", "read_field", "FieldReader",
+           "MAGIC", "MAGIC_V1"]
 
-MAGIC = b"CZ1\0"
+MAGIC = b"CZ2\0"
+MAGIC_V1 = b"CZ1\0"
+_FOOTER_PTR = struct.Struct("<Q")
 
 
-def write_compressed(path: str, comp: CompressedField) -> int:
-    """Write a CompressedField; returns total bytes written."""
-    header = dict(comp.header)
-    header["chunk_crc32"] = [zlib.crc32(c) & 0xFFFFFFFF for c in comp.chunks]
-    hbytes = json.dumps(header).encode()
+def _write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
+                  base_header: dict) -> int:
+    """Stream ``(chunk, nblk)`` pairs to a CZ2 file; one chunk in memory."""
+    sizes: list[int] = []
+    nblks: list[int] = []
+    crcs: list[int] = []
     with open(path, "wb") as f:
         f.write(MAGIC)
-        f.write(struct.pack("<Q", len(hbytes)))
+        f.write(_FOOTER_PTR.pack(0))  # patched once the footer offset is known
+        for chunk, nblk in chunk_iter:
+            f.write(chunk)
+            sizes.append(len(chunk))
+            nblks.append(nblk)
+            crcs.append(zlib.crc32(chunk) & 0xFFFFFFFF)
+        header = dict(base_header)
+        header.update({
+            "nblocks": int(sum(nblks)),
+            "chunk_nblocks": nblks,
+            "chunk_sizes": sizes,
+            "chunk_crc32": crcs,
+        })
+        footer_off = f.tell()
+        hbytes = json.dumps(header).encode()
         f.write(hbytes)
-        for c in comp.chunks:
-            f.write(c)
-    return len(MAGIC) + 8 + len(hbytes) + sum(len(c) for c in comp.chunks)
+        f.seek(len(MAGIC))
+        f.write(_FOOTER_PTR.pack(footer_off))
+    return len(MAGIC) + 8 + sum(sizes) + len(hbytes)
+
+
+def write_compressed(path: str, source, spec: CompressionSpec | None = None,
+                     extra_header: dict | None = None) -> int:
+    """Write a CZ2 container; returns total bytes written.
+
+    ``source`` is either a 3D field / 4D block batch compressed on the fly
+    through :meth:`Pipeline.iter_chunks` (streaming — the whole chunk list is
+    never materialized), or an already-built :class:`CompressedField`.
+    """
+    if isinstance(source, CompressedField):
+        header = dict(source.header)
+        for k in ("chunk_nblocks", "chunk_sizes", "chunk_crc32", "nblocks"):
+            header.pop(k, None)
+        pairs = zip(source.chunks, source.header["chunk_nblocks"])
+        return _write_stream(path, pairs, header)
+
+    if spec is None:
+        raise TypeError("spec is required when writing a raw field/blocks")
+    pipe = Pipeline(spec)
+    data = np.asarray(source)
+    header = pipe.base_header()
+    if data.ndim == 3:
+        header["field_shape"] = list(data.shape)
+        data = np.asarray(
+            blk.blockify(np.asarray(data, np.float32), spec.block_size))
+    elif data.ndim != 4:
+        raise ValueError(f"expected 3D field or 4D block batch, got {data.shape}")
+    header["raw_bytes"] = int(data.size * 4)
+    if extra_header:
+        header.update(extra_header)
+    return _write_stream(path, pipe.iter_chunks(data), header)
 
 
 def write_field(path: str, field: np.ndarray, spec: CompressionSpec) -> int:
-    return write_compressed(path, compress_field(field, spec))
+    return write_compressed(path, field, spec)
 
 
 def _read_header(f) -> tuple[dict, int]:
-    if f.read(4) != MAGIC:
-        raise ValueError("not a CZ container")
-    (hlen,) = struct.unpack("<Q", f.read(8))
-    header = json.loads(f.read(hlen))
-    return header, 12 + hlen
+    """Dispatch on magic; returns (header, data_start)."""
+    magic = f.read(4)
+    try:
+        if magic == MAGIC_V1:
+            (hlen,) = _FOOTER_PTR.unpack(f.read(8))
+            header = json.loads(f.read(hlen))
+            header.setdefault("format", 1)
+            return header, 12 + hlen
+        if magic == MAGIC:
+            (footer_off,) = _FOOTER_PTR.unpack(f.read(8))
+            f.seek(footer_off)
+            header = json.loads(f.read())
+            return header, 12
+    except (struct.error, UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise IOError(f"corrupt container metadata: {e}") from None
+    raise ValueError("not a CZ container")
+
+
+def iter_compressed(path: str) -> Iterator[tuple[bytes, int]]:
+    """Stream ``(chunk, nblk)`` pairs out of a container, CRC-checked."""
+    with open(path, "rb") as f:
+        header, data_start = _read_header(f)
+        f.seek(data_start)
+        for sz, nblk, crc in zip(header["chunk_sizes"], header["chunk_nblocks"],
+                                 header["chunk_crc32"]):
+            chunk = f.read(sz)
+            if (zlib.crc32(chunk) & 0xFFFFFFFF) != crc:
+                raise IOError("chunk CRC mismatch — corrupt container")
+            yield chunk, nblk
 
 
 def read_field(path: str) -> np.ndarray:
+    """Decompress a whole container: the field, or raw blocks if the file was
+    written from a block batch (no ``field_shape`` recorded)."""
     with open(path, "rb") as f:
-        header, off = _read_header(f)
-        chunks = [f.read(sz) for sz in header["chunk_sizes"]]
-    for c, crc in zip(chunks, header["chunk_crc32"]):
-        if (zlib.crc32(c) & 0xFFFFFFFF) != crc:
-            raise IOError("chunk CRC mismatch — corrupt container")
-    comp = CompressedField(chunks, header)
-    from .codec import decompress_field
-
-    return decompress_field(comp)
+        header, data_start = _read_header(f)
+        pipe = Pipeline(CompressionSpec.from_json(header["spec"]))
+        fmt = int(header.get("format", 1))
+        f.seek(data_start)
+        outs = []
+        for sz, nblk, crc in zip(header["chunk_sizes"], header["chunk_nblocks"],
+                                 header["chunk_crc32"]):
+            chunk = f.read(sz)
+            if (zlib.crc32(chunk) & 0xFFFFFFFF) != crc:
+                raise IOError("chunk CRC mismatch — corrupt container")
+            outs.append(pipe.decompress_chunk(chunk, nblk, fmt))
+    blocks = np.concatenate(outs)
+    shape = header.get("field_shape")
+    if shape is None:
+        return blocks
+    return np.asarray(blk.unblockify(blocks, tuple(shape)))
 
 
 class FieldReader:
@@ -69,10 +170,17 @@ class FieldReader:
         self._f = open(path, "rb")
         self.header, data_start = _read_header(self._f)
         self.spec = CompressionSpec.from_json(self.header["spec"])
+        self.format = int(self.header.get("format", 1))
+        self._pipe = Pipeline(self.spec)
         sizes = self.header["chunk_sizes"]
         self._chunk_off = np.concatenate([[0], np.cumsum(sizes)])[:-1] + data_start
         self._chunk_nblk = self.header["chunk_nblocks"]
         self._blk0 = np.concatenate([[0], np.cumsum(self._chunk_nblk)])
+        if "field_shape" not in self.header:
+            self._f.close()
+            raise ValueError(
+                "container was written from a block batch (no field_shape); "
+                "use read_field for raw blocks")
         self.shape = tuple(self.header["field_shape"])
         self.nb = blk.num_blocks(self.shape, self.spec.block_size)
         self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
@@ -91,7 +199,7 @@ class FieldReader:
         self.cache_misses += 1
         self._f.seek(self._chunk_off[ci])
         buf = self._f.read(self.header["chunk_sizes"][ci])
-        out = _deserialize_chunk(buf, self._chunk_nblk[ci], self.spec)
+        out = self._pipe.decompress_chunk(buf, self._chunk_nblk[ci], self.format)
         self._cache[ci] = out
         while len(self._cache) > self._cache_chunks:
             self._cache.popitem(last=False)

@@ -1,0 +1,218 @@
+"""Streaming two-substage compression pipeline over the scheme registry.
+
+Data flow (paper Fig. 1, mirrors CubismZ):
+
+  field -> blocks -> [substage 1: any registered Scheme, on device]
+        -> per-"thread" aggregation buffers (~4 MB of blocks)
+        -> scheme byte layout (+ optional byte/bit shuffle)
+        -> [substage 2: zlib | lzma | bz2 | ... on the host]
+        -> chunk stream + JSON-able header
+
+:class:`Pipeline` binds a validated :class:`CompressionSpec` to its
+:class:`~repro.core.schemes.Scheme` and exposes both a materializing API
+(``compress``/``decompress``) and a streaming one (``iter_chunks``) that
+yields compressed chunks one aggregation buffer at a time — the CZ2
+container writer consumes it without ever materializing the chunk list
+(the paper's per-thread-buffer writer).  Note the stage-1 transform still
+runs over the whole block batch on device before the first chunk is
+emitted; chunked stage 1 is a ROADMAP item.
+
+``CODEC_FORMAT`` versions the chunk byte layout; headers record it so old
+payloads decode bit-exact after layout changes (``Scheme.decode_spec``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterator
+
+import numpy as np
+
+from . import blocks as blk
+from . import lossless, metrics
+from .schemes import SCHEMES, Scheme, get_scheme  # noqa: F401  (re-export)
+
+__all__ = ["CODEC_FORMAT", "CompressionSpec", "CompressedField", "Pipeline"]
+
+#: version of the per-chunk byte layout (v2: szx shuffles its outlier stream)
+CODEC_FORMAT = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    scheme: str = "wavelet"      # any name in repro.core.schemes.SCHEMES
+    wavelet: str = "w3ai"        # w4i | w4l | w3ai
+    eps: float = 1e-3            # absolute error tolerance (wavelet/zfpx/szx)
+    block_size: int = 32
+    levels: int | None = None    # wavelet levels (None = max for block size)
+    shuffle: str = "byte"        # none | byte | bit
+    zero_bits: int = 0           # Z4/Z8 bit zeroing of detail coefficients
+    stage2: str = "zlib"         # see repro.core.lossless.METHODS
+    buffer_bytes: int = 4 << 20  # per-thread aggregation buffer (paper: 4 MB)
+    precision: int = 32          # fpzipx bits of precision (32 = lossless)
+    extra: dict = dataclasses.field(default_factory=dict)  # third-party knobs
+
+    def __hash__(self):
+        # the generated hash would choke on the mutable `extra` dict; keep
+        # specs usable as dict/set keys and lru_cache arguments
+        return hash(tuple(
+            tuple(sorted(v.items())) if isinstance(v, dict) else v
+            for v in dataclasses.astuple(self)
+        ))
+
+    def validate(self) -> "CompressionSpec":
+        if self.shuffle not in ("none", "byte", "bit"):
+            raise ValueError(f"unknown shuffle {self.shuffle}")
+        if self.stage2 not in lossless.METHODS:
+            raise ValueError(f"unknown stage2 {self.stage2}")
+        blk.check_block_size(self.block_size)
+        get_scheme(self.scheme).validate(self)
+        return self
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "CompressionSpec":
+        return CompressionSpec(**d)
+
+
+class CompressedField:
+    """In-memory compressed representation: chunk list + JSON-able header."""
+
+    def __init__(self, chunks: list[bytes], header: dict):
+        self.chunks = chunks
+        self.header = header
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(c) for c in self.chunks) + len(json.dumps(self.header))
+
+    @property
+    def spec(self) -> CompressionSpec:
+        return CompressionSpec.from_json(self.header["spec"])
+
+    @property
+    def format(self) -> int:
+        """Chunk byte-layout version (headers before CZ2 carried none)."""
+        return int(self.header.get("format", 1))
+
+
+class Pipeline:
+    """A validated spec bound to its registered scheme; the one compression
+    path every public entry point (functions, container, CLI, ckpt) uses."""
+
+    def __init__(self, spec: CompressionSpec):
+        self.spec = spec.validate()
+        self.scheme: Scheme = get_scheme(spec.scheme)
+
+    # -- layout ------------------------------------------------------------
+
+    @property
+    def blocks_per_chunk(self) -> int:
+        raw_block = 4 * self.spec.block_size ** 3
+        return max(1, self.spec.buffer_bytes // raw_block)
+
+    def base_header(self) -> dict:
+        """Self-describing header stub: scheme name + params are explicit so
+        readers dispatch through the registry without guessing."""
+        return {
+            "format": CODEC_FORMAT,
+            "scheme": self.spec.scheme,
+            "scheme_params": self.scheme.params(self.spec),
+            "spec": self.spec.to_json(),
+        }
+
+    # -- compression -------------------------------------------------------
+
+    def iter_chunks(self, blocks_np: np.ndarray) -> Iterator[tuple[bytes, int]]:
+        """Yield ``(chunk_bytes, n_blocks)`` one aggregation buffer at a time.
+
+        Substage 1 runs once over the whole batch on device (its output stays
+        resident for the generator's lifetime); serialization and substage 2
+        stream chunk-by-chunk, so a consumer writing to disk never holds more
+        than one *compressed* chunk.
+        """
+        spec = self.spec
+        blocks_np = np.asarray(blocks_np)
+        s1 = self.scheme.stage1(blocks_np, spec)
+        bpc = self.blocks_per_chunk
+        for lo in range(0, blocks_np.shape[0], bpc):
+            hi = min(lo + bpc, blocks_np.shape[0])
+            payload = self.scheme.serialize(s1, lo, hi, spec)
+            yield lossless.encode(payload, spec.stage2), hi - lo
+
+    def compress_blocks(self, blocks_np: np.ndarray,
+                        extra_header: dict | None = None) -> CompressedField:
+        blocks_np = np.asarray(blocks_np)
+        chunks, chunk_nblocks = [], []
+        for chunk, nblk in self.iter_chunks(blocks_np):
+            chunks.append(chunk)
+            chunk_nblocks.append(nblk)
+        header = self.base_header()
+        header.update({
+            "nblocks": int(blocks_np.shape[0]),
+            "chunk_nblocks": chunk_nblocks,
+            "chunk_sizes": [len(c) for c in chunks],
+            "raw_bytes": int(blocks_np.size * 4),
+        })
+        if extra_header:
+            header.update(extra_header)
+        return CompressedField(chunks, header)
+
+    def compress_field(self, field: np.ndarray,
+                       extra_header: dict | None = None) -> CompressedField:
+        blocks_np = np.asarray(
+            blk.blockify(np.asarray(field, np.float32), self.spec.block_size))
+        hdr = {"field_shape": list(field.shape)}
+        if extra_header:
+            hdr.update(extra_header)
+        return self.compress_blocks(blocks_np, hdr)
+
+    def compress(self, data: np.ndarray,
+                 extra_header: dict | None = None) -> CompressedField:
+        """Compress a 3D field or a (nblk, bs, bs, bs) block batch."""
+        data = np.asarray(data)
+        if data.ndim == 3:
+            return self.compress_field(data, extra_header)
+        if data.ndim == 4:
+            return self.compress_blocks(data, extra_header)
+        raise ValueError(f"expected 3D field or 4D block batch, got {data.shape}")
+
+    # -- decompression -----------------------------------------------------
+
+    def decompress_chunk(self, buf: bytes, nblk: int,
+                         fmt: int = CODEC_FORMAT) -> np.ndarray:
+        spec = self.scheme.decode_spec(self.spec, fmt)
+        payload = lossless.decode(buf, spec.stage2)
+        return self.scheme.deserialize(payload, nblk, spec)
+
+    def decompress_blocks(self, comp: CompressedField) -> np.ndarray:
+        outs = [
+            self.decompress_chunk(buf, nb, comp.format)
+            for buf, nb in zip(comp.chunks, comp.header["chunk_nblocks"])
+        ]
+        return np.concatenate(outs, axis=0)
+
+    def decompress(self, comp: CompressedField) -> np.ndarray:
+        """Blocks back, or the reassembled field if the header recorded one."""
+        blocks_np = self.decompress_blocks(comp)
+        shape = comp.header.get("field_shape")
+        if shape is None:
+            return blocks_np
+        return np.asarray(blk.unblockify(blocks_np, tuple(shape)))
+
+    # -- analysis ----------------------------------------------------------
+
+    def analyze(self, field: np.ndarray) -> dict[str, Any]:
+        """Compress + decompress + measure (CR, PSNR, error bound)."""
+        comp = self.compress_field(field)
+        dec = self.decompress(comp)
+        return {
+            "cr": metrics.compression_ratio(comp.header["raw_bytes"], comp.nbytes),
+            "psnr": metrics.psnr(field, dec),
+            "max_err": float(np.max(np.abs(np.asarray(field) - dec))),
+            "comp_bytes": comp.nbytes,
+            "raw_bytes": comp.header["raw_bytes"],
+            "spec": self.spec,
+        }

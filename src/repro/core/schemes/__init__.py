@@ -1,0 +1,132 @@
+"""Open codec-scheme registry (the pluggable substage-1 layer).
+
+The paper's framework is a *testbed of comparison*: wavelet, ZFP-, SZ- and
+FPZIP-style compressors plug interchangeably into one block-structured
+pipeline.  This package makes that pluggability literal, in the spirit of
+Zarr's codec registry: each scheme is a self-describing object that owns
+
+  * ``validate(spec)``  — scheme-specific spec checks,
+  * ``stage1(blocks, spec)`` — the device (jit/Pallas) transform over a whole
+    block batch, returning named numpy streams,
+  * ``serialize(s1, lo, hi, spec)`` / ``deserialize(payload, nblk, spec)`` —
+    the host byte layout of one aggregation-buffer chunk (stage-2 lossless
+    coding is applied *outside*, by :class:`repro.core.pipeline.Pipeline`).
+
+Third-party schemes register with :func:`register_scheme` and immediately
+work through ``Pipeline``, the CZ2 container and the CLI — no core edits.
+``SCHEMES`` is a live, read-only view of the registry (iterates names).
+"""
+from __future__ import annotations
+
+import abc
+from collections.abc import Mapping
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from .. import shuffle as _shuf
+
+if TYPE_CHECKING:  # avoid a runtime cycle with repro.core.pipeline
+    from ..pipeline import CompressionSpec
+
+__all__ = ["Scheme", "SCHEMES", "register_scheme", "unregister_scheme",
+           "get_scheme", "shuffle_bytes", "unshuffle_bytes"]
+
+_REGISTRY: dict[str, "Scheme"] = {}
+
+
+def shuffle_bytes(buf: bytes, mode: str, itemsize: int) -> bytes:
+    """Optional byte/bit transpose of a value stream (improves stage 2 CR)."""
+    if mode == "none" or itemsize == 1:
+        return buf
+    fn = _shuf.byte_shuffle if mode == "byte" else _shuf.bit_shuffle
+    return fn(buf, itemsize)
+
+
+def unshuffle_bytes(buf: bytes, mode: str, itemsize: int) -> bytes:
+    if mode == "none" or itemsize == 1:
+        return buf
+    fn = _shuf.byte_unshuffle if mode == "byte" else _shuf.bit_unshuffle
+    return fn(buf, itemsize)
+
+
+class Scheme(abc.ABC):
+    """One substage-1 compressor: device transform + host byte layout."""
+
+    #: registry key; also recorded in CZ2 headers
+    name: str = ""
+
+    def validate(self, spec: "CompressionSpec") -> None:
+        """Raise ValueError if ``spec`` is invalid for this scheme."""
+
+    def params(self, spec: "CompressionSpec") -> dict:
+        """Scheme-relevant knobs, recorded explicitly in container headers."""
+        return dict(spec.extra) if spec.extra else {}
+
+    def decode_spec(self, spec: "CompressionSpec", fmt: int) -> "CompressionSpec":
+        """Spec to decode a payload written under container format ``fmt``.
+
+        Lets a scheme change its byte layout across format bumps while old
+        containers keep reading bit-exact (see szx's outlier shuffle in v2).
+        """
+        return spec
+
+    @abc.abstractmethod
+    def stage1(self, blocks_np: np.ndarray, spec: "CompressionSpec") -> dict[str, np.ndarray]:
+        """Device transform of a whole (nblk, bs, bs, bs) batch -> streams."""
+
+    @abc.abstractmethod
+    def serialize(self, s1: dict, lo: int, hi: int, spec: "CompressionSpec") -> bytes:
+        """Byte layout of blocks [lo, hi) from the stage-1 streams."""
+
+    @abc.abstractmethod
+    def deserialize(self, payload: bytes, nblk: int, spec: "CompressionSpec") -> np.ndarray:
+        """Inverse of :meth:`serialize`: payload -> (nblk, bs, bs, bs) blocks."""
+
+
+def register_scheme(cls: type) -> type:
+    """Class decorator: instantiate and add to the live registry."""
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def unregister_scheme(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_scheme(name: str) -> Scheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; registered: {', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+class _SchemesView(Mapping):
+    """Live, read-only view of the registry.  Iterates scheme names, so both
+    ``"wavelet" in SCHEMES`` and ``for name in SCHEMES`` keep working."""
+
+    def __getitem__(self, name: str) -> Scheme:
+        return get_scheme(name)
+
+    def __iter__(self):
+        return iter(_REGISTRY)
+
+    def __len__(self) -> int:
+        return len(_REGISTRY)
+
+    def __contains__(self, name) -> bool:
+        return name in _REGISTRY
+
+    def __repr__(self) -> str:
+        return f"SCHEMES({', '.join(sorted(_REGISTRY))})"
+
+
+SCHEMES = _SchemesView()
+
+# Built-in schemes self-register on import.
+from . import fpzipx, raw, szx, wavelet, zfpx  # noqa: E402,F401

@@ -1,0 +1,34 @@
+"""FPZIP-style lossless/near-lossless scheme: predictive delta coding of the
+monotone ordered-uint mapping of float32 (bit-exact at precision=32).
+
+Byte layout per chunk: one shuffled u32 delta stream.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .. import fpzipx as _fpz
+from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
+
+
+@register_scheme
+class FpzipxScheme(Scheme):
+    name = "fpzipx"
+
+    def params(self, spec) -> dict:
+        return {"precision": spec.precision, **super().params(spec)}
+
+    def stage1(self, blocks_np, spec):
+        x = jnp.asarray(blocks_np, jnp.float32)
+        return {"delta": np.asarray(_fpz.encode(x, precision=spec.precision))}
+
+    def serialize(self, s1, lo, hi, spec) -> bytes:
+        d = s1["delta"][lo:hi].astype(np.uint32)
+        return shuffle_bytes(d.tobytes(), spec.shuffle, 4)
+
+    def deserialize(self, payload, nblk, spec):
+        n = spec.block_size
+        d = np.frombuffer(unshuffle_bytes(payload, spec.shuffle, 4), np.uint32)
+        d = d.reshape(nblk, n, n, n)
+        return np.asarray(_fpz.decode(jnp.asarray(d)))

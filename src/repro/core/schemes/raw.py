@@ -1,0 +1,27 @@
+"""Identity scheme: float32 blocks passed straight to shuffle + stage 2.
+
+The control arm of the testbed — isolates what the lossless stage alone buys.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
+
+
+@register_scheme
+class RawScheme(Scheme):
+    name = "raw"
+
+    def stage1(self, blocks_np, spec):
+        return {"raw": np.asarray(jnp.asarray(blocks_np, jnp.float32))}
+
+    def serialize(self, s1, lo, hi, spec) -> bytes:
+        buf = s1["raw"][lo:hi].astype(np.float32).tobytes()
+        return shuffle_bytes(buf, spec.shuffle, 4)
+
+    def deserialize(self, payload, nblk, spec):
+        n = spec.block_size
+        raw = np.frombuffer(unshuffle_bytes(payload, spec.shuffle, 4), np.float32)
+        return raw.reshape(nblk, n, n, n).copy()

@@ -1,0 +1,63 @@
+"""SZ-style scheme: Lorenzo-predicted residuals, i8 stream + i32 outliers.
+
+Byte layout per chunk: outlier count (u32), the i8 residual stream (value
+-128 marks an escaped outlier), then the shuffled i32 outlier values.
+
+Format note: container format 1 wrote the outlier stream *unshuffled*
+(``spec.shuffle`` was silently ignored for szx); format 2 shuffles it like
+every other scheme.  :meth:`decode_spec` keeps v1 payloads reading bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from .. import szx as _szx
+from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
+
+
+@register_scheme
+class SzxScheme(Scheme):
+    name = "szx"
+
+    def params(self, spec) -> dict:
+        return {"eps": spec.eps, **super().params(spec)}
+
+    def decode_spec(self, spec, fmt: int):
+        if fmt < 2 and spec.shuffle != "none":
+            return dataclasses.replace(spec, shuffle="none")
+        return spec
+
+    def stage1(self, blocks_np, spec):
+        x = jnp.asarray(blocks_np, jnp.float32)
+        _szx.check_eps(float(jnp.max(jnp.abs(x))), spec.eps)
+        return {"res": np.asarray(_szx.encode(x, eps=spec.eps))}
+
+    def serialize(self, s1, lo, hi, spec) -> bytes:
+        r = s1["res"][lo:hi].reshape(-1)
+        small = np.abs(r) <= 127
+        stream = np.where(small, r, -128).astype(np.int8)
+        outliers = r[~small].astype(np.int32)
+        return (
+            np.uint32(outliers.size).tobytes()
+            + stream.tobytes()
+            + shuffle_bytes(outliers.tobytes(), spec.shuffle, 4)
+        )
+
+    def deserialize(self, payload, nblk, spec):
+        n = spec.block_size
+        n_out = int(np.frombuffer(payload[:4], np.uint32)[0])
+        nvals = nblk * n * n * n
+        stream = np.frombuffer(payload[4 : 4 + nvals], np.int8)
+        outliers = np.frombuffer(
+            unshuffle_bytes(payload[4 + nvals : 4 + nvals + 4 * n_out],
+                            spec.shuffle, 4),
+            np.int32,
+        )
+        r = stream.astype(np.int32)
+        esc = stream == -128
+        r[esc] = outliers
+        r = r.reshape(nblk, n, n, n)
+        return np.asarray(_szx.decode(jnp.asarray(r), eps=spec.eps))

@@ -1,0 +1,47 @@
+"""ZFP-style fixed-accuracy scheme: 4^3 cells, block-floating-point + lifting.
+
+Byte layout per chunk: per-cell exponents (i8) followed by the shuffled
+quantized-coefficient stream (i32).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .. import zfpx as _zfp
+from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
+
+
+@register_scheme
+class ZfpxScheme(Scheme):
+    name = "zfpx"
+
+    def validate(self, spec) -> None:
+        if spec.block_size % 4:
+            raise ValueError("zfpx needs block_size % 4 == 0")
+
+    def params(self, spec) -> dict:
+        return {"eps": spec.eps, **super().params(spec)}
+
+    def stage1(self, blocks_np, spec):
+        x = jnp.asarray(blocks_np, jnp.float32)
+        emax, q = _zfp.encode(x, eps=spec.eps)
+        return {"emax": np.asarray(emax), "q": np.asarray(q)}
+
+    def serialize(self, s1, lo, hi, spec) -> bytes:
+        emax = np.clip(s1["emax"][lo:hi], -127, 127).astype(np.int8)
+        q = s1["q"][lo:hi].astype(np.int32)
+        return emax.tobytes() + shuffle_bytes(q.tobytes(), spec.shuffle, 4)
+
+    def deserialize(self, payload, nblk, spec):
+        n = spec.block_size
+        nc = (n // 4) ** 3
+        emax = np.frombuffer(payload[: nblk * nc], np.int8).astype(np.int32)
+        q = np.frombuffer(
+            unshuffle_bytes(payload[nblk * nc :], spec.shuffle, 4), np.int32
+        )
+        emax = emax.reshape(nblk, nc)
+        q = q.reshape(nblk, nc, 64)
+        return np.asarray(
+            _zfp.decode(jnp.asarray(emax), jnp.asarray(q), eps=spec.eps, n=n)
+        )

@@ -1,0 +1,15 @@
+"""Distributed-systems utilities: parallel-write offsets and fault tolerance.
+
+``offsets``  — exclusive prefix-sum (MPI_Exscan analogue) over compressed
+shard sizes, the paper's collective that lets every writer seek to its slot
+in the shared per-quantity file without coordination.
+``fault``    — preemption handling, straggler detection and elastic
+re-planning for a fleet that loses or regains devices mid-run.
+"""
+from .offsets import exclusive_offsets_np, exclusive_offsets_sharded  # noqa: F401
+from .fault import (  # noqa: F401
+    PreemptionHandler,
+    StragglerReport,
+    StragglerWatchdog,
+    elastic_plan,
+)

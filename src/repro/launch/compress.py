@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from repro.core import CompressionSpec, compression_ratio, psnr
+from repro.core import SCHEMES, CompressionSpec, compression_ratio, psnr
 from repro.core import container
 from repro.fields import CloudConfig, cavitation_fields
 
@@ -31,7 +31,10 @@ def main(argv=None):
     ap.add_argument("--t", type=float, default=9.4, help="snapshot time (us)")
     ap.add_argument("--n", type=int, default=128)
     ap.add_argument("--qoi", default="p,rho,E,a2")
-    ap.add_argument("--scheme", default="wavelet")
+    ap.add_argument("--scheme", default="wavelet",
+                    help=f"any registered scheme ({', '.join(sorted(SCHEMES))})")
+    ap.add_argument("--list-schemes", action="store_true",
+                    help="print the scheme registry and exit")
     ap.add_argument("--wavelet", default="w3ai")
     ap.add_argument("--eps", type=float, default=1e-3)
     ap.add_argument("--block-size", type=int, default=32)
@@ -43,6 +46,11 @@ def main(argv=None):
     ap.add_argument("--decompress", default="")
     ap.add_argument("--verify-against", default="")
     args = ap.parse_args(argv)
+
+    if args.list_schemes:
+        for name in sorted(SCHEMES):
+            print(f"{name:10s} {type(SCHEMES[name]).__module__}")
+        return
 
     if args.decompress:
         t0 = time.time()

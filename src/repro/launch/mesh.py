@@ -7,15 +7,26 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "batch_axes", "model_axis"]
+__all__ = ["make_mesh", "make_production_mesh", "batch_axes", "model_axis"]
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported.
+
+    ``jax.sharding.AxisType`` only exists from jax 0.5; on 0.4.x meshes are
+    implicitly Auto, so the kwarg is simply omitted.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod adds the 2-pod leading axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

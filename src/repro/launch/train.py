@@ -29,6 +29,7 @@ from repro.core import CompressionSpec
 from repro.ckpt import Checkpointer
 from repro.data.tokens import DataConfig, batch_at
 from repro.dist.fault import PreemptionHandler, StragglerWatchdog
+from repro.launch.mesh import make_mesh
 from repro.models import ModelSettings
 from repro.train.optim import OptConfig
 from repro.train.step import build_train_step, init_train_state
@@ -63,8 +64,7 @@ def main(argv=None):
     st = ModelSettings(q_chunk=32, kv_chunk=64, ce_chunk=64, remat="none",
                        compute_dtype=jnp.float32)
     opt = OptConfig(lr=args.lr, warmup_steps=20, total_steps=max(args.steps, 100))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     data_cfg = DataConfig(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
                           seed=args.seed, branching=args.data_branching,

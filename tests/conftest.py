@@ -1,0 +1,8 @@
+"""Make ``pytest -q`` work from a clean checkout: put ``src`` on sys.path
+(equivalent to ``PYTHONPATH=src`` or an editable install)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

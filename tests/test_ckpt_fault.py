@@ -82,8 +82,9 @@ def test_exclusive_offsets():
 
 def test_offsets_sharded_matches_np():
     devs = jax.devices()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     from repro.dist.offsets import exclusive_offsets_sharded
 
     sizes = jnp.asarray([3, 9, 1, 4], jnp.int32)

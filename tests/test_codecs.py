@@ -4,7 +4,11 @@ import os
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip cleanly on a bare interpreter
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     CompressionSpec,

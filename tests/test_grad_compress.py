@@ -85,8 +85,9 @@ def test_compressed_pod_step_lowers_on_multi_mesh():
     from repro.configs.base import ShapeConfig
 
     cfg = reduced(ARCHS["smollm-135m"])
-    mesh = jax.make_mesh((2, 2, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
     st = ModelSettings(q_chunk=16, kv_chunk=16, ce_chunk=32, remat="none")
     shape = ShapeConfig("tiny", 64, 8, "train")
     batch_specs = input_batch_specs(cfg, shape)

@@ -2,7 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip cleanly on a bare interpreter
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ArchConfig
 from repro.models.moe import moe_ffn

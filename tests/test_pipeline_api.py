@@ -1,0 +1,296 @@
+"""Pluggable codec API tests: registry round-trips, custom-scheme plug-in,
+streaming writer, and CZ1 back-compat (bit-exact legacy read)."""
+import json
+import os
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionSpec,
+    Pipeline,
+    SCHEMES,
+    compress_field,
+    container,
+    decompress_field,
+)
+from repro.core import blocks as blk
+from repro.core import lossless
+from repro.core.schemes import (
+    Scheme,
+    get_scheme,
+    register_scheme,
+    shuffle_bytes,
+    unregister_scheme,
+    unshuffle_bytes,
+)
+
+
+def smooth_field(n=32, seed=0):
+    rng = np.random.default_rng(seed)
+    g = np.mgrid[0:n, 0:n, 0:n].astype(np.float32)
+    f = np.full((n, n, n), 40.0, np.float32)
+    for _ in range(4):
+        c = rng.uniform(6, n - 6, 3)
+        d = np.sqrt(((g - c[:, None, None, None]) ** 2).sum(0))
+        f += -25.0 / (1 + np.exp((d - 5.0) * 1.5))
+    return f
+
+
+FIELD = smooth_field()
+
+
+def _ulp(x):
+    return float(np.spacing(np.float32(np.max(np.abs(x)))))
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: every registered scheme x shuffle mode x stage-2 backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stage2", ["zlib", "bz2", "none"])
+@pytest.mark.parametrize("shuffle", ["none", "byte", "bit"])
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_pipeline_roundtrip_matrix(scheme, shuffle, stage2):
+    spec = CompressionSpec(scheme=scheme, shuffle=shuffle, stage2=stage2,
+                           eps=1e-3, block_size=16, buffer_bytes=1 << 16)
+    pipe = Pipeline(spec)
+    comp = pipe.compress(FIELD)
+    assert len(comp.chunks) > 1  # small buffer forces multiple chunks
+    assert comp.header["scheme"] == scheme
+    assert "scheme_params" in comp.header
+    dec = pipe.decompress(comp)
+    assert dec.shape == FIELD.shape
+    if scheme in ("raw", "fpzipx"):
+        np.testing.assert_array_equal(dec, FIELD)
+    elif scheme == "szx":
+        assert np.max(np.abs(dec - FIELD)) <= spec.eps * (1 + 1e-4) + _ulp(FIELD)
+    else:
+        assert np.max(np.abs(dec - FIELD)) < 1.0
+
+
+def test_pipeline_accepts_blocks_and_fields():
+    spec = CompressionSpec(scheme="raw", block_size=16)
+    pipe = Pipeline(spec)
+    blocks = np.asarray(blk.blockify(FIELD, 16))
+    out_blocks = pipe.decompress(pipe.compress(blocks))
+    np.testing.assert_array_equal(out_blocks, blocks)
+    out_field = pipe.decompress(pipe.compress(FIELD))
+    np.testing.assert_array_equal(out_field, FIELD)
+
+
+def test_unknown_scheme_rejected():
+    with pytest.raises(ValueError, match="unknown scheme"):
+        CompressionSpec(scheme="does-not-exist").validate()
+    with pytest.raises(ValueError, match="unknown scheme"):
+        get_scheme("does-not-exist")
+
+
+def test_schemes_is_live_registry_view():
+    assert "wavelet" in SCHEMES
+    assert set(SCHEMES) >= {"wavelet", "zfpx", "szx", "fpzipx", "raw"}
+    assert isinstance(SCHEMES["wavelet"], Scheme)
+
+
+# ---------------------------------------------------------------------------
+# Custom scheme plugs in without touching core
+# ---------------------------------------------------------------------------
+
+class NegateScheme(Scheme):
+    """Toy third-party scheme: stores the negated field (lossless)."""
+
+    name = "negate"
+
+    def params(self, spec):
+        return {"sign": -1, **super().params(spec)}
+
+    def stage1(self, blocks_np, spec):
+        return {"neg": -np.asarray(blocks_np, np.float32)}
+
+    def serialize(self, s1, lo, hi, spec):
+        return shuffle_bytes(s1["neg"][lo:hi].tobytes(), spec.shuffle, 4)
+
+    def deserialize(self, payload, nblk, spec):
+        n = spec.block_size
+        vals = np.frombuffer(unshuffle_bytes(payload, spec.shuffle, 4), np.float32)
+        return -vals.reshape(nblk, n, n, n)
+
+
+def test_custom_scheme_via_pipeline_and_container(tmp_path):
+    register_scheme(NegateScheme)
+    try:
+        spec = CompressionSpec(scheme="negate", block_size=16, shuffle="byte",
+                               buffer_bytes=1 << 16)
+        pipe = Pipeline(spec)
+        comp = pipe.compress(FIELD)
+        assert comp.header["scheme"] == "negate"
+        assert comp.header["scheme_params"]["sign"] == -1
+        np.testing.assert_array_equal(pipe.decompress(comp), FIELD)
+
+        # ...and straight through the CZ2 container + both readers
+        path = os.path.join(tmp_path, "neg.cz")
+        container.write_field(path, FIELD, spec)
+        np.testing.assert_array_equal(container.read_field(path), FIELD)
+        r = container.FieldReader(path)
+        np.testing.assert_array_equal(r.read_block(0, 0, 0), FIELD[:16, :16, :16])
+        r.close()
+
+        # seed-era wrapper functions route through the registry too
+        np.testing.assert_array_equal(
+            decompress_field(compress_field(FIELD, spec)), FIELD)
+    finally:
+        unregister_scheme("negate")
+    with pytest.raises(ValueError):
+        CompressionSpec(scheme="negate").validate()
+
+
+# ---------------------------------------------------------------------------
+# Streaming writer
+# ---------------------------------------------------------------------------
+
+def test_iter_chunks_is_lazy_generator():
+    import inspect
+
+    spec = CompressionSpec(scheme="raw", block_size=16, buffer_bytes=1 << 16)
+    blocks = np.asarray(blk.blockify(FIELD, 16))
+    it = Pipeline(spec).iter_chunks(blocks)
+    assert inspect.isgenerator(it)
+    chunk, nblk = next(it)
+    assert isinstance(chunk, bytes) and nblk >= 1
+
+
+def test_write_compressed_streams_and_matches_materialized(tmp_path):
+    spec = CompressionSpec(scheme="wavelet", block_size=16, buffer_bytes=1 << 16)
+    p_stream = os.path.join(tmp_path, "stream.cz")
+    p_mater = os.path.join(tmp_path, "mater.cz")
+    container.write_compressed(p_stream, FIELD, spec)       # streaming path
+    container.write_compressed(p_mater, Pipeline(spec).compress(FIELD))
+    a, b = container.read_field(p_stream), container.read_field(p_mater)
+    np.testing.assert_array_equal(a, b)
+    with open(p_stream, "rb") as f:
+        assert f.read(4) == container.MAGIC  # CZ2
+
+
+def test_write_compressed_block_batch_roundtrip(tmp_path):
+    """A container written from a raw block batch (no field_shape) reads back
+    as blocks; FieldReader refuses it with a clear error."""
+    path = os.path.join(tmp_path, "blocks.cz")
+    blocks = np.asarray(blk.blockify(FIELD, 16))
+    container.write_compressed(path, blocks,
+                               CompressionSpec(scheme="raw", block_size=16))
+    np.testing.assert_array_equal(container.read_field(path), blocks)
+    with pytest.raises(ValueError, match="block batch"):
+        container.FieldReader(path)
+
+
+def test_spec_hashable_with_extra():
+    assert hash(CompressionSpec()) == hash(CompressionSpec())
+    assert hash(CompressionSpec(extra={"k": 1})) != hash(CompressionSpec())
+
+
+def test_cz2_header_records_scheme_and_format(tmp_path):
+    path = os.path.join(tmp_path, "f.cz")
+    container.write_field(path, FIELD, CompressionSpec(scheme="zfpx",
+                                                       block_size=16))
+    r = container.FieldReader(path)
+    assert r.header["format"] == 2
+    assert r.header["scheme"] == "zfpx"
+    assert r.header["scheme_params"] == {"eps": 1e-3}
+    r.close()
+
+
+# ---------------------------------------------------------------------------
+# CZ1 back-compat: files written by the seed code still read back bit-exact
+# ---------------------------------------------------------------------------
+
+def _write_cz1_legacy(path, field, spec, chunks, nblks):
+    """Replicates the seed container writer byte layout (header-first CZ1)."""
+    blocks = np.asarray(blk.blockify(np.asarray(field, np.float32),
+                                     spec.block_size))
+    header = {
+        "spec": spec.to_json(),
+        "nblocks": int(blocks.shape[0]),
+        "chunk_nblocks": nblks,
+        "chunk_sizes": [len(c) for c in chunks],
+        "raw_bytes": int(blocks.size * 4),
+        "field_shape": list(field.shape),
+        "chunk_crc32": [zlib.crc32(c) & 0xFFFFFFFF for c in chunks],
+    }
+    hbytes = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(b"CZ1\0")
+        f.write(struct.pack("<Q", len(hbytes)))
+        f.write(hbytes)
+        for c in chunks:
+            f.write(c)
+
+
+def _legacy_chunks(field, spec, legacy_szx=False):
+    """Chunks exactly as the seed codec produced them (v1 byte layout)."""
+    spec = spec.validate()
+    blocks = np.asarray(blk.blockify(np.asarray(field, np.float32),
+                                     spec.block_size))
+    sch = get_scheme(spec.scheme)
+    s1 = sch.stage1(blocks, spec)
+    bpc = max(1, spec.buffer_bytes // (4 * spec.block_size ** 3))
+    chunks, nblks = [], []
+    for lo in range(0, blocks.shape[0], bpc):
+        hi = min(lo + bpc, blocks.shape[0])
+        if legacy_szx:
+            # v1 szx ignored spec.shuffle: i8 stream + *unshuffled* outliers
+            r = s1["res"][lo:hi].reshape(-1)
+            small = np.abs(r) <= 127
+            stream = np.where(small, r, -128).astype(np.int8)
+            outliers = r[~small].astype(np.int32)
+            payload = (np.uint32(outliers.size).tobytes() + stream.tobytes()
+                       + outliers.tobytes())
+        else:
+            payload = sch.serialize(s1, lo, hi, spec)
+        chunks.append(lossless.encode(payload, spec.stage2))
+        nblks.append(hi - lo)
+    return chunks, nblks
+
+
+def test_cz1_raw_reads_back_bit_exact(tmp_path):
+    spec = CompressionSpec(scheme="raw", block_size=16, buffer_bytes=1 << 16)
+    path = os.path.join(tmp_path, "legacy.cz")
+    chunks, nblks = _legacy_chunks(FIELD, spec)
+    _write_cz1_legacy(path, FIELD, spec, chunks, nblks)
+    np.testing.assert_array_equal(container.read_field(path), FIELD)
+    r = container.FieldReader(path)
+    assert r.format == 1
+    np.testing.assert_array_equal(r.read_all(), FIELD)
+    r.close()
+
+
+def test_cz1_szx_unshuffled_outliers_decode(tmp_path):
+    """v1 szx wrote outliers unshuffled even with shuffle='byte' in the spec;
+    the scheme's decode_spec shim must keep those files readable."""
+    spec = CompressionSpec(scheme="szx", eps=1e-3, shuffle="byte",
+                           block_size=16, buffer_bytes=1 << 16)
+    path = os.path.join(tmp_path, "legacy_szx.cz")
+    chunks, nblks = _legacy_chunks(FIELD, spec, legacy_szx=True)
+    _write_cz1_legacy(path, FIELD, spec, chunks, nblks)
+    out = container.read_field(path)
+    assert np.max(np.abs(out - FIELD)) <= spec.eps * (1 + 1e-4) + _ulp(FIELD)
+
+
+def test_cz2_szx_shuffles_outliers():
+    """Format 2 applies spec.shuffle to the szx outlier stream (satellite fix):
+    same stage-1 data must serialize differently for byte vs none shuffle."""
+    spec_b = CompressionSpec(scheme="szx", eps=1e-4, shuffle="byte",
+                             block_size=16, stage2="none")
+    spec_n = CompressionSpec(scheme="szx", eps=1e-4, shuffle="none",
+                             block_size=16, stage2="none")
+    sch = get_scheme("szx")
+    s1 = sch.stage1(np.asarray(blk.blockify(FIELD, 16)), spec_b)
+    n_out = int(np.frombuffer(sch.serialize(s1, 0, 2, spec_n)[:4], np.uint32)[0])
+    assert n_out > 0, "field must produce szx outliers for this test"
+    assert sch.serialize(s1, 0, 2, spec_b) != sch.serialize(s1, 0, 2, spec_n)
+    # and both layouts round-trip under their own spec
+    for spec in (spec_b, spec_n):
+        pipe = Pipeline(spec)
+        dec = pipe.decompress(pipe.compress(FIELD))
+        assert np.max(np.abs(dec - FIELD)) <= spec.eps * (1 + 1e-4) + _ulp(FIELD)
