@@ -11,7 +11,7 @@ import time
 from repro.core import CompressionSpec
 from repro.fields import CloudConfig, cavitation_fields
 
-from .common import BENCH_N, dataset, emit, eps_sweep, save_json, sweep
+from .common import dataset, emit, eps_sweep, save_json, sweep
 
 
 def _specs_for(scheme: str, eps_list):

@@ -45,7 +45,7 @@ def run(quick: bool = True):
     # 2. Amdahl split on one node
     spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3)
     t0 = time.time()
-    co = np.asarray(wavelets.forward3d(jnp.asarray(blocks), "w3ai"))
+    np.asarray(wavelets.forward3d(jnp.asarray(blocks), "w3ai"))
     t_stage1 = time.time() - t0
     t0 = time.time()
     comp = compress_blocks(blocks, spec)

@@ -1,0 +1,90 @@
+"""CZDataset store benchmarks (ISSUE 2 acceptance).
+
+Measures (a) append throughput of an in-situ stream — multiple quantities
+per timestep — with ``workers=1`` vs ``workers=4`` (the concurrent shard
+writer), and (b) random-access region-read latency vs whole-field decode:
+a box query should touch only its covering chunks, a full decode all of
+them.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from repro.core import CompressionSpec
+from repro.store import CZDataset
+
+from .common import dataset, emit, save_json
+
+
+def _append_run(root: str, fields: dict, n_steps: int, workers: int,
+                spec: CompressionSpec) -> dict:
+    shutil.rmtree(root, ignore_errors=True)
+    raw = sum(f.nbytes for f in fields.values()) * n_steps
+    t0 = time.time()
+    with CZDataset(root, "a", spec=spec, workers=workers) as ds:
+        for k in range(n_steps):
+            ds.append(fields, time=float(k))
+    dt = time.time() - t0
+    comp = sum(ts["bytes"]
+               for q in fields
+               for ts in CZDataset(root).timestep_info(q))
+    return {"workers": workers, "time_s": dt, "MBps": raw / 2**20 / dt,
+            "cr": raw / comp, "raw_bytes": raw, "compressed_bytes": comp}
+
+
+def run(quick: bool = True):
+    n_steps = 3 if quick else 6
+    box = 32
+    reps = 20 if quick else 100
+    qois = ["p", "rho"] if quick else ["p", "rho", "E", "a2"]
+    fields = {q: f for q, f in dataset("10k").items() if q in qois}
+    n = next(iter(fields.values())).shape[0]
+    # small buffers force many chunks per member: parallel encode has work,
+    # and region reads can skip most of the file
+    spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3,
+                           block_size=16, buffer_bytes=1 << 18)
+
+    root = os.path.join(tempfile.mkdtemp(), "bench_ds")
+    results = {"n": n, "n_steps": n_steps, "quantities": qois, "append": []}
+
+    for workers in (1, 4):
+        r = _append_run(root, fields, n_steps, workers, spec)
+        results["append"].append(r)
+        emit(f"store_append_w{workers}", r["time_s"] * 1e6 / n_steps,
+             f"{r['MBps']:.0f}MBps_cr{r['cr']:.1f}")
+    results["append_speedup_w4"] = (results["append"][0]["time_s"]
+                                    / results["append"][1]["time_s"])
+
+    # -- region read vs whole-field decode (fresh reader each rep = cold) --
+    with CZDataset(root) as ds:
+        t0 = time.time()
+        for k in range(reps):
+            lo = (k * 7) % (n - box)
+            ds.read_box("p", k % n_steps, (lo, lo, lo),
+                        (lo + box, lo + box, lo + box))
+        box_ms = (time.time() - t0) * 1e3 / reps
+        stats = ds.stats()
+
+        t0 = time.time()
+        ds.read_field("p", 0)
+        full_ms = (time.time() - t0) * 1e3
+        r = ds.reader("p", 0)
+        results["region"] = {
+            "box": box, "reps": reps, "box_ms": box_ms, "full_ms": full_ms,
+            "speedup": full_ms / box_ms, "chunks_total": r.nchunks,
+            "store_stats": stats,
+        }
+    emit("store_read_box", box_ms * 1e3, f"{full_ms/box_ms:.1f}x_vs_full")
+    emit("store_read_full", full_ms * 1e3, f"{results['region']['chunks_total']}chunks")
+
+    shutil.rmtree(os.path.dirname(root), ignore_errors=True)
+    path = save_json("store", results)
+    print(f"# wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -29,6 +29,7 @@ def main(argv=None) -> None:
         bench_scaling,
         bench_shuffle,
         bench_speed,
+        bench_store,
         bench_tolerance,
         bench_wavelet_time,
         bench_wavelet_types,
@@ -47,6 +48,7 @@ def main(argv=None) -> None:
         "insitu": bench_insitu,
         "ckpt": bench_ckpt,
         "gradcomp": bench_gradcomp,
+        "store": bench_store,
     }
     only = [s for s in args.only.split(",") if s]
     failures = []

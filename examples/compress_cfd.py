@@ -1,34 +1,35 @@
 """Ex-situ compression of CFD output (the CubismZ tool use case):
-compress all four QoIs into CZ2 containers — the writer streams chunks from
-``Pipeline.iter_chunks``, so the compressed chunk list is never held in
-memory — then random-access one block through the chunk cache without
-decompressing the file.
+compress all four QoIs of one snapshot into a CZDataset — a manifest-driven
+directory of CZ2 members, one per quantity per timestep — then random-access
+a sub-box through the store's chunk cache without inflating any full field.
 
 Run:  PYTHONPATH=src python examples/compress_cfd.py
 """
-import os
-
-from repro.core import CompressionSpec, container
+from repro.core import CompressionSpec
 from repro.fields import CloudConfig, cavitation_fields
+from repro.store import CZDataset
 
-out = "artifacts/example_fields"
-os.makedirs(out, exist_ok=True)
 fields = cavitation_fields(CloudConfig(n=64), t=9.4)
 spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3,
                        block_size=32, shuffle="byte")
 
-for q, f in fields.items():
-    path = os.path.join(out, f"{q}.cz")
-    # streaming write: field -> Pipeline.iter_chunks -> disk, chunk by chunk
-    nbytes = container.write_field(path, f, spec)
-    print(f"{q:4s}: {f.nbytes/2**20:.1f} MiB -> {nbytes/2**20:.2f} MiB "
-          f"(CR {f.nbytes/nbytes:.1f}x) -> {path}")
+# one append = one committed timestep of all quantities; chunk encoding for
+# every member runs on a shared 4-thread pool (the paper's per-thread
+# writers), drained in order so the files match a serial write byte-for-byte
+with CZDataset("artifacts/example_dataset", mode="a", spec=spec,
+               workers=4) as ds:
+    t = ds.append(fields, time=9.4)
+    for q in ds.quantities:
+        ts = ds.timestep_info(q, t)
+        print(f"{q:4s}: {ts['raw_bytes']/2**20:.1f} MiB -> "
+              f"{ts['bytes']/2**20:.2f} MiB "
+              f"(CR {ts['raw_bytes']/ts['bytes']:.1f}x) -> {ts['file']}")
 
-# random block access via the decompression chunk cache (paper §2.3);
-# the reader dispatches on the scheme recorded in the CZ2 header
-r = container.FieldReader(os.path.join(out, "p.cz"))
-block = r.read_block(1, 0, 1)
-print(f"block (1,0,1): shape {block.shape}, mean {block.mean():.3f}, "
-      f"scheme {r.header['scheme']!r} (format {r.format}), "
-      f"cache hits/misses = {r.cache_hits}/{r.cache_misses}")
-r.close()
+# region read: only the chunks covering the box are decoded (LRU-cached)
+ds = CZDataset("artifacts/example_dataset")
+box = ds.read_box("p", t, (16, 0, 16), (48, 32, 48))
+r = ds.reader("p", t)
+print(f"box (16,0,16)-(48,32,48): shape {box.shape}, mean {box.mean():.3f}, "
+      f"decoded {r.chunks_decoded}/{r.nchunks} chunks, "
+      f"stats {ds.stats()}")
+ds.close()

@@ -1,7 +1,36 @@
-"""Batched serving: prefill + greedy decode with a KV cache.
+"""Serving, both kinds: (1) region queries against a compressed CZDataset
+through the store's decode cache (FieldRegionServer), (2) batched LLM
+prefill + greedy decode with a KV cache.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import CompressionSpec
+from repro.fields import CloudConfig, cavitation_fields
+from repro.serve import FieldRegionServer
+from repro.store import CZDataset
+
+# -- 1. compressed-field region serving -------------------------------------
+root = os.path.join(tempfile.mkdtemp(), "ds")
+with CZDataset(root, "a", spec=CompressionSpec(scheme="wavelet", eps=1e-3,
+                                               block_size=16),
+               workers=4) as ds:
+    fields = cavitation_fields(CloudConfig(n=64), t=9.4)
+    t = ds.append({"p": fields["p"], "rho": fields["rho"]}, time=9.4)
+
+srv = FieldRegionServer(root)
+rng = np.random.default_rng(0)
+for _ in range(32):  # random 16^3 probes; hot chunks come from the LRU cache
+    lo = rng.integers(0, 48, 3)
+    srv.query("p", t, lo, lo + 16)
+print(f"region server: {srv.stats()}")
+srv.close()
+
+# -- 2. LLM decode serving ---------------------------------------------------
 from repro.launch.serve import main
 
 main(["--arch", "smollm-135m", "--reduced", "--batch", "4",

@@ -1,6 +1,7 @@
 """Compressed distributed checkpointing (paper's parallel-I/O design)."""
 from .checkpoint import (  # noqa: F401
     Checkpointer,
+    FieldSnapshotter,
     latest_step,
     load_checkpoint,
     restore_tree,

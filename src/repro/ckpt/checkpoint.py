@@ -16,7 +16,6 @@ restart.  Restore reshards to any device count (elastic scaling).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
@@ -28,7 +27,8 @@ import jax
 from repro.core import CompressedField, CompressionSpec, Pipeline
 from repro.dist.offsets import exclusive_offsets_np
 
-__all__ = ["Checkpointer", "save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["Checkpointer", "FieldSnapshotter", "save_checkpoint",
+           "load_checkpoint", "latest_step"]
 
 _BS = 16                      # codec block side for flattened tensors
 _BLOCK = _BS ** 3
@@ -183,6 +183,61 @@ def restore_tree(template, flat: dict):
         return arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
 
     return jax.tree_util.tree_map_with_path(one, template)
+
+
+class FieldSnapshotter:
+    """Dataset-backed snapshot path for *field* state (simulation restart).
+
+    Training pytrees go through :class:`Checkpointer`; 3D solver state (the
+    paper's in-situ restart snapshots) goes into one append-mode
+    :class:`repro.store.CZDataset` — every snapshot is a committed timestep
+    of all quantities, so restart data gets the store's atomic manifest,
+    random-access region reads, and concurrent shard encoding for free.
+    """
+
+    def __init__(self, ds_dir: str, every: int = 1,
+                 spec: CompressionSpec | None = None, workers: int = 1):
+        from repro.store import CZDataset
+
+        self.every = every
+        self.ds = CZDataset(ds_dir, mode="a",
+                            spec=spec or CompressionSpec(scheme="fpzipx",
+                                                         shuffle="byte"),
+                            workers=workers)
+        self._steps: dict[int, int] = {  # sim step -> dataset timestep
+            int(ts["time"]): ts["t"]
+            for q in self.ds.quantities
+            for ts in self.ds.timestep_info(q)
+            if ts["time"] is not None
+        }
+
+    def maybe_snapshot(self, fields: dict[str, np.ndarray], step: int,
+                       force: bool = False) -> int | None:
+        """Append one snapshot every ``every`` steps; returns its timestep.
+
+        The simulation step is recorded as the timestep's ``time`` tag, so
+        :meth:`restore` can resolve "latest" or an exact step after reopen.
+        """
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return None
+        fields = {q: np.asarray(jax.device_get(f)) for q, f in fields.items()}
+        t = self.ds.append(fields, time=float(step))
+        self._steps[step] = t
+        return t
+
+    def restore(self, step: int | None = None):
+        """Returns (fields dict, step) for ``step`` (default: latest); or
+        (None, None) on an empty dataset."""
+        if not self._steps:
+            return None, None
+        step = max(self._steps) if step is None else step
+        t = self._steps[step]
+        fields = {q: self.ds.read_field(q, t) for q in self.ds.quantities
+                  if t in self.ds.timesteps(q)}
+        return fields, step
+
+    def close(self):
+        self.ds.close()
 
 
 class Checkpointer:

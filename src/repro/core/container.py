@@ -27,7 +27,9 @@ from __future__ import annotations
 
 import collections
 import json
+import os
 import struct
+import threading
 import zlib
 from typing import Iterable, Iterator
 
@@ -45,7 +47,7 @@ _FOOTER_PTR = struct.Struct("<Q")
 
 
 def _write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
-                  base_header: dict) -> int:
+                  base_header: dict, fsync: bool = False) -> int:
     """Stream ``(chunk, nblk)`` pairs to a CZ2 file; one chunk in memory."""
     sizes: list[int] = []
     nblks: list[int] = []
@@ -70,43 +72,53 @@ def _write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
         f.write(hbytes)
         f.seek(len(MAGIC))
         f.write(_FOOTER_PTR.pack(footer_off))
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     return len(MAGIC) + 8 + sum(sizes) + len(hbytes)
 
 
 def write_compressed(path: str, source, spec: CompressionSpec | None = None,
-                     extra_header: dict | None = None) -> int:
+                     extra_header: dict | None = None, workers: int = 1,
+                     executor=None, fsync: bool = False) -> int:
     """Write a CZ2 container; returns total bytes written.
 
     ``source`` is either a 3D field / 4D block batch compressed on the fly
     through :meth:`Pipeline.iter_chunks` (streaming — the whole chunk list is
     never materialized), or an already-built :class:`CompressedField`.
+    ``workers > 1`` encodes chunks on a thread pool (``executor`` supplies an
+    external pool, e.g. the store's shared one); the single ordered drain
+    keeps the file byte-identical to a serial write.  ``fsync`` flushes the
+    file to stable storage before returning (the store's commit protocol).
     """
     if isinstance(source, CompressedField):
         header = dict(source.header)
         for k in ("chunk_nblocks", "chunk_sizes", "chunk_crc32", "nblocks"):
             header.pop(k, None)
         pairs = zip(source.chunks, source.header["chunk_nblocks"])
-        return _write_stream(path, pairs, header)
+        return _write_stream(path, pairs, header, fsync=fsync)
 
     if spec is None:
         raise TypeError("spec is required when writing a raw field/blocks")
-    pipe = Pipeline(spec)
+    pipe = Pipeline(spec, workers=workers)
     data = np.asarray(source)
     header = pipe.base_header()
     if data.ndim == 3:
         header["field_shape"] = list(data.shape)
         data = np.asarray(
-            blk.blockify(np.asarray(data, np.float32), spec.block_size))
+            blk.blockify(np.asarray(data, spec.np_dtype), spec.block_size))
     elif data.ndim != 4:
         raise ValueError(f"expected 3D field or 4D block batch, got {data.shape}")
-    header["raw_bytes"] = int(data.size * 4)
+    header["raw_bytes"] = int(data.size * spec.np_dtype.itemsize)
     if extra_header:
         header.update(extra_header)
-    return _write_stream(path, pipe.iter_chunks(data), header)
+    chunk_iter = pipe.iter_chunks(data, workers=workers, executor=executor)
+    return _write_stream(path, chunk_iter, header, fsync=fsync)
 
 
-def write_field(path: str, field: np.ndarray, spec: CompressionSpec) -> int:
-    return write_compressed(path, field, spec)
+def write_field(path: str, field: np.ndarray, spec: CompressionSpec,
+                workers: int = 1) -> int:
+    return write_compressed(path, field, spec, workers=workers)
 
 
 def _read_header(f) -> tuple[dict, int]:
@@ -164,9 +176,14 @@ def read_field(path: str) -> np.ndarray:
 
 
 class FieldReader:
-    """Random block access with an LRU chunk cache (paper's decompressor)."""
+    """Random block/region access with an LRU chunk cache (paper's
+    decompressor).  Thread-safe: chunk inflation and the cache are guarded by
+    a lock, so concurrent readers (e.g. the store's region-query server) can
+    share one reader and its decode cache.
+    """
 
     def __init__(self, path: str, cache_chunks: int = 8):
+        self.path = path
         self._f = open(path, "rb")
         self.header, data_start = _read_header(self._f)
         self.spec = CompressionSpec.from_json(self.header["spec"])
@@ -185,25 +202,52 @@ class FieldReader:
         self.nb = blk.num_blocks(self.shape, self.spec.block_size)
         self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
         self._cache_chunks = cache_chunks
+        self._lock = threading.Lock()
         self.cache_hits = 0
         self.cache_misses = 0
 
+    @property
+    def nchunks(self) -> int:
+        return len(self._chunk_nblk)
+
+    @property
+    def chunks_decoded(self) -> int:
+        """Chunks actually inflated so far (== cache misses) — lets callers
+        assert a region read decoded fewer chunks than a full-field read."""
+        return self.cache_misses
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.spec.np_dtype
+
     def close(self):
-        self._f.close()
+        with self._lock:
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     def _chunk(self, ci: int) -> np.ndarray:
-        if ci in self._cache:
-            self._cache.move_to_end(ci)
-            self.cache_hits += 1
-            return self._cache[ci]
-        self.cache_misses += 1
-        self._f.seek(self._chunk_off[ci])
-        buf = self._f.read(self.header["chunk_sizes"][ci])
-        out = self._pipe.decompress_chunk(buf, self._chunk_nblk[ci], self.format)
-        self._cache[ci] = out
-        while len(self._cache) > self._cache_chunks:
-            self._cache.popitem(last=False)
-        return out
+        with self._lock:
+            if ci in self._cache:
+                self._cache.move_to_end(ci)
+                self.cache_hits += 1
+                return self._cache[ci]
+            self.cache_misses += 1
+            if self._f.closed:
+                # a holder of this reader outlived a close() (e.g. the store
+                # evicted it from its LRU mid-read) — reopen transparently
+                self._f = open(self.path, "rb")
+            self._f.seek(self._chunk_off[ci])
+            buf = self._f.read(self.header["chunk_sizes"][ci])
+            out = self._pipe.decompress_chunk(buf, self._chunk_nblk[ci], self.format)
+            self._cache[ci] = out
+            while len(self._cache) > self._cache_chunks:
+                self._cache.popitem(last=False)
+            return out
 
     def read_block(self, bx: int, by: int, bz: int) -> np.ndarray:
         """Decompress and return one (bs, bs, bs) block."""
@@ -211,6 +255,33 @@ class FieldReader:
         flat = (bx * by_n + by) * bz_n + bz
         ci = int(np.searchsorted(self._blk0, flat, side="right")) - 1
         return self._chunk(ci)[flat - self._blk0[ci]]
+
+    def read_box(self, lo: tuple[int, int, int],
+                 hi: tuple[int, int, int]) -> np.ndarray:
+        """Decode the sub-box ``[lo, hi)`` touching only the covering chunks.
+
+        The box is assembled block by block through the LRU chunk cache — the
+        full field is never inflated, and ``chunks_decoded`` counts exactly
+        the chunks that were.
+        """
+        lo = tuple(int(v) for v in lo)
+        hi = tuple(int(v) for v in hi)
+        for a, b, s in zip(lo, hi, self.shape):
+            if not 0 <= a < b <= s:
+                raise ValueError(f"box [{lo}, {hi}) outside field {self.shape}")
+        bs = self.spec.block_size
+        out = np.empty(tuple(b - a for a, b in zip(lo, hi)), self.dtype)
+        for bx in range(lo[0] // bs, (hi[0] - 1) // bs + 1):
+            for by in range(lo[1] // bs, (hi[1] - 1) // bs + 1):
+                for bz in range(lo[2] // bs, (hi[2] - 1) // bs + 1):
+                    block = self.read_block(bx, by, bz)
+                    # intersection of this block's extent with the box
+                    b0 = (bx * bs, by * bs, bz * bs)
+                    s0 = tuple(max(a, c) for a, c in zip(lo, b0))
+                    s1 = tuple(min(b, c + bs) for b, c in zip(hi, b0))
+                    out[tuple(slice(a - o, b - o) for a, b, o in zip(s0, s1, lo))] = \
+                        block[tuple(slice(a - c, b - c) for a, b, c in zip(s0, s1, b0))]
+        return out
 
     def read_all(self) -> np.ndarray:
         blocks = np.concatenate([self._chunk(i) for i in range(len(self._chunk_nblk))])

@@ -19,10 +19,19 @@ emitted; chunked stage 1 is a ROADMAP item.
 
 ``CODEC_FORMAT`` versions the chunk byte layout; headers record it so old
 payloads decode bit-exact after layout changes (``Scheme.decode_spec``).
+
+Chunks are independent, so ``iter_chunks`` optionally encodes them on a
+thread pool (``workers=`` on :class:`Pipeline` — the paper's per-thread
+writers, truly concurrent): serialization + stage 2 run in parallel while a
+single ordered drain yields chunks in deterministic order, so serial and
+threaded runs produce byte-identical output.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import dataclasses
+import itertools
 import json
 from typing import Any, Iterator
 
@@ -32,10 +41,14 @@ from . import blocks as blk
 from . import lossless, metrics
 from .schemes import SCHEMES, Scheme, get_scheme  # noqa: F401  (re-export)
 
-__all__ = ["CODEC_FORMAT", "CompressionSpec", "CompressedField", "Pipeline"]
+__all__ = ["CODEC_FORMAT", "DTYPES", "CompressionSpec", "CompressedField",
+           "Pipeline"]
 
 #: version of the per-chunk byte layout (v2: szx shuffles its outlier stream)
 CODEC_FORMAT = 2
+
+#: dtypes a container can record; CZ1/headerless payloads default to float32
+DTYPES = ("float32", "float64", "float16")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +63,7 @@ class CompressionSpec:
     stage2: str = "zlib"         # see repro.core.lossless.METHODS
     buffer_bytes: int = 4 << 20  # per-thread aggregation buffer (paper: 4 MB)
     precision: int = 32          # fpzipx bits of precision (32 = lossless)
+    dtype: str = "float32"       # field dtype tag (see DTYPES)
     extra: dict = dataclasses.field(default_factory=dict)  # third-party knobs
 
     def __hash__(self):
@@ -65,9 +79,15 @@ class CompressionSpec:
             raise ValueError(f"unknown shuffle {self.shuffle}")
         if self.stage2 not in lossless.METHODS:
             raise ValueError(f"unknown stage2 {self.stage2}")
+        if self.dtype not in DTYPES:
+            raise ValueError(f"unknown dtype {self.dtype}; one of {DTYPES}")
         blk.check_block_size(self.block_size)
         get_scheme(self.scheme).validate(self)
         return self
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        return np.dtype(self.dtype)
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -100,17 +120,24 @@ class CompressedField:
 
 class Pipeline:
     """A validated spec bound to its registered scheme; the one compression
-    path every public entry point (functions, container, CLI, ckpt) uses."""
+    path every public entry point (functions, container, CLI, ckpt) uses.
 
-    def __init__(self, spec: CompressionSpec):
+    ``workers > 1`` encodes aggregation buffers on a thread pool (ordered
+    drain, byte-identical to the serial path); serialization and stage-2
+    coding release the GIL in numpy/zlib, so this scales like the paper's
+    per-thread writers.
+    """
+
+    def __init__(self, spec: CompressionSpec, workers: int = 1):
         self.spec = spec.validate()
         self.scheme: Scheme = get_scheme(spec.scheme)
+        self.workers = max(1, int(workers))
 
     # -- layout ------------------------------------------------------------
 
     @property
     def blocks_per_chunk(self) -> int:
-        raw_block = 4 * self.spec.block_size ** 3
+        raw_block = self.spec.np_dtype.itemsize * self.spec.block_size ** 3
         return max(1, self.spec.buffer_bytes // raw_block)
 
     def base_header(self) -> dict:
@@ -120,27 +147,63 @@ class Pipeline:
             "format": CODEC_FORMAT,
             "scheme": self.spec.scheme,
             "scheme_params": self.scheme.params(self.spec),
+            "dtype": self.spec.dtype,
             "spec": self.spec.to_json(),
         }
 
     # -- compression -------------------------------------------------------
 
-    def iter_chunks(self, blocks_np: np.ndarray) -> Iterator[tuple[bytes, int]]:
+    def iter_chunks(self, blocks_np: np.ndarray, workers: int | None = None,
+                    executor: concurrent.futures.Executor | None = None,
+                    ) -> Iterator[tuple[bytes, int]]:
         """Yield ``(chunk_bytes, n_blocks)`` one aggregation buffer at a time.
 
         Substage 1 runs once over the whole batch on device (its output stays
         resident for the generator's lifetime); serialization and substage 2
         stream chunk-by-chunk, so a consumer writing to disk never holds more
-        than one *compressed* chunk.
+        than one *compressed* chunk (plus the bounded in-flight window when
+        ``workers > 1``).
+
+        With ``workers > 1`` (or an external ``executor``, e.g. the store's
+        :class:`~repro.store.ShardWriter` pool) chunk encoding is submitted to
+        the pool a bounded window ahead while results are yielded strictly in
+        order — the output byte stream is identical to the serial path.
         """
         spec = self.spec
         blocks_np = np.asarray(blocks_np)
         s1 = self.scheme.stage1(blocks_np, spec)
         bpc = self.blocks_per_chunk
-        for lo in range(0, blocks_np.shape[0], bpc):
-            hi = min(lo + bpc, blocks_np.shape[0])
+        ranges = [(lo, min(lo + bpc, blocks_np.shape[0]))
+                  for lo in range(0, blocks_np.shape[0], bpc)]
+
+        def encode(lo: int, hi: int) -> bytes:
             payload = self.scheme.serialize(s1, lo, hi, spec)
-            yield lossless.encode(payload, spec.stage2), hi - lo
+            return lossless.encode(payload, spec.stage2)
+
+        nworkers = self.workers if workers is None else max(1, int(workers))
+        if executor is None and nworkers <= 1:
+            for lo, hi in ranges:
+                yield encode(lo, hi), hi - lo
+            return
+
+        own_pool = executor is None
+        pool = executor or concurrent.futures.ThreadPoolExecutor(nworkers)
+        try:
+            # keep at most ~2x workers chunks in flight: parallelism without
+            # materializing the whole compressed chunk list
+            window = 2 * nworkers
+            it = iter(ranges)
+            pending: collections.deque = collections.deque(
+                (r, pool.submit(encode, *r)) for r in itertools.islice(it, window))
+            while pending:
+                (lo, hi), fut = pending.popleft()
+                nxt = next(it, None)
+                if nxt is not None:
+                    pending.append((nxt, pool.submit(encode, *nxt)))
+                yield fut.result(), hi - lo
+        finally:
+            if own_pool:
+                pool.shutdown(wait=True, cancel_futures=True)
 
     def compress_blocks(self, blocks_np: np.ndarray,
                         extra_header: dict | None = None) -> CompressedField:
@@ -154,7 +217,7 @@ class Pipeline:
             "nblocks": int(blocks_np.shape[0]),
             "chunk_nblocks": chunk_nblocks,
             "chunk_sizes": [len(c) for c in chunks],
-            "raw_bytes": int(blocks_np.size * 4),
+            "raw_bytes": int(blocks_np.size * self.spec.np_dtype.itemsize),
         })
         if extra_header:
             header.update(extra_header)
@@ -163,7 +226,8 @@ class Pipeline:
     def compress_field(self, field: np.ndarray,
                        extra_header: dict | None = None) -> CompressedField:
         blocks_np = np.asarray(
-            blk.blockify(np.asarray(field, np.float32), self.spec.block_size))
+            blk.blockify(np.asarray(field, self.spec.np_dtype),
+                         self.spec.block_size))
         hdr = {"field_shape": list(field.shape)}
         if extra_header:
             hdr.update(extra_header)
@@ -185,7 +249,10 @@ class Pipeline:
                          fmt: int = CODEC_FORMAT) -> np.ndarray:
         spec = self.scheme.decode_spec(self.spec, fmt)
         payload = lossless.decode(buf, spec.stage2)
-        return self.scheme.deserialize(payload, nblk, spec)
+        blocks = self.scheme.deserialize(payload, nblk, spec)
+        # lossy schemes compute in float32; the dtype tag restores the field
+        # dtype (raw already deserializes in the tagged dtype — no-op there)
+        return blocks.astype(spec.np_dtype, copy=False)
 
     def decompress_blocks(self, comp: CompressedField) -> np.ndarray:
         outs = [

@@ -16,6 +16,13 @@ from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
 class FpzipxScheme(Scheme):
     name = "fpzipx"
 
+    def validate(self, spec) -> None:
+        if spec.dtype != "float32":
+            raise ValueError(
+                "fpzipx predicts on the float32 bit pattern; its lossless "
+                f"guarantee does not hold for dtype={spec.dtype!r} — use the "
+                "'raw' scheme for other dtypes")
+
     def params(self, spec) -> dict:
         return {"precision": spec.precision, **super().params(spec)}
 

@@ -1,11 +1,13 @@
-"""Identity scheme: float32 blocks passed straight to shuffle + stage 2.
+"""Identity scheme: blocks passed straight to shuffle + stage 2.
 
 The control arm of the testbed — isolates what the lossless stage alone buys.
+The only scheme whose value stream is stored in the spec's tagged dtype
+(float16/float32/float64 round-trip bit-exact); lossy schemes keep their
+float32 internal streams and cast on decode.
 """
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
 
@@ -15,13 +17,16 @@ class RawScheme(Scheme):
     name = "raw"
 
     def stage1(self, blocks_np, spec):
-        return {"raw": np.asarray(jnp.asarray(blocks_np, jnp.float32))}
+        return {"raw": np.asarray(blocks_np, spec.np_dtype)}
 
     def serialize(self, s1, lo, hi, spec) -> bytes:
-        buf = s1["raw"][lo:hi].astype(np.float32).tobytes()
-        return shuffle_bytes(buf, spec.shuffle, 4)
+        dt = spec.np_dtype
+        buf = s1["raw"][lo:hi].astype(dt, copy=False).tobytes()
+        return shuffle_bytes(buf, spec.shuffle, dt.itemsize)
 
     def deserialize(self, payload, nblk, spec):
         n = spec.block_size
-        raw = np.frombuffer(unshuffle_bytes(payload, spec.shuffle, 4), np.float32)
+        dt = spec.np_dtype
+        raw = np.frombuffer(unshuffle_bytes(payload, spec.shuffle, dt.itemsize),
+                            dt)
         return raw.reshape(nblk, n, n, n).copy()

@@ -8,7 +8,6 @@ output size is required instead of a data-dependent significant count.
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

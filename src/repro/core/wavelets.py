@@ -32,7 +32,6 @@ tolerance; tested (incl. hypothesis sweeps) in ``tests/test_wavelets.py``.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -124,7 +123,6 @@ def _lift_update(d):
 
 
 def _fwd_step_last(x, kind: str):
-    m = x.shape[-1] // 2
     e, o = x[..., 0::2], x[..., 1::2]
     if kind in ("w4i", "w4l"):
         s = e

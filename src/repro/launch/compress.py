@@ -8,22 +8,99 @@ Examples:
   python -m repro.launch.compress --source cavitation --t 9.4 --n 128 \
       --scheme wavelet --wavelet w3ai --eps 1e-3 --out /tmp/fields
   python -m repro.launch.compress --decompress /tmp/fields/p.cz --verify-against /tmp/p.npy
+  cz-compress inspect /tmp/fields/p.cz          # header + chunk table + CRCs
+  cz-compress inspect artifacts/example_dataset # CZDataset manifest summary
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
+import zlib
 
 import numpy as np
 
 from repro.core import SCHEMES, CompressionSpec, compression_ratio, psnr
 from repro.core import container
-from repro.fields import CloudConfig, cavitation_fields
+
+
+def _inspect_container(path: str, verify: bool = True) -> bool:
+    """Print a CZ container's self-description; returns CRC verdict."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        f.seek(0)
+        header, data_start = container._read_header(f)
+    sizes = header["chunk_sizes"]
+    nblks = header["chunk_nblocks"]
+    total = sum(sizes)
+    print(f"{path}")
+    print(f"  magic        {magic!r}  (container "
+          f"{'CZ1 legacy' if magic == container.MAGIC_V1 else 'CZ2'}, "
+          f"chunk format {header.get('format', 1)})")
+    print(f"  scheme       {header.get('scheme', header['spec']['scheme'])}  "
+          f"params {header.get('scheme_params', {})}")
+    print(f"  dtype        {header.get('dtype', header['spec'].get('dtype', 'float32'))}")
+    print(f"  field_shape  {header.get('field_shape', '(block batch)')}  "
+          f"nblocks {header.get('nblocks')}  block_size {header['spec']['block_size']}")
+    if header.get("raw_bytes"):
+        print(f"  bytes        {total} compressed / {header['raw_bytes']} raw "
+              f"(CR {header['raw_bytes']/max(1, total):.2f}x)")
+    crcs = header.get("chunk_crc32", [None] * len(sizes))
+    ok = True
+    print(f"  {'chunk':>5} {'blocks':>7} {'bytes':>10}  crc32")
+    with open(path, "rb") as f:
+        f.seek(data_start)
+        for i, (sz, nb, crc) in enumerate(zip(sizes, nblks, crcs)):
+            buf = f.read(sz)
+            if crc is None:
+                verdict = "-"
+            elif not verify:
+                verdict = f"{crc:08x}"
+            else:
+                good = (zlib.crc32(buf) & 0xFFFFFFFF) == crc
+                ok &= good
+                verdict = f"{crc:08x} {'ok' if good else 'MISMATCH'}"
+            print(f"  {i:>5} {nb:>7} {sz:>10}  {verdict}")
+    print(f"  CRC verify   {'ok' if ok else 'FAILED'}")
+    return ok
+
+
+def _inspect_dataset(root: str, verify: bool) -> bool:
+    from repro.store import CZDataset
+
+    ok = True
+    with CZDataset(root) as ds:
+        print(f"{root}: CZDataset v{ds.version}, spec {ds.spec.to_json()}")
+        for q in ds.quantities:
+            print(f"  {q}: shape {list(ds.shape(q))} dtype {ds.dtype(q)} "
+                  f"timesteps {ds.timesteps(q)}")
+            for ts in ds.timestep_info(q):
+                ok &= _inspect_container(os.path.join(root, ts["file"]), verify)
+    return ok
+
+
+def inspect_main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="cz-compress inspect")
+    ap.add_argument("path", help="a .cz container or a CZDataset directory")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="print CRCs without re-reading chunk data")
+    args = ap.parse_args(argv)
+    if os.path.isdir(args.path):
+        ok = _inspect_dataset(args.path, not args.no_verify)
+    else:
+        ok = _inspect_container(args.path, not args.no_verify)
+    return 0 if ok else 1
 
 
 def main(argv=None):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "inspect":
+        raise SystemExit(inspect_main(argv[1:]))
+
+    from repro.fields import CloudConfig, cavitation_fields
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--source", default="cavitation",
                     choices=["cavitation", "npy"])

@@ -33,7 +33,6 @@ from repro.launch.mesh import make_production_mesh
 from repro.models.costs import detailed_flops, model_flops
 from repro.models import ModelSettings, count_params, input_batch_specs, param_specs
 from repro.serve.step import build_decode_step, build_prefill_step
-from repro.train.sharding import batch_shardings, param_shardings
 from repro.train.step import build_train_step, train_state_specs
 
 _DTYPE_BYTES = {

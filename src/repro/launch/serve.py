@@ -48,7 +48,6 @@ def main(argv=None):
         lambda p, c, t, pos: decode_step(p, c, t, pos, cfg, st))
 
     # prefill by stepping the decoder over the prompt (cache fills in place)
-    tok = prompt[:, :1]
     t0 = time.time()
     for i in range(args.prompt_len):
         logits, cache = step_fn(params, cache, prompt[:, i:i + 1], jnp.int32(i))

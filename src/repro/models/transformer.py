@@ -8,7 +8,6 @@ depth) with configurable remat.  Parameters are dicts of stacked leaves
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -16,7 +15,7 @@ import jax.numpy as jnp
 
 from . import ssm
 from .attention import attention, decode_attention
-from .common import (Maker, gelu, rmsnorm, sinusoidal_position_at,
+from .common import (Maker, rmsnorm, sinusoidal_position_at,
                      sinusoidal_positions)
 from .moe import dense_ffn, moe_ffn
 

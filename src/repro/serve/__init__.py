@@ -1,1 +1,3 @@
-"""serve subsystem."""
+"""serve subsystem: jitted LLM decode/prefill steps (``serve.step``) and
+compressed-field region serving (``serve.region``, jax-free import path)."""
+from .region import FieldRegionServer  # noqa: F401

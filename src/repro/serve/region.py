@@ -1,0 +1,55 @@
+"""Compressed-field region serving: ``(quantity, t, lo, hi)`` queries
+against a CZDataset answered through a shared decode cache.
+
+Deliberately free of jax/model imports — serving compressed fields must not
+pull in the LLM decode stack (:mod:`repro.serve.step`).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+__all__ = ["FieldRegionServer"]
+
+
+class FieldRegionServer:
+    """Serves ``(quantity, t, lo, hi)`` region queries from a CZDataset.
+
+    Thin serving front over :meth:`repro.store.CZDataset.read_box`: all
+    queries share the store's pooled FieldReaders and their LRU chunk
+    caches, so a hot region costs one cache lookup instead of a decode —
+    the paper's §2.3 decompressor, turned into a query server.  Safe for
+    concurrent request threads.
+    """
+
+    def __init__(self, dataset, cache_readers: int = 16,
+                 cache_chunks: int = 32):
+        from repro.store import CZDataset
+
+        if isinstance(dataset, str):
+            dataset = CZDataset(dataset, mode="r",
+                                cache_readers=cache_readers,
+                                cache_chunks=cache_chunks)
+        self.ds = dataset
+        self._lock = threading.Lock()
+        self.queries = 0
+        self.query_s = 0.0
+
+    def query(self, quantity: str, t: int, lo, hi):
+        t0 = time.perf_counter()
+        out = self.ds.read_box(quantity, t, lo, hi)
+        with self._lock:
+            self.queries += 1
+            self.query_s += time.perf_counter() - t0
+        return out
+
+    def stats(self) -> dict:
+        s = self.ds.stats()
+        s.update({
+            "queries": self.queries,
+            "mean_latency_ms": 1e3 * self.query_s / max(1, self.queries),
+        })
+        return s
+
+    def close(self):
+        self.ds.close()

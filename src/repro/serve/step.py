@@ -1,17 +1,21 @@
 """Serve-step builders: batched single-token decode and prompt prefill,
 jitted with production-mesh shardings (KV sequence axis sharded over
-"model", batch over "data")."""
+"model", batch over "data").  The compressed-field analogue —
+:class:`~repro.serve.region.FieldRegionServer`, region queries against a
+CZDataset through a shared decode cache — lives in the jax-free
+:mod:`repro.serve.region` (re-exported here)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.models import ModelSettings, decode_step, prefill
 from repro.train.sharding import batch_shardings, cache_shardings, param_shardings
 
-__all__ = ["build_decode_step", "build_prefill_step"]
+from .region import FieldRegionServer  # noqa: F401  (back-compat re-export)
+
+__all__ = ["build_decode_step", "build_prefill_step", "FieldRegionServer"]
 
 
 def build_decode_step(cfg, mesh, *, settings: ModelSettings = ModelSettings(),

@@ -1,0 +1,52 @@
+"""``repro.store`` — sharded multi-quantity dataset store over CZ2 members.
+
+A petascale run is a *dataset* — many quantities x many timesteps — not a
+pile of loose files.  :class:`CZDataset` makes the paper's per-quantity,
+per-snapshot output layout first-class (Zarr-style manifest-driven store;
+WaveRange-style per-field, per-snapshot records):
+
+On-disk layout
+--------------
+
+::
+
+    dataset/
+      manifest.json            # the ONLY mutable file; atomic tmp+rename
+      p/
+        t000000.cz             # CZ2 container: quantity "p", timestep 0
+        t000001.cz
+      rho/
+        t000000.cz
+        t000001.cz
+
+* Every member is an ordinary CZ2 container (``repro.core.container``):
+  independently decompressible chunks, per-chunk CRC32, self-describing
+  JSON footer (scheme name + params + dtype tag) — each member also reads
+  standalone with ``read_field``/``FieldReader``.
+* ``manifest.json`` is the commit point.  Schema (format 1)::
+
+      {"magic": "CZDS", "format": 1,
+       "version": <int, +1 per commit>, "next_t": <int>,
+       "spec": {<dataset-default CompressionSpec>},
+       "quantities": {
+         "p": {"shape": [nx, ny, nz], "dtype": "float32",
+               "timesteps": [{"t": 0, "time": 9.4, "file": "p/t000000.cz",
+                              "bytes": ..., "raw_bytes": ...}, ...]}}}
+
+  A timestep exists iff the manifest references it; members are written
+  first and the manifest is replaced atomically, so a crash mid-append
+  leaves at most orphaned member files, never a torn dataset.
+* **Append mode** (``mode="a"``): an in-situ simulation opens the dataset
+  once and appends timesteps as they are produced; chunk encoding for all
+  quantities of a snapshot runs on one shared thread pool
+  (:class:`ShardWriter` — the paper's per-thread writers) with a single
+  ordered drain per file, byte-identical to a serial write.
+* **Region reads**: ``read_box(quantity, t, lo, hi)`` decodes only the
+  chunks covering the sub-box through per-member LRU chunk caches
+  (``FieldReader``) — never the whole field.
+"""
+from .dataset import CZDataset  # noqa: F401
+from .manifest import MANIFEST_NAME, ManifestError  # noqa: F401
+from .writer import ShardWriter  # noqa: F401
+
+__all__ = ["CZDataset", "ShardWriter", "ManifestError", "MANIFEST_NAME"]

@@ -1,0 +1,249 @@
+"""CZDataset: a directory of per-quantity/per-timestep CZ2 members.
+
+See :mod:`repro.store` for the on-disk layout.  One object serves both ends
+of the paper's workflow:
+
+* **append mode** — an in-situ simulation opens the dataset once and calls
+  :meth:`CZDataset.append` as snapshots are produced; every commit writes the
+  member files first and then atomically patches the manifest, so readers
+  never observe a half-written timestep.
+* **random access** — :meth:`CZDataset.read_box` decodes only the chunks
+  covering the requested sub-box through a pool of cached
+  :class:`~repro.core.container.FieldReader` objects (each with its own LRU
+  chunk cache); the full field is never inflated for a region query.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import re
+import threading
+
+import numpy as np
+
+from repro.core.container import FieldReader
+from repro.core.pipeline import CompressionSpec
+
+from .manifest import (
+    MANIFEST_NAME,
+    ManifestError,
+    new_manifest,
+    read_manifest,
+    write_manifest,
+)
+from .writer import ShardWriter
+
+__all__ = ["CZDataset"]
+
+_QUANTITY_RE = re.compile(r"^[A-Za-z0-9_.\-]+$")
+
+
+class CZDataset:
+    """Sharded multi-quantity dataset store over CZ2 member files.
+
+    Parameters
+    ----------
+    root:
+        Dataset directory.
+    mode:
+        ``"r"`` (read-only, manifest must exist) or ``"a"`` (append; the
+        dataset is created on first use if ``root`` holds no manifest).
+    spec:
+        Dataset-default :class:`CompressionSpec` for newly created datasets
+        (ignored when opening an existing one — the committed spec wins).
+        The dtype tag is re-derived per quantity from the appended array.
+    workers:
+        Encode threads shared by all member writes of this dataset
+        (``1`` = serial; output is byte-identical either way).
+    """
+
+    def __init__(self, root: str, mode: str = "r",
+                 spec: CompressionSpec | None = None, workers: int = 1,
+                 cache_readers: int = 8, cache_chunks: int = 8):
+        if mode not in ("r", "a"):
+            raise ValueError(f"mode must be 'r' or 'a', got {mode!r}")
+        self.root = str(root)
+        self.mode = mode
+        self._lock = threading.RLock()
+        self._cache_readers = cache_readers
+        self._cache_chunks = cache_chunks
+        self._readers: collections.OrderedDict[tuple[str, int], FieldReader] = \
+            collections.OrderedDict()
+        self._retired_decoded = 0
+        self._retired_hits = 0
+
+        try:
+            self._m = read_manifest(self.root)
+        except ManifestError:
+            if mode != "a" or os.path.exists(
+                    os.path.join(self.root, MANIFEST_NAME)):
+                raise  # corrupt, or missing in read-only mode: surface it
+            os.makedirs(self.root, exist_ok=True)
+            self._m = new_manifest((spec or CompressionSpec()).validate().to_json())
+            write_manifest(self.root, self._m)
+        self.spec = CompressionSpec.from_json(self._m["spec"])
+        self._writer = (ShardWriter(self.spec, workers=workers)
+                        if mode == "a" else None)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def quantities(self) -> list[str]:
+        return sorted(self._m["quantities"])
+
+    def timesteps(self, quantity: str) -> list[int]:
+        """Committed timestep indices for one quantity, in append order."""
+        return [ts["t"] for ts in self._entry(quantity)["timesteps"]]
+
+    def timestep_info(self, quantity: str, t: int | None = None):
+        """Committed timestep record(s) — ``{"t", "time", "file", "bytes",
+        "raw_bytes"}`` dicts (copies).  ``t=None`` returns the full list."""
+        if t is None:
+            return [dict(ts) for ts in self._entry(quantity)["timesteps"]]
+        return dict(self._timestep(quantity, int(t)))
+
+    def shape(self, quantity: str) -> tuple[int, int, int]:
+        return tuple(self._entry(quantity)["shape"])
+
+    def dtype(self, quantity: str) -> np.dtype:
+        return np.dtype(self._entry(quantity)["dtype"])
+
+    @property
+    def version(self) -> int:
+        return int(self._m["version"])
+
+    def _entry(self, quantity: str) -> dict:
+        try:
+            return self._m["quantities"][quantity]
+        except KeyError:
+            raise KeyError(
+                f"quantity {quantity!r} not in dataset "
+                f"(has: {', '.join(self.quantities) or 'none'})") from None
+
+    def _timestep(self, quantity: str, t: int) -> dict:
+        for ts in self._entry(quantity)["timesteps"]:
+            if ts["t"] == t:
+                return ts
+        raise KeyError(f"quantity {quantity!r} has no timestep {t} "
+                       f"(has: {self.timesteps(quantity)})")
+
+    def refresh(self) -> None:
+        """Re-read the manifest (pick up commits by a concurrent appender)."""
+        with self._lock:
+            self._m = read_manifest(self.root)
+
+    # -- append mode -------------------------------------------------------
+
+    def append(self, fields: dict[str, np.ndarray],
+               time: float | None = None) -> int:
+        """Commit one timestep of one or more quantities; returns its index.
+
+        Member files are written first (concurrently chunk-encoded through
+        the shared pool), then the manifest is patched atomically — a crash
+        mid-append leaves at most orphaned member files, never a timestep
+        that is half-visible.
+        """
+        if self._writer is None:
+            raise IOError("dataset opened read-only; reopen with mode='a'")
+        if not fields:
+            raise ValueError("append needs at least one quantity")
+        with self._lock:
+            t = int(self._m["next_t"])
+            staged = []
+            for q, field in fields.items():
+                if not _QUANTITY_RE.match(q):
+                    raise ValueError(f"invalid quantity name {q!r}")
+                field = np.asarray(field)
+                ent = self._m["quantities"].get(q)
+                if ent is not None and tuple(ent["shape"]) != field.shape:
+                    raise ValueError(
+                        f"quantity {q!r} has shape {tuple(ent['shape'])}, "
+                        f"append got {field.shape}")
+                rel = os.path.join(q, f"t{t:06d}.cz")
+                os.makedirs(os.path.join(self.root, q), exist_ok=True)
+                nbytes = self._writer.write(
+                    os.path.join(self.root, rel), field,
+                    extra_header={"quantity": q, "t": t, "time": time})
+                staged.append((q, field, rel, nbytes))
+            # all members on disk -> patch the manifest in one atomic commit
+            for q, field, rel, nbytes in staged:
+                ent = self._m["quantities"].setdefault(q, {
+                    "shape": list(field.shape),
+                    "dtype": str(self._writer.spec_for(field).np_dtype),
+                    "timesteps": [],
+                })
+                ent["timesteps"].append({
+                    "t": t, "time": time, "file": rel, "bytes": int(nbytes),
+                    "raw_bytes": int(field.nbytes),
+                })
+            self._m["next_t"] = t + 1
+            self._m["version"] = int(self._m["version"]) + 1
+            write_manifest(self.root, self._m)
+            return t
+
+    # -- random access -----------------------------------------------------
+
+    def reader(self, quantity: str, t: int) -> FieldReader:
+        """Cached (LRU) FieldReader for one member — the decode cache shared
+        by every region query against that quantity/timestep."""
+        key = (quantity, int(t))
+        with self._lock:
+            r = self._readers.get(key)
+            if r is not None:
+                self._readers.move_to_end(key)
+                return r
+            ts = self._timestep(quantity, int(t))
+            r = FieldReader(os.path.join(self.root, ts["file"]),
+                            cache_chunks=self._cache_chunks)
+            self._readers[key] = r
+            while len(self._readers) > self._cache_readers:
+                _, old = self._readers.popitem(last=False)
+                self._retired_decoded += old.chunks_decoded
+                self._retired_hits += old.cache_hits
+                old.close()
+            return r
+
+    def read_box(self, quantity: str, t: int, lo, hi) -> np.ndarray:
+        """Decode the sub-box ``[lo, hi)`` of one quantity at one timestep,
+        touching only the chunks that cover it."""
+        return self.reader(quantity, t).read_box(lo, hi)
+
+    def read_field(self, quantity: str, t: int) -> np.ndarray:
+        """Decode one full field (through the same chunk cache)."""
+        return self.reader(quantity, t).read_all()
+
+    def stats(self) -> dict:
+        """Aggregate decode-cache counters across member readers."""
+        with self._lock:
+            live = list(self._readers.values())
+            return {
+                "open_readers": len(live),
+                "chunks_decoded": self._retired_decoded
+                + sum(r.chunks_decoded for r in live),
+                "cache_hits": self._retired_hits
+                + sum(r.cache_hits for r in live),
+            }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        with self._lock:
+            for r in self._readers.values():
+                self._retired_decoded += r.chunks_decoded
+                self._retired_hits += r.cache_hits
+                r.close()
+            self._readers.clear()
+            if self._writer is not None:
+                self._writer.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __repr__(self) -> str:
+        qs = {q: len(self._m["quantities"][q]["timesteps"])
+              for q in self.quantities}
+        return (f"CZDataset({self.root!r}, mode={self.mode!r}, "
+                f"quantities={qs}, version={self.version})")

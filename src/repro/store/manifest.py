@@ -1,0 +1,85 @@
+"""Dataset manifest: one JSON file, committed atomically.
+
+The manifest is the *only* mutable object in a CZDataset.  Member files are
+immutable once written; a timestep exists iff the manifest references it, so
+the commit protocol is write-members -> write ``manifest.json.tmp`` -> fsync
+-> ``os.replace``.  A crash between member write and manifest commit leaves
+orphaned member files but never a dataset that references missing or partial
+data.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+__all__ = ["MANIFEST_NAME", "MANIFEST_FORMAT", "ManifestError",
+           "new_manifest", "read_manifest", "write_manifest"]
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_FORMAT = 1
+
+
+class ManifestError(IOError):
+    """The dataset manifest is missing, unreadable, or structurally invalid."""
+
+
+def new_manifest(spec_json: dict) -> dict:
+    return {
+        "magic": "CZDS",
+        "format": MANIFEST_FORMAT,
+        "version": 0,          # bumped on every commit
+        "next_t": 0,           # next timestep index to assign
+        "spec": spec_json,     # dataset-default CompressionSpec
+        "quantities": {},      # name -> {shape, dtype, timesteps: [...]}
+    }
+
+
+def _check(m: dict, root: str) -> dict:
+    if not isinstance(m, dict) or m.get("magic") != "CZDS":
+        raise ManifestError(
+            f"{os.path.join(root, MANIFEST_NAME)} is not a CZDataset manifest "
+            "(bad magic)")
+    if int(m.get("format", 0)) > MANIFEST_FORMAT:
+        raise ManifestError(
+            f"manifest format {m['format']} is newer than supported "
+            f"({MANIFEST_FORMAT}) — upgrade repro to read {root}")
+    for key in ("version", "next_t", "spec", "quantities"):
+        if key not in m:
+            raise ManifestError(f"manifest in {root} is missing {key!r}")
+    for q, ent in m["quantities"].items():
+        for key in ("shape", "dtype", "timesteps"):
+            if key not in ent:
+                raise ManifestError(
+                    f"manifest entry for quantity {q!r} is missing {key!r}")
+    return m
+
+
+def read_manifest(root: str) -> dict:
+    path = os.path.join(root, MANIFEST_NAME)
+    try:
+        with open(path) as f:
+            m = json.load(f)
+    except FileNotFoundError:
+        raise ManifestError(f"no {MANIFEST_NAME} in {root} — not a CZDataset "
+                            "(or the first commit never completed)") from None
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ManifestError(f"corrupt manifest {path}: {e}") from None
+    return _check(m, root)
+
+
+def write_manifest(root: str, manifest: dict) -> None:
+    """Atomic commit: tmp write + fsync + rename over the old manifest, then
+    fsync the directory so the rename itself is durable.  (Member files are
+    fsynced by :class:`~repro.store.ShardWriter` before this is called.)"""
+    path = os.path.join(root, MANIFEST_NAME)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dfd = os.open(root, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)

@@ -11,13 +11,9 @@ decompressed — the §Perf collective-bytes optimization.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.models import ModelSettings, lm_loss, param_specs
 from .optim import OptConfig, adamw_step, init_opt_state

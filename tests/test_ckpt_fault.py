@@ -81,7 +81,6 @@ def test_exclusive_offsets():
 
 
 def test_offsets_sharded_matches_np():
-    devs = jax.devices()
     from repro.launch.mesh import make_mesh
 
     mesh = make_mesh((1,), ("data",))

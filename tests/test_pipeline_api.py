@@ -202,6 +202,86 @@ def test_cz2_header_records_scheme_and_format(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Dtype tags (satellite): float64/float16 round-trip; CZ1 defaults to float32
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float64", "float16"])
+def test_raw_dtype_round_trips_bit_exact(tmp_path, dtype):
+    f = FIELD.astype(dtype)
+    spec = CompressionSpec(scheme="raw", block_size=16, dtype=dtype,
+                           buffer_bytes=1 << 16)
+    pipe = Pipeline(spec)
+    comp = pipe.compress(f)
+    assert comp.header["dtype"] == dtype
+    dec = pipe.decompress(comp)
+    assert dec.dtype == np.dtype(dtype)
+    np.testing.assert_array_equal(dec, f)
+
+    path = os.path.join(tmp_path, "f.cz")
+    container.write_field(path, f, spec)
+    out = container.read_field(path)
+    assert out.dtype == np.dtype(dtype)
+    np.testing.assert_array_equal(out, f)
+
+
+def test_lossy_scheme_casts_back_to_tagged_dtype():
+    spec = CompressionSpec(scheme="wavelet", eps=1e-3, block_size=16,
+                           dtype="float64")
+    pipe = Pipeline(spec)
+    dec = pipe.decompress(pipe.compress(FIELD.astype(np.float64)))
+    assert dec.dtype == np.float64
+    assert np.max(np.abs(dec - FIELD)) < 1.0
+
+
+def test_dtype_validation():
+    with pytest.raises(ValueError, match="unknown dtype"):
+        CompressionSpec(dtype="int32").validate()
+    with pytest.raises(ValueError, match="float32"):
+        CompressionSpec(scheme="fpzipx", dtype="float64").validate()
+    # headers written before the dtype tag default to float32
+    legacy = CompressionSpec().to_json()
+    del legacy["dtype"]
+    assert CompressionSpec.from_json(legacy).dtype == "float32"
+
+
+# ---------------------------------------------------------------------------
+# Parallel chunk workers (satellite): ordered drain, byte-identical output
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["wavelet", "szx", "raw"])
+def test_workers_produce_byte_identical_chunks(scheme):
+    spec = CompressionSpec(scheme=scheme, eps=1e-3, block_size=16,
+                           buffer_bytes=1 << 16)
+    blocks = np.asarray(blk.blockify(FIELD, 16))
+    serial = list(Pipeline(spec).iter_chunks(blocks))
+    for workers in (2, 8):
+        assert list(Pipeline(spec, workers=workers).iter_chunks(blocks)) == serial
+
+
+def test_write_field_workers_byte_identical(tmp_path):
+    spec = CompressionSpec(scheme="wavelet", block_size=16,
+                           buffer_bytes=1 << 16)
+    p1 = os.path.join(tmp_path, "w1.cz")
+    p4 = os.path.join(tmp_path, "w4.cz")
+    container.write_field(p1, FIELD, spec, workers=1)
+    container.write_field(p4, FIELD, spec, workers=4)
+    with open(p1, "rb") as a, open(p4, "rb") as b:
+        assert a.read() == b.read()
+
+
+def test_iter_chunks_parallel_is_still_lazy():
+    import inspect
+
+    spec = CompressionSpec(scheme="raw", block_size=16, buffer_bytes=1 << 16)
+    blocks = np.asarray(blk.blockify(FIELD, 16))
+    it = Pipeline(spec, workers=4).iter_chunks(blocks)
+    assert inspect.isgenerator(it)
+    chunk, nblk = next(it)
+    assert isinstance(chunk, bytes) and nblk >= 1
+    it.close()  # early close must not deadlock the pool
+
+
+# ---------------------------------------------------------------------------
 # CZ1 back-compat: files written by the seed code still read back bit-exact
 # ---------------------------------------------------------------------------
 
