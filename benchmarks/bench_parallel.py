@@ -1,0 +1,124 @@
+"""Rank-scaling throughput of the cluster engine (ISSUE 3 acceptance).
+
+Measures single-shared-file encode throughput of
+:class:`repro.cluster.ParallelCompressor` at 1/2/4(/8) ranks against the two
+one-process baselines: the serial writer and the ``workers=4`` thread path.
+The synthetic cavitation field is the paper's workload.
+
+Process scaling is bounded by the host: the script first calibrates
+*effective cores* (aggregate throughput of concurrent CPU-bound processes
+vs. one) and reports every speedup next to that ceiling — on a shared/
+throttled 2-vCPU CI box the ceiling itself can sit below 1.5x, while the
+same script on a real node shows near-linear rank scaling.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import shutil
+import tempfile
+import time
+import zlib
+
+from repro.core import CompressionSpec, container
+from repro.cluster import ParallelCompressor
+
+from .common import dataset, emit, save_json
+
+
+def _busy(_arg: int) -> float:
+    buf = os.urandom(1 << 20) * 4
+    t0 = time.time()
+    for _ in range(3):
+        zlib.compress(buf, 6)
+    return time.time() - t0
+
+
+def effective_cores(procs: int = 4) -> float:
+    """Aggregate CPU throughput of ``procs`` concurrent workers vs. one —
+    the hard ceiling on any process-parallel speedup on this host."""
+    serial = _busy(0)
+    with multiprocessing.get_context("spawn").Pool(procs) as pool:
+        pool.map(_busy, range(procs))  # exclude worker spawn from the window
+        t0 = time.time()
+        pool.map(_busy, range(procs))
+        wall = time.time() - t0
+    return procs * serial / wall
+
+
+def _timed(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        ts.append(time.time() - t0)
+    return min(ts)
+
+
+def run(quick: bool = True):
+    n = 96
+    reps = 2 if quick else 3
+    ranks_list = (1, 2, 4) if quick else (1, 2, 4, 8)
+    field = dataset("10k", n=n)["p"]
+    specs = {
+        # the paper's flagship lossy scheme ...
+        "wavelet": CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3,
+                                   block_size=16, buffer_bytes=1 << 17),
+        # ... and the restart-file lossless path, whose stage 2 dominates
+        # (the best showcase for rank scaling)
+        "fpzipx": CompressionSpec(scheme="fpzipx", block_size=16,
+                                  buffer_bytes=1 << 17, stage2="zlib9"),
+    }
+
+    cores = effective_cores(max(ranks_list))
+    results = {"n": n, "ranks": list(ranks_list),
+               "effective_cores": cores, "schemes": {}}
+    emit("parallel_effective_cores", cores * 1e6, f"x{cores:.2f}_ceiling")
+
+    out = tempfile.mkdtemp()
+    with ParallelCompressor(max(ranks_list)) as pc:
+        for label, spec in specs.items():
+            s_path = os.path.join(out, f"{label}.serial.cz")
+            t_path = os.path.join(out, f"{label}.threads.cz")
+            p_path = os.path.join(out, f"{label}.par.cz")
+            t_serial = _timed(lambda: container.write_field(s_path, field, spec),
+                              reps)
+            t_thread = _timed(
+                lambda: container.write_field(t_path, field, spec, workers=4),
+                reps)
+            # warm the pool and every worker's jit cache for each rank
+            # count's batch shape (map may hand a span to any idle worker)
+            for r in ranks_list:
+                for _ in range(2):
+                    pc.compress(p_path, field, spec, ranks=r)
+            rows = {"serial_s": t_serial, "threads4_s": t_thread,
+                    "threads4_speedup": t_serial / t_thread, "ranks": {}}
+            mb = field.nbytes / 2**20
+            emit(f"parallel_{label}_serial", t_serial * 1e6,
+                 f"{mb / t_serial:.0f}MBps")
+            emit(f"parallel_{label}_threads4", t_thread * 1e6,
+                 f"x{t_serial / t_thread:.2f}")
+            for r in ranks_list:
+                tr = _timed(
+                    lambda: pc.compress(p_path, field, spec, ranks=r), reps)
+                sp = t_serial / tr
+                rows["ranks"][r] = {"time_s": tr, "MBps": mb / tr,
+                                    "speedup_vs_serial": sp}
+                emit(f"parallel_{label}_r{r}", tr * 1e6,
+                     f"x{sp:.2f}_of_x{cores:.2f}_ceiling")
+            # identical output is the engine's contract — cheap to re-assert
+            with open(s_path, "rb") as a, open(p_path, "rb") as b:
+                assert a.read() == b.read(), f"{label}: parallel != serial"
+            results["schemes"][label] = rows
+
+    r4 = {lbl: rows["ranks"].get(4, {}).get("speedup_vs_serial")
+          for lbl, rows in results["schemes"].items()}
+    results["speedup_r4"] = r4
+    shutil.rmtree(out, ignore_errors=True)
+    path = save_json("parallel", results)
+    print(f"# wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -26,6 +26,7 @@ def main(argv=None) -> None:
         bench_gradcomp,
         bench_insitu,
         bench_methods,
+        bench_parallel,
         bench_scaling,
         bench_shuffle,
         bench_speed,
@@ -49,8 +50,16 @@ def main(argv=None) -> None:
         "ckpt": bench_ckpt,
         "gradcomp": bench_gradcomp,
         "store": bench_store,
+        "parallel": bench_parallel,
     }
     only = [s for s in args.only.split(",") if s]
+    unknown = sorted(set(only) - set(benches))
+    if unknown:
+        # a typo must fail loudly, not let the CI smoke job pass while
+        # silently running zero benchmarks
+        print(f"# unknown bench name(s): {', '.join(unknown)}; "
+              f"known: {', '.join(sorted(benches))}", file=sys.stderr)
+        raise SystemExit(2)
     failures = []
     for name, mod in benches.items():
         if only and name not in only:

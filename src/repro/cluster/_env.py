@@ -1,0 +1,47 @@
+"""Worker-process environment setup for the cluster engine.
+
+N rank processes each spinning up a multi-threaded BLAS/XLA runtime
+oversubscribes the node and can make the parallel path *slower* than serial
+— one compute thread per rank is the paper's model anyway.  The caps must be
+in the environment **before** the worker process loads numpy (OpenBLAS/OMP
+size their pools at library load) — too early for any in-worker initializer,
+since unpickling one already imports the package.  So the parent exports the
+caps around spawn-pool creation (:func:`worker_env`); the children inherit
+them at exec.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+_THREAD_VARS = ("OMP_NUM_THREADS", "OPENBLAS_NUM_THREADS",
+                "MKL_NUM_THREADS", "NUMEXPR_NUM_THREADS")
+
+
+@contextlib.contextmanager
+def worker_env():
+    """Temporarily export per-worker thread caps (explicit settings win);
+    restores the parent's environment on exit."""
+    saved: dict[str, str | None] = {}
+
+    def _set(var: str, val: str) -> None:
+        saved[var] = os.environ.get(var)
+        os.environ[var] = val
+
+    for var in _THREAD_VARS:
+        if var not in os.environ:
+            _set(var, "1")
+    flags = os.environ.get("XLA_FLAGS", "")
+    add = [f for f in ("--xla_cpu_multi_thread_eigen=false",
+                       "intra_op_parallelism_threads=1")
+           if f.split("=")[0].lstrip("-") not in flags]
+    if add:
+        _set("XLA_FLAGS", " ".join([flags] + add).strip())
+    try:
+        yield
+    finally:
+        for var, old in saved.items():
+            if old is None:
+                os.environ.pop(var, None)
+            else:
+                os.environ[var] = old

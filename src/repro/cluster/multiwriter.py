@@ -1,0 +1,263 @@
+"""Per-rank manifest sidecars for multi-writer in-situ append.
+
+A single-manifest dataset serializes every commit through one file.  In a
+rank-parallel in-situ run, each rank instead owns a :class:`RankWriter`: it
+writes its member files (rank-suffixed, so ranks can never collide on a
+path) and commits them to a private ``manifest.rank{r}.json`` sidecar —
+atomically, with zero coordination.  A coordinator later calls
+:func:`merge_manifests`, which folds every sidecar entry into the main
+``manifest.json`` in one atomic commit and then retires the sidecars.
+
+Crash safety at every point:
+
+* rank crash mid-append  — its sidecar never references the torn member;
+  the orphan is reclaimed by :meth:`CZDataset.gc`;
+* crash before the merge commit — ``manifest.json`` is untouched, the
+  dataset reads at its last committed state, sidecars survive and a re-run
+  merges them;
+* crash after the commit but before sidecar cleanup — the re-run sees every
+  entry already committed (merge is idempotent) and just deletes sidecars.
+"""
+from __future__ import annotations
+
+import contextlib
+import fcntl
+import os
+
+import numpy as np
+
+from repro.core import container
+from repro.core.pipeline import CompressionSpec
+from repro.store.dataset import _member_stats
+from repro.store.manifest import (
+    QUANTITY_RE,
+    ManifestError,
+    list_rank_manifests,
+    new_rank_manifest,
+    rank_manifest_name,
+    read_manifest,
+    read_rank_manifest,
+    write_manifest,
+    write_rank_manifest,
+)
+from repro.store.writer import ShardWriter
+
+__all__ = ["RankWriter", "merge_manifests"]
+
+#: advisory lock serializing sidecar commits against sidecar retirement
+_LOCK_NAME = ".sidecar.lock"
+
+
+@contextlib.contextmanager
+def _sidecar_lock(root: str):
+    """Exclusive flock held for sidecar commit (RankWriter.append) and
+    sidecar retirement (merge_manifests): without it, an entry committed
+    between the merge's final re-read and its unlink would vanish.  Member
+    writes stay outside the lock — only the tiny JSON commit is serialized,
+    so rank contention is negligible (the whole point of sidecars)."""
+    fd = os.open(os.path.join(root, _LOCK_NAME), os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
+
+
+class RankWriter:
+    """One rank's append channel into a shared CZDataset.
+
+    The dataset (and its committed default spec) must already exist — the
+    coordinator creates it once with ``CZDataset(root, "a", spec=...)``
+    before the ranks start.  Timestep indices are supplied by the caller
+    (the simulation's step counter), not allocated from ``next_t``, since
+    ranks commit independently.
+    """
+
+    def __init__(self, root: str, rank: int, spec: CompressionSpec | None = None,
+                 workers: int = 1, stats: bool = False):
+        self.root = str(root)
+        self.rank = int(rank)
+        if self.rank < 0:
+            raise ValueError(f"rank must be >= 0, got {rank}")
+        m = read_manifest(self.root)  # dataset must exist
+        self.spec = (CompressionSpec.from_json(m["spec"]) if spec is None
+                     else spec.validate())
+        self._writer = ShardWriter(self.spec, workers=workers)
+        self._stats = bool(stats)
+        try:
+            self._side = read_rank_manifest(self.root, self.rank)
+        except FileNotFoundError:
+            self._side = new_rank_manifest(self.rank)
+
+    def member_name(self, quantity: str, t: int) -> str:
+        """Rank-suffixed member path — two ranks can never collide."""
+        return os.path.join(quantity, f"t{int(t):06d}.r{self.rank}.cz")
+
+    def append(self, fields: dict[str, np.ndarray], t: int,
+               time: float | None = None) -> int:
+        """Write member files, then commit them to this rank's sidecar.
+
+        Uncommitted (merged) entries are invisible to dataset readers until
+        :func:`merge_manifests` folds the sidecar into the main manifest.
+        """
+        if not fields:
+            raise ValueError("append needs at least one quantity")
+        t = int(t)
+        done = {(e["quantity"], e["t"]) for e in self._side["entries"]}
+        staged = []
+        for q, field in fields.items():
+            if not QUANTITY_RE.match(q):
+                raise ValueError(f"invalid quantity name {q!r}")
+            if (q, t) in done:
+                raise ValueError(
+                    f"rank {self.rank} already appended {q!r} at t={t}")
+            field = np.asarray(field)
+            rel = self.member_name(q, t)
+            os.makedirs(os.path.join(self.root, q), exist_ok=True)
+            full = os.path.join(self.root, rel)
+            if os.path.exists(full):
+                # members are immutable; an existing file means this (q, t)
+                # was already written — merged-and-committed (a restarted
+                # rank replaying a step) or orphaned by a crash.  Rewriting
+                # in place could tear a committed member; refuse.
+                raise IOError(
+                    f"member {rel} already exists (committed or orphaned); "
+                    "refusing to overwrite — gc the dataset or use a new t")
+            member_spec = self._writer.spec_for(field)
+            nbytes = self._writer.write(
+                full, field, spec=member_spec,
+                extra_header={"quantity": q, "t": t, "time": time,
+                              "rank": self.rank})
+            entry = {
+                "quantity": q, "t": t, "time": time, "file": rel,
+                "bytes": int(nbytes), "raw_bytes": int(field.nbytes),
+                "shape": list(field.shape),
+                "dtype": str(member_spec.np_dtype),
+            }
+            if self._stats:
+                entry.update(_member_stats(field, container.read_field(full)))
+            staged.append(entry)
+        # all members fsynced on disk -> one atomic sidecar commit.  The
+        # on-disk sidecar is the truth for *unmerged* entries (a concurrent
+        # merge may have retired some), so reconcile under the lock first —
+        # a long-lived writer must not resurrect already-merged history.
+        with _sidecar_lock(self.root):
+            try:
+                self._side = read_rank_manifest(self.root, self.rank)
+            except FileNotFoundError:
+                self._side = new_rank_manifest(self.rank)
+            self._side["entries"].extend(staged)
+            write_rank_manifest(self.root, self._side)
+        return t
+
+    @property
+    def pending(self) -> int:
+        """Entries committed to this rank's sidecar but not yet merged
+        (read from disk — a concurrent merge may have retired some)."""
+        try:
+            return len(read_rank_manifest(self.root, self.rank)["entries"])
+        except FileNotFoundError:
+            return 0
+
+    def close(self) -> None:
+        self._writer.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def _committed(m: dict) -> dict[tuple[str, int], str]:
+    return {(q, int(ts["t"])): ts["file"]
+            for q, ent in m["quantities"].items()
+            for ts in ent["timesteps"]}
+
+
+def merge_manifests(root: str, remove_sidecars: bool = True) -> int:
+    """Fold every rank sidecar into ``manifest.json`` in one atomic commit.
+
+    Returns the number of newly merged entries.  Idempotent: entries already
+    in the manifest are skipped, so re-running after a crash at any point
+    converges.  Raises :class:`ManifestError` — *before* touching the main
+    manifest — on a conflict (two different members claim one
+    quantity/timestep), a sidecar referencing a missing member, or a shape
+    mismatch; the dataset stays readable at its last committed state.
+    """
+    m = read_manifest(root)
+    committed = _committed(m)
+    ranks = list_rank_manifests(root)
+    pending: list[tuple[int, dict]] = []
+    for rank in ranks:
+        side = read_rank_manifest(root, rank)
+        for e in side["entries"]:
+            key = (e["quantity"], int(e["t"]))
+            if key in committed:
+                if committed[key] != e["file"]:
+                    raise ManifestError(
+                        f"merge conflict in {root}: rank {rank} wrote "
+                        f"{e['file']} for {key[0]!r} t={key[1]} but "
+                        f"{committed[key]} is already committed")
+                continue  # already merged (idempotent re-run)
+            if not os.path.exists(os.path.join(root, e["file"])):
+                raise ManifestError(
+                    f"rank {rank} sidecar references missing member "
+                    f"{e['file']} — refusing to commit a torn timestep")
+            committed[key] = e["file"]
+            pending.append((rank, e))
+
+    if pending:
+        pending.sort(key=lambda p: (int(p[1]["t"]), p[1]["quantity"], p[0]))
+        touched = set()
+        for rank, e in pending:
+            q, t = e["quantity"], int(e["t"])
+            ent = m["quantities"].setdefault(q, {
+                "shape": list(e["shape"]),
+                "dtype": str(e["dtype"]),
+                "timesteps": [],
+            })
+            if tuple(ent["shape"]) != tuple(e["shape"]):
+                raise ManifestError(
+                    f"rank {rank} appended {q!r} with shape {e['shape']}, "
+                    f"dataset has {ent['shape']}")
+            if str(ent["dtype"]) != str(e["dtype"]):
+                raise ManifestError(
+                    f"rank {rank} appended {q!r} with dtype {e['dtype']}, "
+                    f"dataset has {ent['dtype']}")
+            rec = {"t": t, "time": e["time"], "file": e["file"],
+                   "bytes": int(e["bytes"]), "raw_bytes": int(e["raw_bytes"])}
+            for k in ("psnr", "max_err"):
+                if k in e:
+                    rec[k] = e[k]
+            ent["timesteps"].append(rec)
+            touched.add(q)
+            m["next_t"] = max(int(m["next_t"]), t + 1)
+        for q in touched:
+            m["quantities"][q]["timesteps"].sort(key=lambda ts: ts["t"])
+        m["version"] = int(m["version"]) + 1
+        write_manifest(root, m)  # the single atomic commit point
+
+    if remove_sidecars:
+        # a rank may have committed new entries after we read its sidecar:
+        # under the sidecar lock (which serializes us against every rank's
+        # commit), re-read, keep anything not yet in the manifest, and only
+        # retire a fully merged sidecar — concurrent appends are never
+        # dropped
+        for rank in ranks:
+            with _sidecar_lock(root):
+                try:
+                    side = read_rank_manifest(root, rank)
+                except FileNotFoundError:
+                    continue
+                remaining = [
+                    e for e in side["entries"]
+                    if committed.get((e["quantity"], int(e["t"]))) != e["file"]
+                ]
+                if remaining:
+                    side["entries"] = remaining
+                    write_rank_manifest(root, side)
+                else:
+                    os.unlink(os.path.join(root, rank_manifest_name(rank)))
+    return len(pending)

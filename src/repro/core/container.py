@@ -38,7 +38,8 @@ import numpy as np
 from . import blocks as blk
 from .pipeline import CompressedField, CompressionSpec, Pipeline
 
-__all__ = ["write_field", "write_compressed", "read_field", "FieldReader",
+__all__ = ["write_field", "write_compressed", "write_stream", "commit_footer",
+           "build_field_header", "read_field", "FieldReader",
            "MAGIC", "MAGIC_V1"]
 
 MAGIC = b"CZ2\0"
@@ -46,8 +47,37 @@ MAGIC_V1 = b"CZ1\0"
 _FOOTER_PTR = struct.Struct("<Q")
 
 
-def _write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
-                  base_header: dict, fsync: bool = False) -> int:
+def commit_footer(f, base_header: dict, sizes: list[int], nblks: list[int],
+                  crcs: list[int], footer_off: int,
+                  fsync: bool = False) -> int:
+    """Append the JSON footer at ``footer_off`` and patch the magic's footer
+    pointer; returns the container's total byte count.
+
+    The single source of truth for the CZ2 footer layout (header key order
+    included — it decides byte identity), shared by the streaming writer
+    below and the cluster engine's rank-parallel assembly
+    (``repro.cluster.engine``).
+    """
+    header = dict(base_header)
+    header.update({
+        "nblocks": int(sum(nblks)),
+        "chunk_nblocks": nblks,
+        "chunk_sizes": sizes,
+        "chunk_crc32": crcs,
+    })
+    hbytes = json.dumps(header).encode()
+    f.seek(footer_off)
+    f.write(hbytes)
+    f.seek(len(MAGIC))
+    f.write(_FOOTER_PTR.pack(footer_off))
+    if fsync:
+        f.flush()
+        os.fsync(f.fileno())
+    return footer_off + len(hbytes)
+
+
+def write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
+                 base_header: dict, fsync: bool = False) -> int:
     """Stream ``(chunk, nblk)`` pairs to a CZ2 file; one chunk in memory."""
     sizes: list[int] = []
     nblks: list[int] = []
@@ -60,22 +90,32 @@ def _write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
             sizes.append(len(chunk))
             nblks.append(nblk)
             crcs.append(zlib.crc32(chunk) & 0xFFFFFFFF)
-        header = dict(base_header)
-        header.update({
-            "nblocks": int(sum(nblks)),
-            "chunk_nblocks": nblks,
-            "chunk_sizes": sizes,
-            "chunk_crc32": crcs,
-        })
-        footer_off = f.tell()
-        hbytes = json.dumps(header).encode()
-        f.write(hbytes)
-        f.seek(len(MAGIC))
-        f.write(_FOOTER_PTR.pack(footer_off))
-        if fsync:
-            f.flush()
-            os.fsync(f.fileno())
-    return len(MAGIC) + 8 + sum(sizes) + len(hbytes)
+        return commit_footer(f, base_header, sizes, nblks, crcs, f.tell(),
+                             fsync=fsync)
+
+
+def build_field_header(pipe: Pipeline, source,
+                       extra_header: dict | None = None):
+    """Assemble a container header for a 3D field / 4D block batch and
+    return ``(header, blocks)``.
+
+    Header key *insertion order* decides byte identity of the JSON footer,
+    so this is the one implementation shared by :func:`write_compressed` and
+    the cluster engine's rank-parallel writer (``repro.cluster.engine``).
+    """
+    spec = pipe.spec
+    data = np.asarray(source)
+    header = pipe.base_header()
+    if data.ndim == 3:
+        header["field_shape"] = list(data.shape)
+        data = np.asarray(
+            blk.blockify(np.asarray(data, spec.np_dtype), spec.block_size))
+    elif data.ndim != 4:
+        raise ValueError(f"expected 3D field or 4D block batch, got {data.shape}")
+    header["raw_bytes"] = int(data.size * spec.np_dtype.itemsize)
+    if extra_header:
+        header.update(extra_header)
+    return header, data
 
 
 def write_compressed(path: str, source, spec: CompressionSpec | None = None,
@@ -96,24 +136,14 @@ def write_compressed(path: str, source, spec: CompressionSpec | None = None,
         for k in ("chunk_nblocks", "chunk_sizes", "chunk_crc32", "nblocks"):
             header.pop(k, None)
         pairs = zip(source.chunks, source.header["chunk_nblocks"])
-        return _write_stream(path, pairs, header, fsync=fsync)
+        return write_stream(path, pairs, header, fsync=fsync)
 
     if spec is None:
         raise TypeError("spec is required when writing a raw field/blocks")
     pipe = Pipeline(spec, workers=workers)
-    data = np.asarray(source)
-    header = pipe.base_header()
-    if data.ndim == 3:
-        header["field_shape"] = list(data.shape)
-        data = np.asarray(
-            blk.blockify(np.asarray(data, spec.np_dtype), spec.block_size))
-    elif data.ndim != 4:
-        raise ValueError(f"expected 3D field or 4D block batch, got {data.shape}")
-    header["raw_bytes"] = int(data.size * spec.np_dtype.itemsize)
-    if extra_header:
-        header.update(extra_header)
+    header, data = build_field_header(pipe, source, extra_header)
     chunk_iter = pipe.iter_chunks(data, workers=workers, executor=executor)
-    return _write_stream(path, chunk_iter, header, fsync=fsync)
+    return write_stream(path, chunk_iter, header, fsync=fsync)
 
 
 def write_field(path: str, field: np.ndarray, spec: CompressionSpec,

@@ -8,8 +8,11 @@ Examples:
   python -m repro.launch.compress --source cavitation --t 9.4 --n 128 \
       --scheme wavelet --wavelet w3ai --eps 1e-3 --out /tmp/fields
   python -m repro.launch.compress --decompress /tmp/fields/p.cz --verify-against /tmp/p.npy
+  cz-compress parallel --ranks 4 --n 128 --out /tmp/fields  # rank-parallel engine
   cz-compress inspect /tmp/fields/p.cz          # header + chunk table + CRCs
   cz-compress inspect artifacts/example_dataset # CZDataset manifest summary
+  cz-compress inspect --stats DATASET           # per-member CR/PSNR table
+  cz-compress gc --dry-run DATASET              # list orphaned members
 """
 from __future__ import annotations
 
@@ -81,12 +84,46 @@ def _inspect_dataset(root: str, verify: bool) -> bool:
     return ok
 
 
+def _stats_table(root: str) -> int:
+    """Per-member compression factor + PSNR table (the paper's testbed-of-
+    comparison readout).  PSNR/max_err come from append-time stats
+    (``CZDataset(..., stats=True)`` or ``RankWriter(..., stats=True)``);
+    members appended without them show '-'."""
+    from repro.store import CZDataset
+
+    with CZDataset(root) as ds:
+        print(f"{root}: CZDataset v{ds.version}, "
+              f"scheme {ds.spec.scheme}, eps {ds.spec.eps}")
+        print(f"  {'quantity':<12} {'t':>4} {'bytes':>12} {'raw':>12} "
+              f"{'CR':>8} {'PSNR(dB)':>9} {'max_err':>10}")
+        for q in ds.quantities:
+            for ts in ds.timestep_info(q):
+                cr = compression_ratio(ts["raw_bytes"], ts["bytes"])
+                p = ts.get("psnr", "-")
+                if p is None:
+                    p = "inf"       # lossless member (recorded as null)
+                elif isinstance(p, float):
+                    p = f"{p:.2f}"
+                e = ts.get("max_err", "-")
+                if isinstance(e, float):
+                    e = f"{e:.3e}"
+                print(f"  {q:<12} {ts['t']:>4} {ts['bytes']:>12} "
+                      f"{ts['raw_bytes']:>12} {cr:>8.2f} {p:>9} {e:>10}")
+    return 0
+
+
 def inspect_main(argv) -> int:
     ap = argparse.ArgumentParser(prog="cz-compress inspect")
     ap.add_argument("path", help="a .cz container or a CZDataset directory")
     ap.add_argument("--no-verify", action="store_true",
                     help="print CRCs without re-reading chunk data")
+    ap.add_argument("--stats", action="store_true",
+                    help="per-member CR/PSNR table for a dataset directory")
     args = ap.parse_args(argv)
+    if args.stats:
+        if not os.path.isdir(args.path):
+            ap.error("--stats needs a CZDataset directory")
+        return _stats_table(args.path)
     if os.path.isdir(args.path):
         ok = _inspect_dataset(args.path, not args.no_verify)
     else:
@@ -94,10 +131,108 @@ def inspect_main(argv) -> int:
     return 0 if ok else 1
 
 
+def gc_main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="cz-compress gc",
+        description="Delete orphaned dataset members (on disk but absent "
+                    "from the manifest, e.g. after a torn append or an "
+                    "aborted rank merge).  Members pending in rank sidecars "
+                    "are never touched.")
+    ap.add_argument("root", help="CZDataset directory")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="list orphans without deleting")
+    args = ap.parse_args(argv)
+    from repro.store import CZDataset, MANIFEST_NAME
+
+    if not os.path.exists(os.path.join(args.root, MANIFEST_NAME)):
+        print(f"error: no {MANIFEST_NAME} in {args.root}", file=sys.stderr)
+        return 1
+    with CZDataset(args.root, "r" if args.dry_run else "a") as ds:
+        orphans = ds.gc(dry_run=args.dry_run)
+    verb = "would delete" if args.dry_run else "deleted"
+    for rel in orphans:
+        print(f"{verb} {rel}")
+    if orphans:
+        print(f"{len(orphans)} orphan(s) "
+              f"{'found' if args.dry_run else 'deleted'}")
+    else:
+        print("dataset clean — no orphans")
+    return 0
+
+
+def parallel_main(argv) -> int:
+    """Rank-parallel single-shared-file compression (repro.cluster.engine)."""
+    from repro.cluster import ParallelCompressor
+    from repro.fields import CloudConfig, cavitation_fields
+
+    ap = argparse.ArgumentParser(prog="cz-compress parallel")
+    ap.add_argument("--ranks", type=int, default=4,
+                    help="worker processes (the MPI-rank stand-in)")
+    ap.add_argument("--source", default="cavitation",
+                    choices=["cavitation", "npy"])
+    ap.add_argument("--npy", default="", help="input .npy for --source npy")
+    ap.add_argument("--t", type=float, default=9.4)
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--qoi", default="p,rho,E,a2")
+    ap.add_argument("--scheme", default="wavelet")
+    ap.add_argument("--wavelet", default="w3ai")
+    ap.add_argument("--eps", type=float, default=1e-3)
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--shuffle", default="byte")
+    ap.add_argument("--zero-bits", type=int, default=0)
+    ap.add_argument("--stage2", default="zlib")
+    ap.add_argument("--precision", type=int, default=32)
+    ap.add_argument("--buffer-bytes", type=int, default=1 << 20)
+    ap.add_argument("--out", default="artifacts/fields")
+    ap.add_argument("--check-identical", action="store_true",
+                    help="also write serially and verify the shared file is "
+                    "bit-identical (the engine's core guarantee)")
+    args = ap.parse_args(argv)
+
+    spec = CompressionSpec(
+        scheme=args.scheme, wavelet=args.wavelet, eps=args.eps,
+        block_size=args.block_size, shuffle=args.shuffle,
+        zero_bits=args.zero_bits, stage2=args.stage2,
+        precision=args.precision, buffer_bytes=args.buffer_bytes)
+    if args.source == "npy":
+        fields = {"field": np.load(args.npy).astype(np.float32)}
+    else:
+        fields = cavitation_fields(CloudConfig(n=args.n), args.t)
+        fields = {k: v for k, v in fields.items() if k in args.qoi.split(",")}
+    os.makedirs(args.out, exist_ok=True)
+
+    ok = True
+    with ParallelCompressor(args.ranks) as pc:
+        for name, f in fields.items():
+            path = os.path.join(args.out, f"{name}.cz")
+            t0 = time.time()
+            nbytes = pc.compress(path, f, spec)
+            dt = time.time() - t0
+            dec = container.read_field(path)
+            line = (f"{name:5s} ranks={args.ranks} "
+                    f"CR={compression_ratio(f.nbytes, nbytes):8.2f} "
+                    f"PSNR={psnr(f, dec):7.2f} dB "
+                    f"{f.nbytes / 2**20 / dt:6.1f} MB/s -> {path}")
+            if args.check_identical:
+                ref = path + ".serial"
+                container.write_field(ref, f, spec)
+                with open(path, "rb") as a, open(ref, "rb") as b:
+                    same = a.read() == b.read()
+                os.unlink(ref)
+                ok &= same
+                line += f"  [{'bit-identical' if same else 'MISMATCH'}]"
+            print(line)
+    return 0 if ok else 1
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "inspect":
         raise SystemExit(inspect_main(argv[1:]))
+    if argv and argv[0] == "gc":
+        raise SystemExit(gc_main(argv[1:]))
+    if argv and argv[0] == "parallel":
+        raise SystemExit(parallel_main(argv[1:]))
 
     from repro.fields import CloudConfig, cavitation_fields
 

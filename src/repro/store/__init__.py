@@ -44,9 +44,15 @@ On-disk layout
 * **Region reads**: ``read_box(quantity, t, lo, hi)`` decodes only the
   chunks covering the sub-box through per-member LRU chunk caches
   (``FieldReader``) — never the whole field.
+* **Multi-writer runs** (``repro.cluster.multiwriter``): per-rank
+  ``manifest.rank{r}.json`` sidecars commit independently during in-situ
+  append and are folded into ``manifest.json`` by one atomic merge;
+  ``CZDataset.gc()`` reclaims orphans from torn appends or aborted merges
+  without ever touching sidecar-referenced (still pending) members.
 """
 from .dataset import CZDataset  # noqa: F401
 from .manifest import MANIFEST_NAME, ManifestError  # noqa: F401
-from .writer import ShardWriter  # noqa: F401
+from .writer import DtypeCoercionWarning, ShardWriter  # noqa: F401
 
-__all__ = ["CZDataset", "ShardWriter", "ManifestError", "MANIFEST_NAME"]
+__all__ = ["CZDataset", "ShardWriter", "DtypeCoercionWarning",
+           "ManifestError", "MANIFEST_NAME"]

@@ -16,26 +16,39 @@ from __future__ import annotations
 
 import collections
 import os
-import re
 import threading
 
 import numpy as np
 
+from repro.core import container, metrics
 from repro.core.container import FieldReader
 from repro.core.pipeline import CompressionSpec
 
 from .manifest import (
     MANIFEST_NAME,
+    QUANTITY_RE,
+    RANK_MANIFEST_RE,
     ManifestError,
+    list_rank_manifests,
     new_manifest,
     read_manifest,
+    read_rank_manifest,
     write_manifest,
 )
 from .writer import ShardWriter
 
 __all__ = ["CZDataset"]
 
-_QUANTITY_RE = re.compile(r"^[A-Za-z0-9_.\-]+$")
+_QUANTITY_RE = QUANTITY_RE  # back-compat alias
+
+
+def _member_stats(field: np.ndarray, dec: np.ndarray) -> dict:
+    """Per-member quality record (PSNR is None when the member is lossless —
+    JSON has no Infinity)."""
+    p = metrics.psnr(field, dec)
+    err = float(np.max(np.abs(np.asarray(field, np.float64)
+                              - np.asarray(dec, np.float64))))
+    return {"psnr": float(p) if np.isfinite(p) else None, "max_err": err}
 
 
 class CZDataset:
@@ -55,15 +68,22 @@ class CZDataset:
     workers:
         Encode threads shared by all member writes of this dataset
         (``1`` = serial; output is byte-identical either way).
+    stats:
+        Record per-member quality stats (PSNR / max error vs. the appended
+        field, via :mod:`repro.core.metrics`) in each committed timestep —
+        the paper's testbed-of-comparison readout, shown by
+        ``cz-compress inspect --stats``.  Costs one decode per append.
     """
 
     def __init__(self, root: str, mode: str = "r",
                  spec: CompressionSpec | None = None, workers: int = 1,
-                 cache_readers: int = 8, cache_chunks: int = 8):
+                 cache_readers: int = 8, cache_chunks: int = 8,
+                 stats: bool = False):
         if mode not in ("r", "a"):
             raise ValueError(f"mode must be 'r' or 'a', got {mode!r}")
         self.root = str(root)
         self.mode = mode
+        self._stats = bool(stats)
         self._lock = threading.RLock()
         self._cache_readers = cache_readers
         self._cache_chunks = cache_chunks
@@ -148,6 +168,13 @@ class CZDataset:
         if not fields:
             raise ValueError("append needs at least one quantity")
         with self._lock:
+            # re-read before patching: merge_manifests (rank sidecars) may
+            # have committed entries since this handle last saw the manifest
+            # — a stale in-memory copy would clobber them and reuse their
+            # timestep indices.  (Appending *concurrently* with a merge from
+            # another process remains a documented single-coordinator
+            # assumption; rank-parallel writers go through RankWriter.)
+            self._m = read_manifest(self.root)
             t = int(self._m["next_t"])
             staged = []
             for q, field in fields.items():
@@ -159,23 +186,34 @@ class CZDataset:
                     raise ValueError(
                         f"quantity {q!r} has shape {tuple(ent['shape'])}, "
                         f"append got {field.shape}")
+                member_spec = self._writer.spec_for(field)
+                if ent is not None and \
+                        str(ent["dtype"]) != str(member_spec.np_dtype):
+                    raise ValueError(
+                        f"quantity {q!r} is {ent['dtype']}, append got "
+                        f"{member_spec.np_dtype} — the quantity-level dtype "
+                        "tag is fixed at first append")
                 rel = os.path.join(q, f"t{t:06d}.cz")
                 os.makedirs(os.path.join(self.root, q), exist_ok=True)
+                full = os.path.join(self.root, rel)
                 nbytes = self._writer.write(
-                    os.path.join(self.root, rel), field,
+                    full, field, spec=member_spec,
                     extra_header={"quantity": q, "t": t, "time": time})
-                staged.append((q, field, rel, nbytes))
+                rec = {"t": t, "time": time, "file": rel, "bytes": int(nbytes),
+                       "raw_bytes": int(field.nbytes)}
+                if self._stats:
+                    rec.update(_member_stats(field, container.read_field(full)))
+                staged.append((q, field, member_spec, rec))
             # all members on disk -> patch the manifest in one atomic commit
-            for q, field, rel, nbytes in staged:
-                ent = self._m["quantities"].setdefault(q, {
-                    "shape": list(field.shape),
-                    "dtype": str(self._writer.spec_for(field).np_dtype),
-                    "timesteps": [],
-                })
-                ent["timesteps"].append({
-                    "t": t, "time": time, "file": rel, "bytes": int(nbytes),
-                    "raw_bytes": int(field.nbytes),
-                })
+            for q, field, member_spec, rec in staged:
+                ent = self._m["quantities"].get(q)
+                if ent is None:
+                    ent = self._m["quantities"][q] = {
+                        "shape": list(field.shape),
+                        "dtype": str(member_spec.np_dtype),
+                        "timesteps": [],
+                    }
+                ent["timesteps"].append(rec)
             self._m["next_t"] = t + 1
             self._m["version"] = int(self._m["version"]) + 1
             write_manifest(self.root, self._m)
@@ -223,6 +261,54 @@ class CZDataset:
                 "cache_hits": self._retired_hits
                 + sum(r.cache_hits for r in live),
             }
+
+    # -- retention ---------------------------------------------------------
+
+    def gc(self, dry_run: bool = False) -> list[str]:
+        """Delete orphaned files: members on disk but absent from the
+        manifest (a torn append or an aborted rank merge) and stale
+        ``.tmp``/``.part`` leftovers.  Returns the orphans' relative paths.
+
+        Members referenced by an unmerged rank sidecar
+        (``manifest.rank{r}.json``) are *live* — they are committed data
+        awaiting :func:`repro.cluster.multiwriter.merge_manifests` — and are
+        never collected.  Run gc quiesced (no concurrent appenders).
+        ``dry_run=True`` only lists; actual deletion needs ``mode='a'``.
+        """
+        with self._lock:
+            self._m = read_manifest(self.root)
+            live = {os.path.normpath(ts["file"])
+                    for ent in self._m["quantities"].values()
+                    for ts in ent["timesteps"]}
+            for rank in list_rank_manifests(self.root):
+                side = read_rank_manifest(self.root, rank)
+                live |= {os.path.normpath(e["file"]) for e in side["entries"]}
+            orphans = []
+            for dirpath, _dirnames, filenames in os.walk(self.root):
+                for fn in filenames:
+                    rel = os.path.relpath(os.path.join(dirpath, fn), self.root)
+                    if rel == MANIFEST_NAME or RANK_MANIFEST_RE.match(rel):
+                        continue
+                    if fn.endswith((".tmp", ".part")):
+                        orphans.append(rel)
+                    elif fn.endswith(".cz") and os.path.normpath(rel) not in live:
+                        orphans.append(rel)
+            orphans.sort()
+            if dry_run or not orphans:
+                return orphans
+            if self.mode != "a":
+                raise IOError("dataset opened read-only; gc deletion needs "
+                              "mode='a' (or use dry_run=True)")
+            for rel in orphans:
+                os.unlink(os.path.join(self.root, rel))
+            for dirpath, _dirnames, _filenames in os.walk(self.root,
+                                                          topdown=False):
+                if dirpath != self.root:
+                    try:
+                        os.rmdir(dirpath)  # prune now-empty quantity dirs
+                    except OSError:
+                        pass
+            return orphans
 
     # -- lifecycle ---------------------------------------------------------
 

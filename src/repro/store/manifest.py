@@ -6,17 +6,33 @@ the commit protocol is write-members -> write ``manifest.json.tmp`` -> fsync
 -> ``os.replace``.  A crash between member write and manifest commit leaves
 orphaned member files but never a dataset that references missing or partial
 data.
+
+Rank sidecars (``manifest.rank{r}.json``) extend the same protocol to
+multi-writer runs: each rank commits its own sidecar atomically, with no
+contention on ``manifest.json``, and a coordinator later folds them into the
+main manifest (``repro.cluster.multiwriter.merge_manifests``).  A sidecar
+entry is *live* — :meth:`CZDataset.gc` must not collect its member — until
+the merge commits it and deletes the sidecar.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 
-__all__ = ["MANIFEST_NAME", "MANIFEST_FORMAT", "ManifestError",
-           "new_manifest", "read_manifest", "write_manifest"]
+__all__ = ["MANIFEST_NAME", "MANIFEST_FORMAT", "QUANTITY_RE", "ManifestError",
+           "new_manifest", "read_manifest", "write_manifest",
+           "RANK_MANIFEST_RE", "rank_manifest_name", "list_rank_manifests",
+           "new_rank_manifest", "read_rank_manifest", "write_rank_manifest"]
 
 MANIFEST_NAME = "manifest.json"
 MANIFEST_FORMAT = 1
+
+#: legal quantity names (also member subdirectory names); the lookahead
+#: rejects all-dot names ('.', '..') that would escape the dataset root
+QUANTITY_RE = re.compile(r"^(?!\.+$)[A-Za-z0-9_.\-]+$")
+
+RANK_MANIFEST_RE = re.compile(r"^manifest\.rank(\d+)\.json$")
 
 
 class ManifestError(IOError):
@@ -54,27 +70,33 @@ def _check(m: dict, root: str) -> dict:
     return m
 
 
+def _load_json(path: str, what: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ManifestError(f"corrupt {what} {path}: {e}") from None
+
+
 def read_manifest(root: str) -> dict:
     path = os.path.join(root, MANIFEST_NAME)
     try:
-        with open(path) as f:
-            m = json.load(f)
+        m = _load_json(path, "manifest")
     except FileNotFoundError:
         raise ManifestError(f"no {MANIFEST_NAME} in {root} — not a CZDataset "
                             "(or the first commit never completed)") from None
-    except (json.JSONDecodeError, UnicodeDecodeError) as e:
-        raise ManifestError(f"corrupt manifest {path}: {e}") from None
     return _check(m, root)
 
 
-def write_manifest(root: str, manifest: dict) -> None:
-    """Atomic commit: tmp write + fsync + rename over the old manifest, then
-    fsync the directory so the rename itself is durable.  (Member files are
-    fsynced by :class:`~repro.store.ShardWriter` before this is called.)"""
-    path = os.path.join(root, MANIFEST_NAME)
+def _atomic_json(root: str, name: str, obj: dict) -> None:
+    """tmp write + fsync + rename + directory fsync — the commit primitive
+    shared by the main manifest and the per-rank sidecars."""
+    path = os.path.join(root, name)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump(manifest, f, indent=1)
+        json.dump(obj, f, indent=1)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
@@ -83,3 +105,57 @@ def write_manifest(root: str, manifest: dict) -> None:
         os.fsync(dfd)
     finally:
         os.close(dfd)
+
+
+def write_manifest(root: str, manifest: dict) -> None:
+    """Atomic commit: tmp write + fsync + rename over the old manifest, then
+    fsync the directory so the rename itself is durable.  (Member files are
+    fsynced by :class:`~repro.store.ShardWriter` before this is called.)"""
+    _atomic_json(root, MANIFEST_NAME, manifest)
+
+
+# -- per-rank sidecars -------------------------------------------------------
+
+def rank_manifest_name(rank: int) -> str:
+    return f"manifest.rank{int(rank)}.json"
+
+
+def list_rank_manifests(root: str) -> list[int]:
+    """Ranks with a committed sidecar in ``root``, ascending."""
+    ranks = []
+    try:
+        names = os.listdir(root)
+    except FileNotFoundError:
+        return ranks
+    for name in names:
+        m = RANK_MANIFEST_RE.match(name)
+        if m:
+            ranks.append(int(m.group(1)))
+    return sorted(ranks)
+
+
+def new_rank_manifest(rank: int) -> dict:
+    return {"magic": "CZRK", "format": MANIFEST_FORMAT,
+            "rank": int(rank), "entries": []}
+
+
+def read_rank_manifest(root: str, rank: int) -> dict:
+    path = os.path.join(root, rank_manifest_name(rank))
+    side = _load_json(path, "rank sidecar")  # FileNotFoundError propagates
+    if not isinstance(side, dict) or side.get("magic") != "CZRK":
+        raise ManifestError(f"{path} is not a rank sidecar (bad magic)")
+    if int(side.get("rank", -1)) != int(rank):
+        raise ManifestError(
+            f"{path} claims rank {side.get('rank')}, expected {rank}")
+    for e in side.get("entries", []):
+        for key in ("quantity", "t", "time", "file", "bytes", "raw_bytes",
+                    "shape", "dtype"):
+            if key not in e:
+                raise ManifestError(f"sidecar entry in {path} missing {key!r}")
+    return side
+
+
+def write_rank_manifest(root: str, side: dict) -> None:
+    """Atomic sidecar commit — a rank's private, contention-free analogue of
+    :func:`write_manifest`."""
+    _atomic_json(root, rank_manifest_name(side["rank"]), side)

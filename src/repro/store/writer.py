@@ -13,13 +13,20 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import warnings
 
 import numpy as np
 
 from repro.core import container
 from repro.core.pipeline import DTYPES, CompressionSpec
 
-__all__ = ["ShardWriter"]
+__all__ = ["ShardWriter", "DtypeCoercionWarning"]
+
+
+class DtypeCoercionWarning(UserWarning):
+    """A field's dtype could not be carried through the dataset spec's scheme
+    and the value stream was cast to the spec's dtype (e.g. float64 into an
+    fpzipx dataset, whose lossless guarantee is float32-only)."""
 
 
 class ShardWriter:
@@ -35,28 +42,44 @@ class ShardWriter:
         """Dataset spec re-tagged with the field's dtype (auto dtype tags).
         Dtypes the spec's scheme can't take (unsupported ones, or e.g.
         float64 into an fpzipx dataset) fall back to the spec's own dtype —
-        the field is coerced, never rejected mid-append."""
+        the field is coerced, never rejected mid-append, but the cast is
+        surfaced as a :class:`DtypeCoercionWarning` rather than silent."""
         dt = str(np.asarray(field).dtype)
-        if dt == self.spec.dtype or dt not in DTYPES:
+        if dt == self.spec.dtype:
+            return self.spec
+        if dt not in DTYPES:
+            warnings.warn(
+                f"dtype {dt} is not a supported field dtype {DTYPES}; "
+                f"values will be cast to {self.spec.dtype}",
+                DtypeCoercionWarning, stacklevel=3)
             return self.spec
         try:
             return dataclasses.replace(self.spec, dtype=dt).validate()
-        except ValueError:
+        except ValueError as e:
+            warnings.warn(
+                f"scheme {self.spec.scheme!r} cannot encode dtype {dt} "
+                f"({e}); values will be cast to {self.spec.dtype}",
+                DtypeCoercionWarning, stacklevel=3)
             return self.spec
 
     def write(self, path: str, field: np.ndarray,
-              extra_header: dict | None = None) -> int:
+              extra_header: dict | None = None,
+              spec: CompressionSpec | None = None) -> int:
         """Stream one field into a CZ2 file; returns bytes written.
 
-        Members are fsynced: the dataset's atomic-manifest guarantee needs
-        member data on stable storage *before* the manifest references it.
+        ``spec`` lets a caller that already ran :meth:`spec_for` (e.g. for
+        the manifest's dtype tag) pass it in instead of re-deriving it —
+        and re-emitting any coercion warning.  Members are fsynced: the
+        dataset's atomic-manifest guarantee needs member data on stable
+        storage *before* the manifest references it.
         """
         field = np.asarray(field)
         if field.ndim != 3:
             raise ValueError(f"expected a 3D field, got shape {field.shape}")
         return container.write_compressed(
-            path, field, self.spec_for(field), extra_header=extra_header,
-            workers=self.workers, executor=self._pool, fsync=True)
+            path, field, spec or self.spec_for(field),
+            extra_header=extra_header, workers=self.workers,
+            executor=self._pool, fsync=True)
 
     def close(self) -> None:
         if self._pool is not None:

@@ -253,12 +253,16 @@ def test_evicted_reader_still_serves(tmp_path):
 
 def test_append_dtype_unsupported_by_scheme_coerces(tmp_path):
     """fpzipx is float32-only: a float64 append must coerce (the documented
-    fallback), not abort mid-append — FieldSnapshotter's default hits this."""
+    fallback, surfaced as a DtypeCoercionWarning), not abort mid-append —
+    FieldSnapshotter's default hits this."""
+    from repro.store import DtypeCoercionWarning
+
     root = os.path.join(tmp_path, "ds")
     f64 = FIELDS["p"].astype(np.float64)
     with CZDataset(root, "a",
                    spec=CompressionSpec(scheme="fpzipx", block_size=BS)) as ds:
-        ds.append({"p": f64})
+        with pytest.warns(DtypeCoercionWarning):
+            ds.append({"p": f64})
     with CZDataset(root) as ds:
         assert ds.dtype("p") == np.float32
         np.testing.assert_array_equal(ds.read_field("p", 0),
