@@ -1,0 +1,66 @@
+"""Host vs device (jit'd Pallas) stage-1 throughput per device-capable scheme.
+
+Times exactly the substage-1 transform each scheme runs inside
+``Pipeline.iter_chunks`` — ``Scheme.stage1`` over a whole block batch — for
+``device="host"`` (jnp reference math) against ``device="jax"`` (the
+``repro.kernels.ops`` wrappers: one jitted call per batch, real Pallas
+lowering on TPU, interpret mode elsewhere).  On a CPU container the jax rows
+chiefly guard the device path against rot (interpret mode is not a perf
+proxy); on TPU they are the paper's stage-1 speedup readout.
+
+CSV rows: ``device_<scheme>_<device>,us_per_call,MB/s``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CompressionSpec, get_scheme
+from repro.core import blocks as blk
+
+from .common import BENCH_N, dataset, emit, save_json
+
+#: schemes with a kernel-backed stage 1 (raw/fpzipx/szx stay host-only)
+DEVICE_SCHEMES = ("wavelet", "zfpx", "lorenzo")
+
+
+def _spec(scheme: str, device: str, block_size: int) -> CompressionSpec:
+    return CompressionSpec(scheme=scheme, device=device, eps=1e-3,
+                           block_size=block_size).validate()
+
+
+def _time_stage1(scheme_obj, blocks_np, spec, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        scheme_obj.stage1(blocks_np, spec)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True) -> None:
+    n = 48 if quick else BENCH_N
+    block_size = 16 if quick else 32
+    repeats = 3 if quick else 10
+    field = dataset(n=n)["p"]
+    blocks_np = np.asarray(blk.blockify(field, block_size))
+    raw_mb = blocks_np.nbytes / 2**20
+
+    rows = []
+    for scheme in DEVICE_SCHEMES:
+        sch = get_scheme(scheme)
+        for device in ("host", "jax"):
+            spec = _spec(scheme, device, block_size)
+            sch.stage1(blocks_np, spec)  # warmup: trace + compile
+            dt = _time_stage1(sch, blocks_np, spec, repeats)
+            mbps = raw_mb / dt
+            emit(f"device_{scheme}_{device}", dt * 1e6, f"{mbps:.1f}")
+            rows.append({"scheme": scheme, "device": device, "n": n,
+                         "block_size": block_size, "s_per_call": dt,
+                         "MBps": mbps})
+    save_json("device", {"quick": quick, "rows": rows})
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -23,6 +23,7 @@ def main(argv=None) -> None:
         bench_blocksize,
         bench_ckpt,
         bench_coeff,
+        bench_device,
         bench_gradcomp,
         bench_insitu,
         bench_methods,
@@ -51,6 +52,7 @@ def main(argv=None) -> None:
         "gradcomp": bench_gradcomp,
         "store": bench_store,
         "parallel": bench_parallel,
+        "device": bench_device,
     }
     only = [s for s in args.only.split(",") if s]
     unknown = sorted(set(only) - set(benches))

@@ -21,6 +21,7 @@ Module map:
 """
 from .pipeline import (  # noqa: F401
     CODEC_FORMAT,
+    DEVICES,
     DTYPES,
     CompressedField,
     CompressionSpec,

@@ -26,6 +26,7 @@ recorded in the header — including third-party ones registered via
 from __future__ import annotations
 
 import collections
+import dataclasses
 import json
 import os
 import struct
@@ -37,6 +38,18 @@ import numpy as np
 
 from . import blocks as blk
 from .pipeline import CompressedField, CompressionSpec, Pipeline
+
+
+def _decode_spec(header: dict, device: str | None) -> CompressionSpec:
+    """Spec to decode a container with: the recorded one, optionally re-routed
+    to another stage-1 device.  The ``device`` recorded in a header is
+    provenance, never a decode requirement — any container decodes on any
+    device (bit-exact for integer-exact/lossless schemes, within the scheme's
+    declared error bound otherwise)."""
+    spec = CompressionSpec.from_json(header["spec"])
+    if device is not None and device != spec.device:
+        spec = dataclasses.replace(spec, device=device)
+    return spec
 
 __all__ = ["write_field", "write_compressed", "write_stream", "commit_footer",
            "build_field_header", "read_field", "FieldReader",
@@ -183,12 +196,14 @@ def iter_compressed(path: str) -> Iterator[tuple[bytes, int]]:
             yield chunk, nblk
 
 
-def read_field(path: str) -> np.ndarray:
+def read_field(path: str, device: str | None = None) -> np.ndarray:
     """Decompress a whole container: the field, or raw blocks if the file was
-    written from a block batch (no ``field_shape`` recorded)."""
+    written from a block batch (no ``field_shape`` recorded).  ``device``
+    overrides the recorded stage-1 routing for the decode (e.g. force a host
+    decode of a device-written file)."""
     with open(path, "rb") as f:
         header, data_start = _read_header(f)
-        pipe = Pipeline(CompressionSpec.from_json(header["spec"]))
+        pipe = Pipeline(_decode_spec(header, device))
         fmt = int(header.get("format", 1))
         f.seek(data_start)
         outs = []
@@ -212,11 +227,12 @@ class FieldReader:
     share one reader and its decode cache.
     """
 
-    def __init__(self, path: str, cache_chunks: int = 8):
+    def __init__(self, path: str, cache_chunks: int = 8,
+                 device: str | None = None):
         self.path = path
         self._f = open(path, "rb")
         self.header, data_start = _read_header(self._f)
-        self.spec = CompressionSpec.from_json(self.header["spec"])
+        self.spec = _decode_spec(self.header, device)
         self.format = int(self.header.get("format", 1))
         self._pipe = Pipeline(self.spec)
         sizes = self.header["chunk_sizes"]

@@ -2,7 +2,8 @@
 
 Data flow (paper Fig. 1, mirrors CubismZ):
 
-  field -> blocks -> [substage 1: any registered Scheme, on device]
+  field -> blocks -> [substage 1: any registered Scheme; ``spec.device``
+        routes it to the host reference math or the jit'd Pallas kernels]
         -> per-"thread" aggregation buffers (~4 MB of blocks)
         -> scheme byte layout (+ optional byte/bit shuffle)
         -> [substage 2: zlib | lzma | bz2 | ... on the host]
@@ -39,10 +40,11 @@ import numpy as np
 
 from . import blocks as blk
 from . import lossless, metrics
-from .schemes import SCHEMES, Scheme, get_scheme  # noqa: F401  (re-export)
+from .schemes import DEVICES, Scheme, check_device, get_scheme
+from .schemes import SCHEMES  # noqa: F401  (re-export)
 
-__all__ = ["CODEC_FORMAT", "DTYPES", "CompressionSpec", "CompressedField",
-           "Pipeline"]
+__all__ = ["CODEC_FORMAT", "DTYPES", "DEVICES", "CompressionSpec",
+           "CompressedField", "Pipeline"]
 
 #: version of the per-chunk byte layout (v2: szx shuffles its outlier stream)
 CODEC_FORMAT = 2
@@ -64,6 +66,7 @@ class CompressionSpec:
     buffer_bytes: int = 4 << 20  # per-thread aggregation buffer (paper: 4 MB)
     precision: int = 32          # fpzipx bits of precision (32 = lossless)
     dtype: str = "float32"       # field dtype tag (see DTYPES)
+    device: str = "host"         # stage-1 routing: host | jax (see DEVICES)
     extra: dict = dataclasses.field(default_factory=dict)  # third-party knobs
 
     def __hash__(self):
@@ -81,6 +84,7 @@ class CompressionSpec:
             raise ValueError(f"unknown stage2 {self.stage2}")
         if self.dtype not in DTYPES:
             raise ValueError(f"unknown dtype {self.dtype}; one of {DTYPES}")
+        check_device(self.device)
         blk.check_block_size(self.block_size)
         get_scheme(self.scheme).validate(self)
         return self

@@ -25,12 +25,22 @@ from typing import TYPE_CHECKING
 import numpy as np
 
 from .. import shuffle as _shuf
+from ._device import (  # noqa: F401  (re-export)
+    DEVICES,
+    DeviceFallbackWarning,
+    check_device,
+    resolve_ops,
+    resolved_device,
+    route,
+)
 
 if TYPE_CHECKING:  # avoid a runtime cycle with repro.core.pipeline
     from ..pipeline import CompressionSpec
 
 __all__ = ["Scheme", "SCHEMES", "register_scheme", "unregister_scheme",
-           "get_scheme", "shuffle_bytes", "unshuffle_bytes"]
+           "get_scheme", "shuffle_bytes", "unshuffle_bytes",
+           "DEVICES", "DeviceFallbackWarning", "check_device", "resolve_ops",
+           "resolved_device", "route"]
 
 _REGISTRY: dict[str, "Scheme"] = {}
 
@@ -56,12 +66,36 @@ class Scheme(abc.ABC):
     #: registry key; also recorded in CZ2 headers
     name: str = ""
 
+    #: whether this scheme has a kernel-backed stage 1 (``device="jax"``
+    #: routes through ``repro.kernels.ops``); host-only schemes accept the
+    #: knob but truthfully record ``device="host"`` in headers
+    device_capable: bool = False
+
     def validate(self, spec: "CompressionSpec") -> None:
         """Raise ValueError if ``spec`` is invalid for this scheme."""
 
     def params(self, spec: "CompressionSpec") -> dict:
-        """Scheme-relevant knobs, recorded explicitly in container headers."""
-        return dict(spec.extra) if spec.extra else {}
+        """Scheme-relevant knobs, recorded explicitly in container headers.
+
+        ``device`` is always recorded (provenance of where stage 1 *ran*,
+        not what the knob asked for — a host-only scheme or a Pallas-less
+        fallback reports "host") but is never *required* to decode — see
+        ``schemes._device``.
+        """
+        p = dict(spec.extra) if spec.extra else {}
+        # the resolved value wins over any extra key of the same name
+        p["device"] = resolved_device(spec, self.device_capable)
+        return p
+
+    def error_bound(self, spec: "CompressionSpec") -> float | None:
+        """Declared max-abs-error contract for this spec, used by the
+        cross-scheme conformance suite (``tests/test_scheme_conformance.py``):
+
+        * ``None``    — lossless: decode must be bit-exact;
+        * a float     — decode must satisfy ``max|x - xhat| <= bound``;
+        * ``math.inf``— lossy with no declared bound (best effort).
+        """
+        return None
 
     def decode_spec(self, spec: "CompressionSpec", fmt: int) -> "CompressionSpec":
         """Spec to decode a payload written under container format ``fmt``.
@@ -129,4 +163,4 @@ class _SchemesView(Mapping):
 SCHEMES = _SchemesView()
 
 # Built-in schemes self-register on import.
-from . import fpzipx, raw, szx, wavelet, zfpx  # noqa: E402,F401
+from . import fpzipx, lorenzo, raw, szx, wavelet, zfpx  # noqa: E402,F401

@@ -1,0 +1,97 @@
+"""Device routing for scheme stage-1 transforms (the ``device=`` knob).
+
+``CompressionSpec.device`` selects where a scheme's substage-1 transform
+runs:
+
+* ``"host"`` (default) — the pure ``jax.numpy`` reference math in
+  ``repro.core`` (wavelets/zfpx/szx), exactly the pre-device code path;
+* ``"jax"`` — the jit'd Pallas kernel wrappers in ``repro.kernels.ops``
+  (real Pallas lowering on TPU, interpret mode elsewhere).  The whole block
+  batch is transformed in one jitted call before chunking.
+
+The knob is a *routing* choice, never a format choice: ``device`` is
+recorded in container headers for provenance but is not required to decode.
+A file written with ``device="jax"`` decodes bit-exact on host for schemes
+whose kernels are integer-exact (zfpx, lorenzo) and within the scheme's
+declared error bound otherwise (wavelet — fp rounding only).  When the
+Pallas toolchain is unavailable, ``device="jax"`` falls back to host with a
+:class:`DeviceFallbackWarning` instead of failing, so containers stay
+readable everywhere.
+"""
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["DEVICES", "DeviceFallbackWarning", "check_device", "kernel_ops",
+           "resolve_ops", "route", "resolved_device"]
+
+#: devices a spec may name (recorded in CZ2 headers, validated everywhere)
+DEVICES = ("host", "jax")
+
+_UNSET = object()
+_OPS = _UNSET
+
+
+class DeviceFallbackWarning(UserWarning):
+    """``device="jax"`` was requested but the Pallas kernel wrappers could
+    not be imported; stage 1 ran on the host reference path instead."""
+
+
+def check_device(device: str) -> None:
+    """Raise ValueError on a device name outside :data:`DEVICES`."""
+    if device not in DEVICES:
+        raise ValueError(
+            f"unknown device {device!r}; one of {DEVICES}")
+
+
+def kernel_ops():
+    """``repro.kernels.ops`` if the Pallas toolchain imports, else ``None``
+    (resolved once and cached — the fallback decision is per-process)."""
+    global _OPS
+    if _OPS is _UNSET:
+        try:
+            from repro.kernels import ops as _ops
+            _OPS = _ops
+        except Exception:  # missing/broken pallas: gate, don't crash
+            _OPS = None
+    return _OPS
+
+
+def resolve_ops(spec):
+    """Kernel-ops module when ``spec`` routes stage 1 to a device, else None.
+
+    ``None`` means "use the host path" — either because the spec asked for
+    it or because the kernels are unavailable (warned, not raised: decode of
+    device-written containers must succeed on any host).
+    """
+    check_device(spec.device)
+    if spec.device != "jax":
+        return None
+    ops = kernel_ops()
+    if ops is None:
+        warnings.warn(
+            "device='jax' requested but repro.kernels.ops is unavailable "
+            "(no Pallas toolchain); stage 1 falling back to the host path",
+            DeviceFallbackWarning, stacklevel=3)
+    return ops
+
+
+def route(spec, host_fn, ops_name: str):
+    """The one device dispatch: the named ``kernels.ops`` wrapper when the
+    spec routes to a device (and kernels are importable), else ``host_fn``.
+    Kernel wrappers and host references share call signatures, so scheme
+    code calls the result unconditionally."""
+    ops = resolve_ops(spec)
+    return host_fn if ops is None else getattr(ops, ops_name)
+
+
+def resolved_device(spec, device_capable: bool) -> str:
+    """Where stage 1 *actually* runs for this spec — what headers record.
+
+    ``"jax"`` only when the scheme has a kernel path and the kernels import;
+    a host-only scheme (or a fallback) truthfully reports ``"host"`` no
+    matter what the knob asked for."""
+    check_device(spec.device)
+    if spec.device == "jax" and device_capable and kernel_ops() is not None:
+        return "jax"
+    return "host"

@@ -26,6 +26,11 @@ class FpzipxScheme(Scheme):
     def params(self, spec) -> dict:
         return {"precision": spec.precision, **super().params(spec)}
 
+    def error_bound(self, spec):
+        # precision=32 is the lossless configuration; truncated-precision
+        # error depends on value magnitudes, so no absolute bound is declared
+        return None if spec.precision >= 32 else float("inf")
+
     def stage1(self, blocks_np, spec):
         x = jnp.asarray(blocks_np, jnp.float32)
         return {"delta": np.asarray(_fpz.encode(x, precision=spec.precision))}

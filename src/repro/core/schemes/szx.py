@@ -25,6 +25,9 @@ class SzxScheme(Scheme):
     def params(self, spec) -> dict:
         return {"eps": spec.eps, **super().params(spec)}
 
+    def error_bound(self, spec) -> float:
+        return spec.eps
+
     def decode_spec(self, spec, fmt: int):
         if fmt < 2 and spec.shuffle != "none":
             return dataclasses.replace(spec, shuffle="none")

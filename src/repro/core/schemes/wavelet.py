@@ -4,6 +4,12 @@ Stage 1: 3D wavelet transform per block, significance mask at |c| >= eps,
 optional Z4/Z8 low-bit zeroing of detail coefficients.  Byte layout per
 chunk: per-block detail counts (u32), packed significance bitmask, then the
 coarse corner + significant details as one shuffled float32 stream.
+
+``spec.device="jax"`` routes the forward/inverse transforms through the
+batched Pallas kernels (``repro.kernels.ops.wavelet_*`` — whole block batch
+in one jitted call); byte layout is unchanged, so device- and host-written
+containers interdecode within the declared error bound (the kernel differs
+from the host transform only by fp rounding).
 """
 from __future__ import annotations
 
@@ -12,12 +18,19 @@ import jax.numpy as jnp
 
 from .. import shuffle as shuf
 from .. import threshold, wavelets
-from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
+from . import Scheme, register_scheme, route, shuffle_bytes, unshuffle_bytes
 
 
 @register_scheme
 class WaveletScheme(Scheme):
     name = "wavelet"
+    device_capable = True
+
+    #: conformance contract: |x - xhat| <= BOUND_FACTOR * eps.  Thresholding
+    #: at |c| < eps amplifies through the synthesis stencils across levels;
+    #: the factor covers the paper's wavelets at any block size plus the fp
+    #: difference between host and Pallas transforms at moderate amplitudes.
+    BOUND_FACTOR = 100.0
 
     def validate(self, spec) -> None:
         if spec.wavelet not in wavelets.WAVELETS:
@@ -28,10 +41,14 @@ class WaveletScheme(Scheme):
                 "levels": spec.levels, "zero_bits": spec.zero_bits,
                 **super().params(spec)}
 
+    def error_bound(self, spec) -> float:
+        return self.BOUND_FACTOR * spec.eps
+
     def stage1(self, blocks_np, spec):
         x = jnp.asarray(blocks_np, jnp.float32)
         n = spec.block_size
-        coeffs = wavelets.forward3d(x, spec.wavelet, spec.levels)
+        fwd = route(spec, wavelets.forward3d, "wavelet_forward")
+        coeffs = fwd(x, kind=spec.wavelet, levels=spec.levels)
         mask = threshold.significant_mask(coeffs, spec.eps, spec.levels)
         c = wavelets.coarse_side(n, spec.levels)
         return {
@@ -72,5 +89,6 @@ class WaveletScheme(Scheme):
         coeffs = np.zeros((nblk, n, n, n), np.float32)
         coeffs[mask] = details
         coeffs[:, :c, :c, :c] = coarse
-        out = wavelets.inverse3d(jnp.asarray(coeffs), spec.wavelet, spec.levels)
-        return np.asarray(out)
+        inv = route(spec, wavelets.inverse3d, "wavelet_inverse")
+        return np.asarray(inv(jnp.asarray(coeffs), kind=spec.wavelet,
+                              levels=spec.levels))

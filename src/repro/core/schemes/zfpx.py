@@ -2,6 +2,11 @@
 
 Byte layout per chunk: per-cell exponents (i8) followed by the shuffled
 quantized-coefficient stream (i32).
+
+``spec.device="jax"`` routes encode/decode through the fused Pallas kernels
+(``repro.kernels.ops.zfpx_*``).  The kernel's integer streams are bit-equal
+to the host reference, so device- and host-written containers are mutually
+bit-exact to decode.
 """
 from __future__ import annotations
 
@@ -9,12 +14,18 @@ import numpy as np
 import jax.numpy as jnp
 
 from .. import zfpx as _zfp
-from . import Scheme, register_scheme, shuffle_bytes, unshuffle_bytes
+from . import Scheme, register_scheme, route, shuffle_bytes, unshuffle_bytes
 
 
 @register_scheme
 class ZfpxScheme(Scheme):
     name = "zfpx"
+    device_capable = True
+
+    #: conformance contract: the eps-derived bit-plane truncation keeps the
+    #: per-cell quantization error within a small multiple of eps (block
+    #: floating point + lifting gain), verified by the conformance suite.
+    BOUND_FACTOR = 16.0
 
     def validate(self, spec) -> None:
         if spec.block_size % 4:
@@ -23,9 +34,12 @@ class ZfpxScheme(Scheme):
     def params(self, spec) -> dict:
         return {"eps": spec.eps, **super().params(spec)}
 
+    def error_bound(self, spec) -> float:
+        return self.BOUND_FACTOR * spec.eps
+
     def stage1(self, blocks_np, spec):
         x = jnp.asarray(blocks_np, jnp.float32)
-        emax, q = _zfp.encode(x, eps=spec.eps)
+        emax, q = route(spec, _zfp.encode, "zfpx_encode")(x, eps=spec.eps)
         return {"emax": np.asarray(emax), "q": np.asarray(q)}
 
     def serialize(self, s1, lo, hi, spec) -> bytes:
@@ -42,6 +56,6 @@ class ZfpxScheme(Scheme):
         )
         emax = emax.reshape(nblk, nc)
         q = q.reshape(nblk, nc, 64)
-        return np.asarray(
-            _zfp.decode(jnp.asarray(emax), jnp.asarray(q), eps=spec.eps, n=n)
-        )
+        dec = route(spec, _zfp.decode, "zfpx_decode")
+        return np.asarray(dec(jnp.asarray(emax), jnp.asarray(q),
+                              eps=spec.eps, n=n))

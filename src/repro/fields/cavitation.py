@@ -53,7 +53,7 @@ def _lowpass_noise(n: int, rng: np.random.Generator, cutoff: float = 0.08) -> np
     kz = np.fft.rfftfreq(n)[None, None, :]
     k = np.sqrt(kx**2 + ky**2 + kz**2)
     F *= np.exp(-((k / cutoff) ** 2))
-    out = np.fft.irfftn(F, s=(n, n, n)).astype(np.float32)
+    out = np.fft.irfftn(F, s=(n, n, n), axes=(0, 1, 2)).astype(np.float32)
     return out / (out.std() + 1e-12)
 
 

@@ -7,6 +7,7 @@ decompress/verify.
 Examples:
   python -m repro.launch.compress --source cavitation --t 9.4 --n 128 \
       --scheme wavelet --wavelet w3ai --eps 1e-3 --out /tmp/fields
+  python -m repro.launch.compress --scheme lorenzo --device jax --out /tmp/fields
   python -m repro.launch.compress --decompress /tmp/fields/p.cz --verify-against /tmp/p.npy
   cz-compress parallel --ranks 4 --n 128 --out /tmp/fields  # rank-parallel engine
   cz-compress inspect /tmp/fields/p.cz          # header + chunk table + CRCs
@@ -25,8 +26,18 @@ import zlib
 
 import numpy as np
 
-from repro.core import SCHEMES, CompressionSpec, compression_ratio, psnr
+from repro.core import DEVICES, SCHEMES, CompressionSpec, compression_ratio, psnr
 from repro.core import container
+
+
+def _validated_spec(ap: argparse.ArgumentParser,
+                    spec: CompressionSpec) -> CompressionSpec:
+    """Validate a CLI-built spec; an unknown scheme/device/dtype/... must be
+    a clear usage error (exit 2), never a silent fallback to the host path."""
+    try:
+        return spec.validate()
+    except ValueError as e:
+        ap.error(str(e))
 
 
 def _inspect_container(path: str, verify: bool = True) -> bool:
@@ -182,6 +193,9 @@ def parallel_main(argv) -> int:
     ap.add_argument("--zero-bits", type=int, default=0)
     ap.add_argument("--stage2", default="zlib")
     ap.add_argument("--precision", type=int, default=32)
+    ap.add_argument("--device", default="host",
+                    help=f"stage-1 routing, one of {DEVICES} (jax = the "
+                    "jit'd Pallas kernel wrappers)")
     ap.add_argument("--buffer-bytes", type=int, default=1 << 20)
     ap.add_argument("--out", default="artifacts/fields")
     ap.add_argument("--check-identical", action="store_true",
@@ -189,11 +203,12 @@ def parallel_main(argv) -> int:
                     "bit-identical (the engine's core guarantee)")
     args = ap.parse_args(argv)
 
-    spec = CompressionSpec(
+    spec = _validated_spec(ap, CompressionSpec(
         scheme=args.scheme, wavelet=args.wavelet, eps=args.eps,
         block_size=args.block_size, shuffle=args.shuffle,
         zero_bits=args.zero_bits, stage2=args.stage2,
-        precision=args.precision, buffer_bytes=args.buffer_bytes)
+        precision=args.precision, device=args.device,
+        buffer_bytes=args.buffer_bytes))
     if args.source == "npy":
         fields = {"field": np.load(args.npy).astype(np.float32)}
     else:
@@ -254,10 +269,17 @@ def main(argv=None):
     ap.add_argument("--zero-bits", type=int, default=0)
     ap.add_argument("--stage2", default="zlib")
     ap.add_argument("--precision", type=int, default=32)
+    ap.add_argument("--device", default=None,
+                    help=f"stage-1 routing, one of {DEVICES} (jax = the "
+                    "jit'd Pallas kernel wrappers).  With --decompress, "
+                    "overrides the routing recorded in the container "
+                    "(default: decode as recorded)")
     ap.add_argument("--out", default="artifacts/fields")
     ap.add_argument("--decompress", default="")
     ap.add_argument("--verify-against", default="")
     args = ap.parse_args(argv)
+    if args.device is not None and args.device not in DEVICES:
+        ap.error(f"unknown device {args.device!r}; one of {DEVICES}")
 
     if args.list_schemes:
         for name in sorted(SCHEMES):
@@ -266,7 +288,7 @@ def main(argv=None):
 
     if args.decompress:
         t0 = time.time()
-        field = container.read_field(args.decompress)
+        field = container.read_field(args.decompress, device=args.device)
         print(f"decompressed {field.shape} in {time.time()-t0:.2f}s")
         if args.verify_against:
             ref = np.load(args.verify_against)
@@ -274,10 +296,11 @@ def main(argv=None):
                   f"maxerr {np.max(np.abs(ref-field)):.3e}")
         return
 
-    spec = CompressionSpec(
+    spec = _validated_spec(ap, CompressionSpec(
         scheme=args.scheme, wavelet=args.wavelet, eps=args.eps,
         block_size=args.block_size, shuffle=args.shuffle,
-        zero_bits=args.zero_bits, stage2=args.stage2, precision=args.precision)
+        zero_bits=args.zero_bits, stage2=args.stage2,
+        precision=args.precision, device=args.device or "host"))
     os.makedirs(args.out, exist_ok=True)
 
     if args.source == "npy":

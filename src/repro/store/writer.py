@@ -18,7 +18,7 @@ import warnings
 import numpy as np
 
 from repro.core import container
-from repro.core.pipeline import DTYPES, CompressionSpec
+from repro.core.pipeline import DTYPES, CompressionSpec, check_device
 
 __all__ = ["ShardWriter", "DtypeCoercionWarning"]
 
@@ -43,7 +43,12 @@ class ShardWriter:
         Dtypes the spec's scheme can't take (unsupported ones, or e.g.
         float64 into an fpzipx dataset) fall back to the spec's own dtype —
         the field is coerced, never rejected mid-append, but the cast is
-        surfaced as a :class:`DtypeCoercionWarning` rather than silent."""
+        surfaced as a :class:`DtypeCoercionWarning` rather than silent.
+
+        An unknown ``device=`` is *not* coercible: it would silently run the
+        host path under a lying header, so it raises here even if the spec
+        skipped validation (e.g. was rebuilt from a hand-edited manifest)."""
+        check_device(self.spec.device)
         dt = str(np.asarray(field).dtype)
         if dt == self.spec.dtype:
             return self.spec

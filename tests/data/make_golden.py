@@ -1,0 +1,107 @@
+"""Regenerate the golden container fixtures (run from the repo root):
+
+    PYTHONPATH=src:tests python tests/data/make_golden.py
+
+The committed fixtures pin the on-disk byte layouts *and* the decoded values
+of both container generations.  ``test_golden.py`` asserts current code
+decodes them byte-exact — a future ``CODEC_FORMAT`` bump (or a scheme layout
+change without a ``decode_spec`` shim) fails loudly instead of silently
+corrupting old archives.  Only regenerate when a change is *supposed* to
+alter the fixtures, and say why in the commit.
+"""
+import json
+import os
+import struct
+import zlib
+
+import numpy as np
+
+from repro.core import CompressionSpec, container
+from repro.core import blocks as blk
+from repro.core import lossless
+from repro.core.schemes import get_scheme
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+N, BS = 16, 8
+
+
+def golden_field() -> np.ndarray:
+    # fixed analytic field + hashed index "noise": reproducible from source
+    # forever, independent of any RNG implementation
+    g = np.mgrid[0:N, 0:N, 0:N].astype(np.float32) / N
+    f = 40.0 + 8.0 * np.sin(6 * g[0]) * np.cos(5 * g[1]) - 6.0 * g[2] ** 2
+    idx = np.arange(N ** 3, dtype=np.uint32).reshape(N, N, N)
+    h = (idx * np.uint32(2654435761)) >> np.uint32(24)   # 0..255 hash
+    return (f + h.astype(np.float32) / 255.0 * 0.1).astype(np.float32)
+
+
+def spec_for(scheme: str) -> CompressionSpec:
+    return CompressionSpec(scheme=scheme, eps=1e-3, block_size=BS,
+                           buffer_bytes=1 << 13).validate()
+
+
+def write_cz1(path: str, field: np.ndarray, spec: CompressionSpec,
+              legacy_szx: bool) -> None:
+    """The seed-era CZ1 writer: header-first, v1 chunk byte layout (szx wrote
+    its outlier stream unshuffled whatever the spec said)."""
+    blocks = np.asarray(blk.blockify(field, spec.block_size))
+    sch = get_scheme(spec.scheme)
+    s1 = sch.stage1(blocks, spec)
+    bpc = max(1, spec.buffer_bytes // (4 * spec.block_size ** 3))
+    chunks, nblks = [], []
+    for lo in range(0, blocks.shape[0], bpc):
+        hi = min(lo + bpc, blocks.shape[0])
+        if legacy_szx:
+            r = s1["res"][lo:hi].reshape(-1)
+            small = np.abs(r) <= 127
+            payload = (np.uint32((~small).sum()).tobytes()
+                       + np.where(small, r, -128).astype(np.int8).tobytes()
+                       + r[~small].astype(np.int32).tobytes())
+        else:
+            payload = sch.serialize(s1, lo, hi, spec)
+        chunks.append(lossless.encode(payload, spec.stage2))
+        nblks.append(hi - lo)
+    spec_json = spec.to_json()
+    for post_seed_key in ("dtype", "device"):   # seed-era specs had neither
+        spec_json.pop(post_seed_key, None)
+    header = {
+        "spec": spec_json,
+        "nblocks": int(blocks.shape[0]),
+        "chunk_nblocks": nblks,
+        "chunk_sizes": [len(c) for c in chunks],
+        "raw_bytes": int(blocks.size * 4),
+        "field_shape": list(field.shape),
+        "chunk_crc32": [zlib.crc32(c) & 0xFFFFFFFF for c in chunks],
+    }
+    hbytes = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(b"CZ1\0")
+        f.write(struct.pack("<Q", len(hbytes)))
+        f.write(hbytes)
+        for c in chunks:
+            f.write(c)
+
+
+def main() -> None:
+    field = golden_field()
+    np.save(os.path.join(HERE, "golden_input.npy"), field)
+
+    for scheme, legacy_szx in (("raw", False), ("szx", True)):
+        path = os.path.join(HERE, f"cz1_{scheme}.cz")
+        write_cz1(path, field, spec_for(scheme), legacy_szx)
+        np.save(os.path.join(HERE, f"cz1_{scheme}.decoded.npy"),
+                container.read_field(path))
+
+    for scheme in ("wavelet", "lorenzo", "zfpx"):
+        path = os.path.join(HERE, f"cz2_{scheme}.cz")
+        container.write_field(path, field, spec_for(scheme))
+        np.save(os.path.join(HERE, f"cz2_{scheme}.decoded.npy"),
+                container.read_field(path))
+
+    for name in sorted(os.listdir(HERE)):
+        if name.endswith((".cz", ".npy")):
+            print(f"{name}: {os.path.getsize(os.path.join(HERE, name))} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -101,6 +101,29 @@ def test_engine_rejects_bad_ranks(engine):
         ParallelCompressor(0)
 
 
+@pytest.mark.device
+@pytest.mark.parametrize("scheme", ["lorenzo", "wavelet"])
+def test_rank_invariance_holds_for_device_specs(engine, scheme, tmp_path):
+    """Acceptance: device='jax' specs keep the engine's core guarantee —
+    the shared file is byte-identical to the serial writer at every rank
+    count (workers route stage 1 through the same jitted kernels)."""
+    spec = CompressionSpec(scheme=scheme, device="jax", eps=1e-3,
+                           block_size=BS, buffer_bytes=1 << 14)
+    serial = os.path.join(tmp_path, "serial.cz")
+    container.write_field(serial, FIELD, spec)
+    with open(serial, "rb") as f:
+        ref = f.read()
+    for ranks in (1, 2, 4):
+        path = os.path.join(tmp_path, f"r{ranks}.cz")
+        engine.compress(path, FIELD, spec, ranks=ranks)
+        with open(path, "rb") as f:
+            assert f.read() == ref, \
+                f"{scheme} device=jax ranks={ranks} differs from serial"
+    # ...and the device-written shared file decodes on host
+    dec = container.read_field(os.path.join(tmp_path, "r4.cz"), device="host")
+    assert dec.shape == FIELD.shape
+
+
 def test_engine_worker_failure_leaves_no_debris(engine, tmp_path):
     """A rank hitting an encode error must not leak part files or a
     headerless stub output."""

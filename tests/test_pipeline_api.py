@@ -197,7 +197,7 @@ def test_cz2_header_records_scheme_and_format(tmp_path):
     r = container.FieldReader(path)
     assert r.header["format"] == 2
     assert r.header["scheme"] == "zfpx"
-    assert r.header["scheme_params"] == {"eps": 1e-3}
+    assert r.header["scheme_params"] == {"eps": 1e-3, "device": "host"}
     r.close()
 
 

@@ -1,0 +1,287 @@
+"""Cross-scheme conformance suite: one parametrized contract for **every**
+registered scheme x device x dtype.
+
+The contracts (per scheme, from its own declarations):
+
+* round-trip error within ``Scheme.error_bound`` (bit-exact when None);
+* CZ2 write -> re-read equals the in-memory decode exactly, with scheme,
+  params and device recorded in the header;
+* ``decode_spec`` is stable: identity at the current ``CODEC_FORMAT`` and
+  idempotent for every historical format;
+* device routing is never a decode requirement: a container written with
+  ``device="jax"`` decodes on host (and vice versa) bit-exact for lossless
+  layouts, within the declared bound for lossy ones;
+* a dummy third-party ``@register_scheme`` plugin passes the same matrix.
+
+Specs that reject a combination (e.g. fpzipx for non-float32) skip it —
+rejection-at-validate is itself part of the contract.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import CODEC_FORMAT, CompressionSpec, Pipeline, SCHEMES, container
+from repro.core.schemes import (
+    DeviceFallbackWarning,
+    Scheme,
+    _device,
+    get_scheme,
+    register_scheme,
+    shuffle_bytes,
+    unregister_scheme,
+    unshuffle_bytes,
+)
+
+DEVICES = ("host", pytest.param("jax", marks=pytest.mark.device))
+DTYPES = ("float32", "float64", "float16")
+BS = 8          # smallest side every scheme supports (2^k >= 8, % 4 == 0)
+N = 24          # 27 blocks; with 8 KiB buffers -> 4 blocks/chunk, 7 chunks
+
+
+def _field(dtype: str) -> np.ndarray:
+    rng = np.random.default_rng(7)
+    g = np.mgrid[0:N, 0:N, 0:N].astype(np.float32) / N
+    f = 40.0 + 8.0 * np.sin(6 * g[0]) * np.cos(5 * g[1]) - 6.0 * g[2] ** 2
+    f += rng.standard_normal((N, N, N)).astype(np.float32) * 0.05
+    return f.astype(dtype)
+
+
+#: the combos a scheme rejects *by contract* — only these may skip; any
+#: other validation failure is a regression and fails the matrix outright
+EXPECTED_REJECTS = {
+    ("fpzipx", "float64"),   # lossless guarantee is float32-only
+    ("fpzipx", "float16"),
+}
+
+
+def _spec(scheme: str, device: str = "host", dtype: str = "float32",
+          **kw) -> CompressionSpec:
+    spec = CompressionSpec(scheme=scheme, device=device, dtype=dtype,
+                           eps=1e-3, block_size=BS, buffer_bytes=1 << 13, **kw)
+    try:
+        return spec.validate()
+    except ValueError as e:
+        if (scheme, dtype) in EXPECTED_REJECTS:
+            pytest.skip(f"{scheme} rejects dtype={dtype} by contract: {e}")
+        raise
+
+
+def _tolerance(spec: CompressionSpec, field: np.ndarray) -> float:
+    """Declared bound plus the unavoidable quanta: one ulp of the field's
+    dtype at its magnitude (decode casts back to the tagged dtype)."""
+    bound = get_scheme(spec.scheme).error_bound(spec)
+    assert bound is not None
+    absmax = float(np.abs(field).max())
+    # lossy schemes compute in float32 and cast back to the tagged dtype:
+    # allow one ulp at the field magnitude in whichever grid is coarser
+    ulp = max(float(np.spacing(np.dtype(field.dtype).type(absmax))),
+              float(np.spacing(np.float32(absmax))))
+    return bound * (1 + 1e-4) + ulp
+
+
+def _check_roundtrip(spec: CompressionSpec, field: np.ndarray) -> None:
+    pipe = Pipeline(spec)
+    comp = pipe.compress(field)
+    assert len(comp.chunks) > 1, "conformance field must span several chunks"
+    dec = pipe.decompress(comp)
+    assert dec.shape == field.shape
+    assert dec.dtype == field.dtype
+    bound = get_scheme(spec.scheme).error_bound(spec)
+    if bound is None:
+        np.testing.assert_array_equal(dec, field)
+    elif np.isfinite(bound):
+        err = np.max(np.abs(dec.astype(np.float64) - field.astype(np.float64)))
+        assert err <= _tolerance(spec, field), \
+            f"{spec.scheme}: err {err:.3e} above declared bound {bound:.3e}"
+    else:
+        assert np.isfinite(dec).all()
+
+
+def _ran_on(spec: CompressionSpec) -> str:
+    """Where stage 1 actually runs for this spec: 'jax' only for a
+    kernel-backed scheme with the Pallas toolchain importable — what the
+    header must record as provenance."""
+    sch = get_scheme(spec.scheme)
+    capable = sch.device_capable and _device.kernel_ops() is not None
+    return spec.device if capable else "host"
+
+
+def _check_container(spec: CompressionSpec, field: np.ndarray, tmp_path) -> None:
+    path = str(tmp_path / f"{spec.scheme}-{spec.device}-{spec.dtype}.cz")
+    container.write_field(path, field, spec)
+    pipe = Pipeline(spec)
+    mem = pipe.decompress(pipe.compress(field))
+    disk = container.read_field(path)
+    np.testing.assert_array_equal(disk, mem)
+    with container.FieldReader(path) as r:
+        assert r.header["scheme"] == spec.scheme
+        assert r.header["scheme_params"]["device"] == _ran_on(spec)
+        assert r.header["format"] == CODEC_FORMAT
+        np.testing.assert_array_equal(r.read_all(), mem)
+
+
+def _check_decode_spec(spec: CompressionSpec) -> None:
+    sch = get_scheme(spec.scheme)
+    assert sch.decode_spec(spec, CODEC_FORMAT) == spec, \
+        "decode_spec must be the identity at the current format"
+    for fmt in range(1, CODEC_FORMAT + 1):
+        ds = sch.decode_spec(spec, fmt)
+        assert ds.scheme == spec.scheme
+        assert sch.decode_spec(ds, fmt) == ds, \
+            f"decode_spec must be idempotent (format {fmt})"
+
+
+# ---------------------------------------------------------------------------
+# The matrix: every registered scheme x device x dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("device", DEVICES)
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_roundtrip_within_declared_bound(scheme, device, dtype):
+    _check_roundtrip(_spec(scheme, device, dtype), _field(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("device", DEVICES)
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_cz2_write_reread_equality(scheme, device, dtype, tmp_path):
+    _check_container(_spec(scheme, device, dtype), _field(dtype), tmp_path)
+
+
+@pytest.mark.parametrize("device", DEVICES)
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_decode_spec_stability(scheme, device):
+    _check_decode_spec(_spec(scheme, device))
+
+
+# ---------------------------------------------------------------------------
+# Device routing is provenance, not a decode requirement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.device
+@pytest.mark.parametrize("write_dev,read_dev", [("jax", "host"), ("host", "jax")])
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_cross_device_decode(scheme, write_dev, read_dev, tmp_path):
+    """A file written on one device decodes on the other: bit-exact for
+    lossless layouts, within the declared bound for lossy ones."""
+    field = _field("float32")
+    spec = _spec(scheme, write_dev)
+    path = str(tmp_path / f"{scheme}.cz")
+    container.write_field(path, field, spec)
+    dec = container.read_field(path, device=read_dev)
+    bound = get_scheme(scheme).error_bound(spec)
+    if bound is None:
+        np.testing.assert_array_equal(dec, field)
+    else:
+        err = np.max(np.abs(dec.astype(np.float64) - field.astype(np.float64)))
+        assert err <= _tolerance(spec, field)
+    with container.FieldReader(path, device=read_dev) as r:
+        assert r.spec.device == read_dev         # decode routing overridden
+        # provenance records where stage 1 actually ran at write time
+        assert r.header["scheme_params"]["device"] == _ran_on(spec)
+
+
+def test_host_only_scheme_records_host_provenance(tmp_path):
+    """szx/raw/fpzipx accept the device knob (a dataset-level spec may be
+    shared across schemes) but have no kernel path — the header must record
+    that stage 1 actually ran on host, not echo the knob."""
+    spec = _spec("szx", "jax")
+    path = str(tmp_path / "szx.cz")
+    container.write_field(path, _field("float32"), spec)
+    with container.FieldReader(path) as r:
+        assert r.header["scheme_params"]["device"] == "host"
+        assert r.spec.device == "jax"   # the requested knob stays in the spec
+
+
+@pytest.mark.parametrize("scheme", ["wavelet", "zfpx", "lorenzo"])
+def test_device_fallback_warns_and_matches_host(scheme, monkeypatch):
+    """Without a Pallas toolchain, device='jax' degrades to the host path
+    with a DeviceFallbackWarning — same bytes, nothing raised."""
+    field = _field("float32")
+    host = Pipeline(_spec(scheme, "host")).compress(field)
+    monkeypatch.setattr(_device, "_OPS", None)   # simulate: kernels missing
+    spec = _spec(scheme, "jax")
+    with pytest.warns(DeviceFallbackWarning):
+        jax_comp = Pipeline(spec).compress(field)
+    assert jax_comp.chunks == host.chunks
+
+
+# ---------------------------------------------------------------------------
+# Unknown device= is rejected loudly, never silently run on the host path
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_unknown_device():
+    with pytest.raises(ValueError, match="unknown device 'tpu'"):
+        CompressionSpec(device="tpu").validate()
+
+
+def test_shard_writer_rejects_unknown_device():
+    from repro.store import ShardWriter
+
+    with pytest.raises(ValueError, match="unknown device"):
+        ShardWriter(CompressionSpec(scheme="raw", device="cuda"))
+    # even a spec that dodged validation (e.g. rebuilt from a hand-edited
+    # manifest) must fail in spec_for, not be warn-coerced onto the host path
+    sw = ShardWriter(CompressionSpec(scheme="raw", block_size=BS))
+    object.__setattr__(sw.spec, "device", "cuda")
+    with pytest.raises(ValueError, match="unknown device 'cuda'"):
+        sw.spec_for(_field("float64"))
+
+
+@pytest.mark.parametrize("sub", [[], ["parallel"]])
+def test_cli_rejects_unknown_device(sub, capsys):
+    from repro.launch import compress
+
+    with pytest.raises(SystemExit) as exc:
+        compress.main(sub + ["--device", "tpu", "--n", str(N)])
+    assert exc.value.code == 2
+    assert "unknown device 'tpu'" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# Third-party plugin through the same matrix
+# ---------------------------------------------------------------------------
+
+class OffsetScheme(Scheme):
+    """Dummy third-party scheme: stores the negated field in the spec's
+    tagged dtype (negation is IEEE-exact, so lossless for every dtype)."""
+
+    name = "conformance-neg"
+
+    def stage1(self, blocks_np, spec):
+        return {"v": -np.asarray(blocks_np, spec.np_dtype)}
+
+    def serialize(self, s1, lo, hi, spec):
+        dt = spec.np_dtype
+        return shuffle_bytes(s1["v"][lo:hi].tobytes(), spec.shuffle, dt.itemsize)
+
+    def deserialize(self, payload, nblk, spec):
+        dt = spec.np_dtype
+        v = np.frombuffer(unshuffle_bytes(payload, spec.shuffle, dt.itemsize), dt)
+        n = spec.block_size
+        return -v.reshape(nblk, n, n, n)
+
+
+@pytest.fixture()
+def offset_scheme():
+    register_scheme(OffsetScheme)
+    yield OffsetScheme.name
+    unregister_scheme(OffsetScheme.name)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("device", DEVICES)
+def test_plugin_scheme_full_conformance(offset_scheme, device, dtype, tmp_path):
+    field = _field(dtype)
+    spec = _spec(offset_scheme, device, dtype)
+    _check_roundtrip(spec, field)
+    _check_container(spec, field, tmp_path)
+    _check_decode_spec(spec)
+
+
+def test_plugin_unregistered_cleanly(offset_scheme):
+    assert offset_scheme in SCHEMES
+    spec = dataclasses.replace(_spec(offset_scheme), extra={"knob": 1})
+    assert get_scheme(offset_scheme).params(spec)["knob"] == 1
