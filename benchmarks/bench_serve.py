@@ -1,0 +1,129 @@
+"""HTTP region-serving load benchmark (ISSUE 5 acceptance).
+
+N client threads hammer a loopback :class:`RegionHTTPServer` with a
+zipf-hot region mix (a few regions take most of the traffic — the analyst
+returning to the same vortex core) and report p50/p99 request latency,
+throughput, and where the queries were answered: decoded-region LRU vs
+chunk LRU vs cold decode.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import CompressionSpec
+from repro.serve import Client, RegionHTTPServer
+from repro.store import CZDataset
+
+from .common import dataset, emit, save_json
+
+
+def _zipf_weights(k: int, a: float = 1.1) -> np.ndarray:
+    w = 1.0 / np.arange(1, k + 1) ** a
+    return w / w.sum()
+
+
+def run(quick: bool = True):
+    n_threads = 4 if quick else 8
+    n_req = 60 if quick else 400         # per thread
+    box = 24
+    n_regions = 24 if quick else 96      # candidate pool, zipf-weighted
+    qois = ["p"] if quick else ["p", "rho"]
+
+    fields = {q: f for q, f in dataset("10k").items() if q in qois}
+    n = next(iter(fields.values())).shape[0]
+    spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3,
+                           block_size=16, buffer_bytes=1 << 18)
+    root = os.path.join(tempfile.mkdtemp(), "serve_ds")
+    with CZDataset(root, "a", spec=spec, workers=4) as ds:
+        ds.append(fields, time=0.0)
+
+    rng = np.random.default_rng(7)
+    lows = rng.integers(0, n - box, (n_regions, 3))
+    weights = _zipf_weights(n_regions)
+
+    lats: list[list[float]] = [[] for _ in range(n_threads)]
+    barrier = threading.Barrier(n_threads)
+
+    with RegionHTTPServer(root, port=0, cache_bytes=32 << 20,
+                          cache_chunks=32, max_inflight=n_threads) as srv:
+        srv.start()
+
+        # cold pass: one client walks every candidate region once, so the
+        # timed phase below measures the steady state (and this measures the
+        # decode-bound worst case)
+        cold = []
+        with Client(srv.url) as c:
+            for q in qois:
+                for lo in lows:
+                    t1 = time.perf_counter()
+                    c.region(q, 0, lo, lo + box)
+                    cold.append(time.perf_counter() - t1)
+        cold_ms = np.asarray(cold) * 1e3
+
+        def worker(i: int) -> None:
+            c = Client(srv.url)
+            trng = np.random.default_rng(100 + i)
+            barrier.wait()
+            for k in range(n_req):
+                lo = lows[trng.choice(n_regions, p=weights)]
+                t1 = time.perf_counter()
+                c.region(qois[k % len(qois)], 0, lo, lo + box)
+                lats[i].append(time.perf_counter() - t1)
+            c.close()
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = srv.region.stats()
+
+    lat_ms = np.concatenate([np.asarray(ts) for ts in lats]) * 1e3
+    p50, p99 = np.percentile(lat_ms, [50, 99])
+    total = n_threads * n_req
+    rps = total / wall
+    region_hr = stats["region_cache_hit_rate"] or 0.0
+    chunk_hr = stats["cache_hit_rate"] or 0.0
+    amplification = stats["bytes_decoded"] / max(1, stats["bytes_served"])
+
+    results = {
+        "n": n, "box": box, "threads": n_threads, "requests": total,
+        "n_regions": n_regions, "wall_s": wall, "rps": rps,
+        "p50_ms": float(p50), "p99_ms": float(p99),
+        "cold_p50_ms": float(np.percentile(cold_ms, 50)),
+        "cold_p99_ms": float(np.percentile(cold_ms, 99)),
+        "region_cache_hit_rate": region_hr,
+        "chunk_cache_hit_rate": chunk_hr,
+        "decode_amplification": amplification,
+        "server_stats": stats,
+    }
+    emit("serve_p50", p50 * 1e3, f"{rps:.0f}rps")
+    emit("serve_p99", p99 * 1e3, f"{total}req_x{n_threads}thr")
+    emit("serve_cold_p50", float(np.percentile(cold_ms, 50)) * 1e3,
+         f"{len(cold_ms)}regions")
+    emit("serve_hit_rate", region_hr * 1e6,
+         f"region{region_hr:.2f}_chunk{chunk_hr:.2f}")
+    shutil.rmtree(os.path.dirname(root), ignore_errors=True)
+    path = save_json("serve", results)
+    print(f"# wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (also the default under benchmarks.run)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full)

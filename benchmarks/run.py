@@ -29,6 +29,7 @@ def main(argv=None) -> None:
         bench_methods,
         bench_parallel,
         bench_scaling,
+        bench_serve,
         bench_shuffle,
         bench_speed,
         bench_store,
@@ -53,6 +54,7 @@ def main(argv=None) -> None:
         "store": bench_store,
         "parallel": bench_parallel,
         "device": bench_device,
+        "serve": bench_serve,
     }
     only = [s for s in args.only.split(",") if s]
     unknown = sorted(set(only) - set(benches))

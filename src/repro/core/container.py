@@ -52,7 +52,7 @@ def _decode_spec(header: dict, device: str | None) -> CompressionSpec:
     return spec
 
 __all__ = ["write_field", "write_compressed", "write_stream", "commit_footer",
-           "build_field_header", "read_field", "FieldReader",
+           "build_field_header", "read_field", "describe", "FieldReader",
            "MAGIC", "MAGIC_V1"]
 
 MAGIC = b"CZ2\0"
@@ -220,6 +220,56 @@ def read_field(path: str, device: str | None = None) -> np.ndarray:
     return np.asarray(blk.unblockify(blocks, tuple(shape)))
 
 
+def describe(path: str, verify: bool = False) -> dict:
+    """Machine-readable container summary: header fields plus the per-chunk
+    table, as one JSON-able dict.
+
+    The single serializer behind ``cz-compress inspect --json`` — external
+    tooling gets the same shape the CLI prints, so the two can't drift.
+    ``verify=True`` re-reads every chunk and adds a ``crc_ok`` verdict per
+    chunk (and an aggregate one).
+    """
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        f.seek(0)
+        header, data_start = _read_header(f)
+        sizes = header["chunk_sizes"]
+        crcs = header.get("chunk_crc32", [None] * len(sizes))
+        chunks = []
+        ok = True
+        if verify:
+            f.seek(data_start)
+        for i, (sz, nblk, crc) in enumerate(
+                zip(sizes, header["chunk_nblocks"], crcs)):
+            row = {"index": i, "blocks": int(nblk), "bytes": int(sz),
+                   "crc32": crc}
+            if verify and crc is not None:
+                good = (zlib.crc32(f.read(sz)) & 0xFFFFFFFF) == crc
+                row["crc_ok"] = good
+                ok &= good
+            chunks.append(row)
+    total = int(sum(sizes))
+    spec = header["spec"]
+    out = {
+        "path": path,
+        "container": "CZ1" if magic == MAGIC_V1 else "CZ2",
+        "format": int(header.get("format", 1)),
+        "scheme": header.get("scheme", spec["scheme"]),
+        "scheme_params": header.get("scheme_params", {}),
+        "dtype": header.get("dtype", spec.get("dtype", "float32")),
+        "field_shape": header.get("field_shape"),
+        "block_size": spec["block_size"],
+        "nblocks": header.get("nblocks"),
+        "raw_bytes": header.get("raw_bytes"),
+        "compressed_bytes": total,
+        "spec": spec,
+        "chunks": chunks,
+    }
+    if verify:
+        out["crc_ok"] = ok
+    return out
+
+
 class FieldReader:
     """Random block/region access with an LRU chunk cache (paper's
     decompressor).  Thread-safe: chunk inflation and the cache are guarded by
@@ -277,11 +327,18 @@ class FieldReader:
         self.close()
 
     def _chunk(self, ci: int) -> np.ndarray:
+        return self.fetch_chunk(ci)[0]
+
+    def fetch_chunk(self, ci: int) -> tuple[np.ndarray, bool]:
+        """One chunk plus whether this call actually inflated it (``False``
+        = LRU hit).  The flag is decided under the reader lock, so accounting
+        built on it (e.g. the serve scheduler's bytes-decoded counter) stays
+        exact under concurrency."""
         with self._lock:
             if ci in self._cache:
                 self._cache.move_to_end(ci)
                 self.cache_hits += 1
-                return self._cache[ci]
+                return self._cache[ci], False
             self.cache_misses += 1
             if self._f.closed:
                 # a holder of this reader outlived a close() (e.g. the store
@@ -293,40 +350,63 @@ class FieldReader:
             self._cache[ci] = out
             while len(self._cache) > self._cache_chunks:
                 self._cache.popitem(last=False)
-            return out
+            return out, True
 
-    def read_block(self, bx: int, by: int, bz: int) -> np.ndarray:
-        """Decompress and return one (bs, bs, bs) block."""
+    def block_chunk(self, bx: int, by: int, bz: int) -> tuple[int, int]:
+        """``(chunk index, block offset within chunk)`` for one block
+        coordinate — the geometry hook serving tiers coalesce on."""
         _, by_n, bz_n = self.nb
         flat = (bx * by_n + by) * bz_n + bz
         ci = int(np.searchsorted(self._blk0, flat, side="right")) - 1
-        return self._chunk(ci)[flat - self._blk0[ci]]
+        return ci, flat - self._blk0[ci]
 
-    def read_box(self, lo: tuple[int, int, int],
-                 hi: tuple[int, int, int]) -> np.ndarray:
-        """Decode the sub-box ``[lo, hi)`` touching only the covering chunks.
-
-        The box is assembled block by block through the LRU chunk cache — the
-        full field is never inflated, and ``chunks_decoded`` counts exactly
-        the chunks that were.
-        """
+    def box_blocks(self, lo, hi):
+        """Block coordinates covering the box ``[lo, hi)`` (validated)."""
         lo = tuple(int(v) for v in lo)
         hi = tuple(int(v) for v in hi)
         for a, b, s in zip(lo, hi, self.shape):
             if not 0 <= a < b <= s:
                 raise ValueError(f"box [{lo}, {hi}) outside field {self.shape}")
         bs = self.spec.block_size
+        return [(bx, by, bz)
+                for bx in range(lo[0] // bs, (hi[0] - 1) // bs + 1)
+                for by in range(lo[1] // bs, (hi[1] - 1) // bs + 1)
+                for bz in range(lo[2] // bs, (hi[2] - 1) // bs + 1)]
+
+    def box_chunks(self, lo, hi) -> list[int]:
+        """Distinct chunk indices covering the box ``[lo, hi)``, ascending."""
+        return sorted({self.block_chunk(*b)[0] for b in self.box_blocks(lo, hi)})
+
+    def read_block(self, bx: int, by: int, bz: int) -> np.ndarray:
+        """Decompress and return one (bs, bs, bs) block."""
+        ci, off = self.block_chunk(bx, by, bz)
+        return self._chunk(ci)[off]
+
+    def read_box(self, lo: tuple[int, int, int],
+                 hi: tuple[int, int, int], chunk_getter=None) -> np.ndarray:
+        """Decode the sub-box ``[lo, hi)`` touching only the covering chunks.
+
+        The box is assembled block by block through the LRU chunk cache — the
+        full field is never inflated, and ``chunks_decoded`` counts exactly
+        the chunks that were.  ``chunk_getter`` substitutes another
+        ``ci -> chunk array`` source (e.g. the serve tier's single-flight
+        scheduler) for the reader's own ``_chunk``.
+        """
+        lo = tuple(int(v) for v in lo)
+        hi = tuple(int(v) for v in hi)
+        get = self._chunk if chunk_getter is None else chunk_getter
+        bs = self.spec.block_size
+        blocks = self.box_blocks(lo, hi)  # validates the box
         out = np.empty(tuple(b - a for a, b in zip(lo, hi)), self.dtype)
-        for bx in range(lo[0] // bs, (hi[0] - 1) // bs + 1):
-            for by in range(lo[1] // bs, (hi[1] - 1) // bs + 1):
-                for bz in range(lo[2] // bs, (hi[2] - 1) // bs + 1):
-                    block = self.read_block(bx, by, bz)
-                    # intersection of this block's extent with the box
-                    b0 = (bx * bs, by * bs, bz * bs)
-                    s0 = tuple(max(a, c) for a, c in zip(lo, b0))
-                    s1 = tuple(min(b, c + bs) for b, c in zip(hi, b0))
-                    out[tuple(slice(a - o, b - o) for a, b, o in zip(s0, s1, lo))] = \
-                        block[tuple(slice(a - c, b - c) for a, b, c in zip(s0, s1, b0))]
+        for bx, by, bz in blocks:
+            ci, off = self.block_chunk(bx, by, bz)
+            block = get(ci)[off]
+            # intersection of this block's extent with the box
+            b0 = (bx * bs, by * bs, bz * bs)
+            s0 = tuple(max(a, c) for a, c in zip(lo, b0))
+            s1 = tuple(min(b, c + bs) for b, c in zip(hi, b0))
+            out[tuple(slice(a - o, b - o) for a, b, o in zip(s0, s1, lo))] = \
+                block[tuple(slice(a - c, b - c) for a, b, c in zip(s0, s1, b0))]
         return out
 
     def read_all(self) -> np.ndarray:

@@ -13,7 +13,9 @@ Examples:
   cz-compress inspect /tmp/fields/p.cz          # header + chunk table + CRCs
   cz-compress inspect artifacts/example_dataset # CZDataset manifest summary
   cz-compress inspect --stats DATASET           # per-member CR/PSNR table
+  cz-compress inspect --json DATASET            # machine-readable tables
   cz-compress gc --dry-run DATASET              # list orphaned members
+  cz-compress serve DATASET --port 8423         # HTTP region-query service
 """
 from __future__ import annotations
 
@@ -123,6 +125,31 @@ def _stats_table(root: str) -> int:
     return 0
 
 
+def _inspect_json(path: str, verify: bool) -> int:
+    """Machine-readable inspect: the same serializers the HTTP service uses
+    (``CZDataset.describe`` for ``/v1/manifest``, ``container.describe`` for
+    the per-member chunk tables), so external tooling and the server can't
+    drift apart."""
+    if os.path.isdir(path):
+        from repro.store import CZDataset
+
+        with CZDataset(path) as ds:
+            out = ds.describe()
+            out["root"] = path
+            out["members"] = {
+                ts["file"]: container.describe(
+                    os.path.join(path, ts["file"]), verify=verify)
+                for q in ds.quantities for ts in ds.timestep_info(q)}
+    else:
+        out = container.describe(path, verify=verify)
+    json.dump(out, sys.stdout, indent=1)
+    print()
+    members = out.get("members", {path: out} if "chunks" in out else {})
+    bad = [m for m in members.values()
+           if verify and m.get("crc_ok") is False]
+    return 1 if bad else 0
+
+
 def inspect_main(argv) -> int:
     ap = argparse.ArgumentParser(prog="cz-compress inspect")
     ap.add_argument("path", help="a .cz container or a CZDataset directory")
@@ -130,11 +157,16 @@ def inspect_main(argv) -> int:
                     help="print CRCs without re-reading chunk data")
     ap.add_argument("--stats", action="store_true",
                     help="per-member CR/PSNR table for a dataset directory")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output: manifest + member/chunk "
+                    "tables as one JSON document on stdout")
     args = ap.parse_args(argv)
     if args.stats:
         if not os.path.isdir(args.path):
             ap.error("--stats needs a CZDataset directory")
         return _stats_table(args.path)
+    if args.json:
+        return _inspect_json(args.path, not args.no_verify)
     if os.path.isdir(args.path):
         ok = _inspect_dataset(args.path, not args.no_verify)
     else:
@@ -240,6 +272,13 @@ def parallel_main(argv) -> int:
     return 0 if ok else 1
 
 
+def serve_main(argv) -> int:
+    """HTTP region-query service over a CZDataset (repro.serve.http)."""
+    from repro.serve.http import main as http_main
+
+    return http_main(argv)
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "inspect":
@@ -248,6 +287,8 @@ def main(argv=None):
         raise SystemExit(gc_main(argv[1:]))
     if argv and argv[0] == "parallel":
         raise SystemExit(parallel_main(argv[1:]))
+    if argv and argv[0] == "serve":
+        raise SystemExit(serve_main(argv[1:]))
 
     from repro.fields import CloudConfig, cavitation_fields
 

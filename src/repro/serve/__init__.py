@@ -1,3 +1,20 @@
-"""serve subsystem: jitted LLM decode/prefill steps (``serve.step``) and
-compressed-field region serving (``serve.region``, jax-free import path)."""
-from .region import FieldRegionServer  # noqa: F401
+"""serve subsystem: compressed-field region serving and jitted LLM decode.
+
+Two independent stacks share this package:
+
+* **field serving** (jax-free import path): :class:`FieldRegionServer`
+  (tiered decode cache + single-flight scheduler, ``serve.region`` /
+  ``serve.cache`` / ``serve.scheduler``) and its HTTP front
+  (:class:`RegionHTTPServer` + :class:`Client`, ``serve.http`` — stdlib
+  ``http.server``, started via ``cz-compress serve``);
+* **LLM decode** (``serve.step``): jitted prefill/decode steps — imported
+  explicitly, never from here, so serving compressed fields stays free of
+  the jax/model stack.
+"""
+from .cache import RegionCache  # noqa: F401
+from .http import Client, RegionHTTPServer  # noqa: F401
+from .region import FieldRegionServer, LatencyHistogram  # noqa: F401
+from .scheduler import ChunkScheduler, SingleFlight  # noqa: F401
+
+__all__ = ["FieldRegionServer", "RegionHTTPServer", "Client", "RegionCache",
+           "ChunkScheduler", "SingleFlight", "LatencyHistogram"]

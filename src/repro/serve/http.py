@@ -1,0 +1,446 @@
+"""HTTP front for :class:`FieldRegionServer` — stdlib only, no new deps.
+
+The post-hoc region-access pattern, network-facing: analysts pull arbitrary
+subdomains out of a compressed CZDataset over plain ``GET``, the way Zarr
+grew an HTTP fetch path over its chunk store.
+
+Endpoints
+---------
+
+``GET /v1/region/{quantity}/{t}?lo=x,y,z&hi=x,y,z[&format=raw|npy]``
+    The decoded box ``[lo, hi)``.  ``raw`` (default) streams C-order bytes
+    with ``X-CZ-Shape`` / ``X-CZ-Dtype`` headers; ``npy`` (also selected by
+    ``Accept: application/x-npy``) wraps the same bytes in the self-
+    describing ``.npy`` container.
+``GET /v1/manifest``
+    Dataset summary JSON — the same serializer as
+    ``cz-compress inspect --json``.
+``GET /healthz``
+    Liveness probe (``200 ok``).
+``GET /metrics``
+    Prometheus text format: query count, request-latency histogram,
+    region- and chunk-cache hits/misses, bytes decoded vs bytes served,
+    coalesced flights, responses by status code.
+
+Concurrency: one thread per connection (``ThreadingHTTPServer``) with a
+bounded decode-admission semaphore (``max_inflight``), and all duplicate
+work coalesced by the region server's tiered cache + single-flight
+scheduler — N clients hammering one hot region cost one decode.
+"""
+from __future__ import annotations
+
+import collections
+import io
+import json
+import threading
+from http.client import HTTPConnection
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
+
+import numpy as np
+
+from .region import FieldRegionServer
+
+__all__ = ["RegionHTTPServer", "Client", "render_metrics", "main"]
+
+
+def render_metrics(region: FieldRegionServer,
+                   responses: dict[int, int] | None = None) -> str:
+    """Prometheus text-format (0.0.4) rendering of one region server's
+    counters."""
+    s = region.stats()
+    lat = region.latency.snapshot()
+    lines = []
+
+    def metric(name, kind, help_, value):
+        lines.append(f"# HELP {name} {help_}")
+        lines.append(f"# TYPE {name} {kind}")
+        lines.append(f"{name} {value}")
+
+    metric("cz_serve_queries_total", "counter",
+           "Region queries answered.", s["queries"])
+    metric("cz_serve_bytes_served_total", "counter",
+           "Decoded bytes returned to clients.", s["bytes_served"])
+    metric("cz_serve_bytes_decoded_total", "counter",
+           "Bytes inflated from compressed chunks (cache misses only).",
+           s["bytes_decoded"])
+    metric("cz_serve_region_cache_hits_total", "counter",
+           "Queries answered from the decoded-region LRU.",
+           s["region_cache_hits"])
+    metric("cz_serve_region_cache_misses_total", "counter",
+           "Queries that had to assemble their box.", s["region_cache_misses"])
+    metric("cz_serve_region_cache_evictions_total", "counter",
+           "Regions evicted from the decoded-region LRU.",
+           s["region_cache_evictions"])
+    metric("cz_serve_region_cache_bytes", "gauge",
+           "Bytes resident in the decoded-region LRU.",
+           s["region_cache_bytes"])
+    metric("cz_serve_chunk_cache_hits_total", "counter",
+           "Chunk fetches served by the store's chunk LRUs.", s["cache_hits"])
+    metric("cz_serve_chunk_cache_misses_total", "counter",
+           "Chunk fetches that decoded (== chunks decoded).",
+           s["cache_misses"])
+    metric("cz_serve_chunks_decoded_total", "counter",
+           "Chunks inflated since the server started.", s["chunks_decoded"])
+    metric("cz_serve_coalesced_requests_total", "counter",
+           "Chunk fetches that joined another request's in-flight decode.",
+           s["flights_joined"])
+
+    name = "cz_serve_request_seconds"
+    lines.append(f"# HELP {name} Region query latency.")
+    lines.append(f"# TYPE {name} histogram")
+    for bound, cum in lat["buckets"]:
+        le = "+Inf" if bound == float("inf") else repr(bound)
+        lines.append(f'{name}_bucket{{le="{le}"}} {cum}')
+    lines.append(f"{name}_sum {lat['sum']}")
+    lines.append(f"{name}_count {lat['count']}")
+
+    if responses is not None:
+        name = "cz_serve_http_responses_total"
+        lines.append(f"# HELP {name} HTTP responses by status code.")
+        lines.append(f"# TYPE {name} counter")
+        for code in sorted(responses):
+            lines.append(f'{name}{{code="{code}"}} {responses[code]}')
+    return "\n".join(lines) + "\n"
+
+
+class _RegionHandler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "cz-serve/1.0"
+
+    # -- plumbing ----------------------------------------------------------
+
+    def log_message(self, fmt, *args):  # quiet by default; opt-in via server
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    def handle(self):
+        try:
+            super().handle()
+        except (BrokenPipeError, ConnectionResetError):
+            # a dropped client is routine, not a server error worth a
+            # socketserver traceback (e.g. RST between keep-alive requests)
+            self.close_connection = True
+
+    def _send(self, code: int, body: bytes, ctype: str,
+              headers: dict | None = None) -> None:
+        self._responded = True
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+        self.server._count_response(code)
+
+    def _json(self, code: int, obj) -> None:
+        self._send(code, json.dumps(obj).encode(),
+                   "application/json; charset=utf-8")
+
+    def _error(self, code: int, msg: str) -> None:
+        if getattr(self, "_responded", False):
+            # a response already started (e.g. the write itself failed):
+            # a second status line would corrupt the stream — just hang up
+            self.close_connection = True
+            return
+        try:
+            self._json(code, {"error": msg})
+        except (BrokenPipeError, ConnectionResetError):
+            self.close_connection = True
+
+    # -- routes ------------------------------------------------------------
+
+    def do_GET(self):  # noqa: N802 (http.server API)
+        self._responded = False
+        url = urlparse(self.path)
+        try:
+            if url.path == "/healthz":
+                self._send(200, b"ok\n", "text/plain; charset=utf-8")
+            elif url.path == "/metrics":
+                body = render_metrics(self.server.region,
+                                      self.server.response_counts()).encode()
+                self._send(200, body,
+                           "text/plain; version=0.0.4; charset=utf-8")
+            elif url.path == "/v1/manifest":
+                self._json(200, self.server.region.manifest())
+            elif url.path.startswith("/v1/region/"):
+                self._region(url)
+            else:
+                self._error(404, f"no route {url.path}")
+        except (BrokenPipeError, ConnectionResetError):
+            self.close_connection = True  # client went away mid-response
+        except KeyError as e:
+            self._error(404, str(e.args[0]) if e.args else str(e))
+        except ValueError as e:
+            self._error(400, str(e))
+        except Exception as e:  # a handler bug must not kill the thread pool
+            self._error(500, f"{type(e).__name__}: {e}")
+
+    def do_POST(self):  # noqa: N802
+        self._responded = False
+        # drain the request body first, or the unread bytes desynchronize
+        # this keep-alive connection (they'd parse as the next request line)
+        if self.headers.get("Transfer-Encoding"):
+            self.close_connection = True
+        else:
+            length = int(self.headers.get("Content-Length") or 0)
+            while length > 0:
+                got = self.rfile.read(min(length, 1 << 16))
+                if not got:
+                    break
+                length -= len(got)
+        self._error(405, "read-only service: GET only")
+
+    do_PUT = do_DELETE = do_PATCH = do_POST
+
+    def _region(self, url) -> None:
+        parts = url.path.split("/")  # ['', 'v1', 'region', quantity, t]
+        if len(parts) != 5 or not parts[3] or not parts[4]:
+            raise ValueError("expected /v1/region/{quantity}/{t}")
+        quantity = parts[3]
+        try:
+            t = int(parts[4])
+        except ValueError:
+            raise ValueError(f"timestep must be an integer, got {parts[4]!r}")
+        q = parse_qs(url.query)
+
+        def vec(name):
+            if name not in q:
+                raise ValueError(f"missing query parameter {name}=x,y,z")
+            try:
+                v = tuple(int(x) for x in q[name][-1].split(","))
+            except ValueError:
+                raise ValueError(f"{name} must be comma-separated integers")
+            if len(v) != 3:
+                raise ValueError(f"{name} must have 3 components")
+            return v
+
+        lo, hi = vec("lo"), vec("hi")
+        fmt = q.get("format", ["raw"])[-1]
+        if fmt not in ("raw", "npy"):
+            raise ValueError(f"unknown format {fmt!r} (raw or npy)")
+        if "application/x-npy" in self.headers.get("Accept", ""):
+            fmt = "npy"
+
+        arr = self.server.region.query(quantity, t, lo, hi, copy=False)
+        if fmt == "npy":
+            buf = io.BytesIO()
+            np.lib.format.write_array(buf, np.asarray(arr),
+                                      allow_pickle=False)
+            self._send(200, buf.getvalue(), "application/x-npy")
+        else:
+            self._send(200, arr.tobytes(), "application/octet-stream",
+                       headers={
+                           "X-CZ-Shape": ",".join(map(str, arr.shape)),
+                           "X-CZ-Dtype": str(arr.dtype),
+                       })
+
+
+class RegionHTTPServer(ThreadingHTTPServer):
+    """Threaded HTTP server over one :class:`FieldRegionServer`.
+
+    ``dataset`` is a path (opened and owned), a ``CZDataset`` (borrowed), or
+    an existing ``FieldRegionServer`` (borrowed — its caches, counters, and
+    admission policy are shared with in-process callers, so ``cache_*`` and
+    ``max_inflight`` are ignored).  ``port=0`` binds an ephemeral loopback
+    port (tests, benchmarks).  ``max_inflight`` bounds concurrent region
+    *decodes* (cache hits never queue behind them) — the admission-control
+    knob surfaced as ``--workers`` on the CLI.
+    """
+
+    daemon_threads = True
+
+    def __init__(self, dataset, host: str = "127.0.0.1", port: int = 8423,
+                 cache_bytes: int = 64 << 20, cache_readers: int = 16,
+                 cache_chunks: int = 32, max_inflight: int = 8,
+                 verbose: bool = False):
+        self._owns_region = not isinstance(dataset, FieldRegionServer)
+        self.region = (FieldRegionServer(dataset, cache_readers=cache_readers,
+                                         cache_chunks=cache_chunks,
+                                         cache_bytes=cache_bytes,
+                                         max_inflight=max(1, int(max_inflight)))
+                       if self._owns_region else dataset)
+        self.verbose = verbose
+        self._responses = collections.Counter()
+        self._resp_lock = threading.Lock()
+        self._thread: threading.Thread | None = None
+        self.closed = False
+        try:
+            super().__init__((host, port), _RegionHandler)
+        except Exception:
+            if self._owns_region:
+                self.region.close()  # don't leak the dataset on a bind error
+            raise
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def _count_response(self, code: int) -> None:
+        with self._resp_lock:
+            self._responses[int(code)] += 1
+
+    def response_counts(self) -> dict[int, int]:
+        with self._resp_lock:
+            return dict(self._responses)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "RegionHTTPServer":
+        """Serve on a daemon thread; returns self (``with`` friendly)."""
+        self._thread = threading.Thread(target=self.serve_forever,
+                                        name="cz-serve", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        if self._thread is not None:
+            self.shutdown()
+            self._thread.join(timeout=5)
+        self.server_close()
+        if self._owns_region:
+            self.region.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class Client:
+    """Minimal stdlib client for the region service (tests, examples,
+    benchmarks).  One persistent connection per instance — use one Client
+    per thread."""
+
+    def __init__(self, url: str, timeout: float = 30.0):
+        u = urlparse(url if "//" in url else f"http://{url}")
+        self.host, self.port = u.hostname, u.port or 80
+        self.timeout = timeout
+        self._conn: HTTPConnection | None = None
+
+    def _request(self, path: str) -> tuple[int, dict, bytes]:
+        for attempt in (0, 1):
+            if self._conn is None:
+                self._conn = HTTPConnection(self.host, self.port,
+                                            timeout=self.timeout)
+            try:
+                self._conn.request("GET", path)
+                r = self._conn.getresponse()
+                return r.status, dict(r.getheaders()), r.read()
+            except (ConnectionError, OSError):
+                # stale keep-alive (server restarted / idle timeout): retry
+                # once on a fresh connection
+                self.close()
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    def _ok(self, path: str) -> tuple[dict, bytes]:
+        status, headers, body = self._request(path)
+        if status != 200:
+            try:
+                msg = json.loads(body)["error"]
+            except Exception:
+                msg = body.decode(errors="replace")
+            raise IOError(f"GET {path} -> {status}: {msg}")
+        return headers, body
+
+    def region(self, quantity: str, t: int, lo, hi) -> np.ndarray:
+        """Fetch one region as a numpy array (``.npy`` wire format)."""
+        path = (f"/v1/region/{quantity}/{int(t)}"
+                f"?lo={','.join(str(int(v)) for v in lo)}"
+                f"&hi={','.join(str(int(v)) for v in hi)}&format=npy")
+        _, body = self._ok(path)
+        return np.lib.format.read_array(io.BytesIO(body), allow_pickle=False)
+
+    def region_raw(self, quantity: str, t: int, lo, hi) -> np.ndarray:
+        """Fetch one region over the raw-bytes wire format (shape/dtype from
+        the ``X-CZ-*`` headers)."""
+        path = (f"/v1/region/{quantity}/{int(t)}"
+                f"?lo={','.join(str(int(v)) for v in lo)}"
+                f"&hi={','.join(str(int(v)) for v in hi)}")
+        headers, body = self._ok(path)
+        shape = tuple(int(v) for v in headers["X-CZ-Shape"].split(","))
+        return np.frombuffer(body, dtype=headers["X-CZ-Dtype"]).reshape(shape)
+
+    def manifest(self) -> dict:
+        return json.loads(self._ok("/v1/manifest")[1])
+
+    def metrics(self) -> str:
+        return self._ok("/metrics")[1].decode()
+
+    def metric(self, name: str) -> float:
+        """One un-labelled sample out of :meth:`metrics` (convenience for
+        tests/benchmarks)."""
+        for line in self.metrics().splitlines():
+            if line.startswith(f"{name} "):
+                return float(line.split()[1])
+        raise KeyError(name)
+
+    def healthz(self) -> bool:
+        return self._request("/healthz")[0] == 200
+
+    def close(self) -> None:
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def main(argv=None) -> int:
+    """``cz-compress serve`` — serve a CZDataset over HTTP."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="cz-compress serve",
+        description="HTTP region-query service over a CZDataset: "
+                    "/v1/region, /v1/manifest, /healthz, /metrics.")
+    ap.add_argument("dataset", help="CZDataset directory")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8423,
+                    help="0 picks an ephemeral port (printed on start)")
+    ap.add_argument("--cache-mb", type=float, default=64.0,
+                    help="decoded-region LRU budget in MiB (0 disables)")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="max concurrent region decodes (admission control)")
+    ap.add_argument("--cache-readers", type=int, default=16,
+                    help="pooled FieldReaders kept open")
+    ap.add_argument("--cache-chunks", type=int, default=32,
+                    help="LRU chunk slots per reader")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log one line per request")
+    args = ap.parse_args(argv)
+
+    srv = RegionHTTPServer(args.dataset, host=args.host, port=args.port,
+                           cache_bytes=int(args.cache_mb * 2**20),
+                           cache_readers=args.cache_readers,
+                           cache_chunks=args.cache_chunks,
+                           max_inflight=args.workers, verbose=args.verbose)
+    qs = ", ".join(srv.region.ds.quantities) or "(empty)"
+    print(f"serving {args.dataset} [{qs}] at {srv.url}")
+    print(f"  GET {srv.url}/v1/region/{{quantity}}/{{t}}?lo=x,y,z&hi=x,y,z")
+    print(f"  GET {srv.url}/v1/manifest | /healthz | /metrics")
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        print("shutting down")
+    finally:
+        srv.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

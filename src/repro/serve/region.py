@@ -1,55 +1,194 @@
 """Compressed-field region serving: ``(quantity, t, lo, hi)`` queries
-against a CZDataset answered through a shared decode cache.
+against a CZDataset answered through a tiered decode cache.
 
 Deliberately free of jax/model imports — serving compressed fields must not
 pull in the LLM decode stack (:mod:`repro.serve.step`).
+
+Three tiers answer a query, cheapest first:
+
+1. **decoded-region LRU** (:class:`repro.serve.cache.RegionCache`) — the
+   exact box was served before and is still resident: zero decode, zero
+   assembly.
+2. **chunk LRU** (the store's pooled :class:`FieldReader` caches) — the
+   covering chunks are resident: block gather + box assembly only.
+3. **decode** — cold chunks are inflated, with concurrent duplicate work
+   coalesced by :class:`repro.serve.scheduler.ChunkScheduler` so each chunk
+   is decoded once per miss however many requests are waiting on it.
+
+:class:`FieldRegionServer` is transport-agnostic (in-process callers use it
+directly; :mod:`repro.serve.http` puts a socket in front) and safe for
+concurrent request threads.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 
-__all__ = ["FieldRegionServer"]
+from .cache import RegionCache
+from .scheduler import ChunkScheduler, SingleFlight
+
+__all__ = ["FieldRegionServer", "LatencyHistogram", "LATENCY_BUCKETS"]
+
+#: Prometheus-style cumulative bucket bounds, seconds (+Inf is implicit).
+LATENCY_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
+                   0.1, 0.25, 0.5, 1.0, 2.5)
+
+
+class LatencyHistogram:
+    """Fixed-bucket latency histogram in the Prometheus text-format shape
+    (cumulative ``le`` buckets plus sum and count)."""
+
+    def __init__(self, buckets=LATENCY_BUCKETS):
+        self.bounds = tuple(float(b) for b in buckets)
+        self._counts = [0] * (len(self.bounds) + 1)  # last = +Inf
+        self._sum = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, seconds: float) -> None:
+        i = 0
+        while i < len(self.bounds) and seconds > self.bounds[i]:
+            i += 1
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += seconds
+
+    def snapshot(self) -> dict:
+        """``{"buckets": [(le, cumulative_count), ...], "sum": s, "count": n}``
+        with the +Inf bucket last."""
+        with self._lock:
+            counts = list(self._counts)
+            total = self._sum
+        cum, rows = 0, []
+        for bound, c in zip(self.bounds + (float("inf"),), counts):
+            cum += c
+            rows.append((bound, cum))
+        return {"buckets": rows, "sum": total, "count": cum}
 
 
 class FieldRegionServer:
     """Serves ``(quantity, t, lo, hi)`` region queries from a CZDataset.
 
-    Thin serving front over :meth:`repro.store.CZDataset.read_box`: all
-    queries share the store's pooled FieldReaders and their LRU chunk
-    caches, so a hot region costs one cache lookup instead of a decode —
-    the paper's §2.3 decompressor, turned into a query server.  Safe for
-    concurrent request threads.
+    The paper's §2.3 decompressor turned into a query server: the tiered
+    cache + single-flight scheduler described in the module docstring, with
+    request counters and a latency histogram for ``/metrics``.
+
+    Parameters
+    ----------
+    dataset:
+        A :class:`repro.store.CZDataset` **or** a dataset path.  A path is
+        opened — and therefore closed — by this server; a dataset object is
+        borrowed, and :meth:`close` leaves it untouched (the caller opened
+        it, the caller closes it).
+    cache_bytes:
+        Byte budget for the decoded-region LRU (``0`` disables it; chunk
+        caching below is unaffected).
+    max_inflight:
+        Cap on *concurrent region decodes* (admission control; ``None`` =
+        unbounded).  Deliberately scoped to the decode path only: cache
+        hits and flight joins never wait on it, so a burst of cold requests
+        cannot serialize the zero-cost hot path behind decodes.
     """
 
     def __init__(self, dataset, cache_readers: int = 16,
-                 cache_chunks: int = 32):
+                 cache_chunks: int = 32, cache_bytes: int = 64 << 20,
+                 max_inflight: int | None = None):
         from repro.store import CZDataset
 
-        if isinstance(dataset, str):
-            dataset = CZDataset(dataset, mode="r",
+        self._owns_dataset = isinstance(dataset, (str, bytes)) or \
+            hasattr(dataset, "__fspath__")
+        if self._owns_dataset:
+            dataset = CZDataset(str(dataset), mode="r",
                                 cache_readers=cache_readers,
                                 cache_chunks=cache_chunks)
         self.ds = dataset
+        self.closed = False
+        self.cache = RegionCache(cache_bytes)
+        self.admission = (threading.BoundedSemaphore(int(max_inflight))
+                          if max_inflight else contextlib.nullcontext())
+        self.scheduler = ChunkScheduler(dataset)
+        self._region_sf = SingleFlight()
         self._lock = threading.Lock()
         self.queries = 0
-        self.query_s = 0.0
+        self.bytes_served = 0
+        self.latency = LatencyHistogram()
 
-    def query(self, quantity: str, t: int, lo, hi):
+    # -- queries -----------------------------------------------------------
+
+    def query(self, quantity: str, t: int, lo, hi, copy: bool = True):
+        """Decode (or fetch from cache) the box ``[lo, hi)`` of one quantity
+        at one timestep.
+
+        ``copy=False`` returns the cache's shared **read-only** array —
+        zero-copy for callers that only serialize it (the HTTP tier); the
+        default hands back a private writable copy.
+        """
+        if self.closed:
+            raise IOError("FieldRegionServer is closed")
+        key = (str(quantity), int(t),
+               tuple(int(v) for v in lo), tuple(int(v) for v in hi))
         t0 = time.perf_counter()
-        out = self.ds.read_box(quantity, t, lo, hi)
+        out = self.cache.get(key)
+        if out is None:
+            # coalesce identical in-flight regions, then chunk-level flights
+            # inside read_box take care of partial overlaps
+            out = self._region_sf.do(
+                key, lambda: self._decode_region(key))
+        dt = time.perf_counter() - t0
+        self.latency.observe(dt)
         with self._lock:
             self.queries += 1
-            self.query_s += time.perf_counter() - t0
+            self.bytes_served += out.nbytes
+        return out.copy() if copy else out
+
+    def _decode_region(self, key):
+        quantity, t, lo, hi = key
+        with self.admission:  # only actual decode work queues here
+            out = self.scheduler.read_box(quantity, t, lo, hi)
+        self.cache.put(key, out)  # freezes `out` read-only
         return out
 
+    def manifest(self) -> dict:
+        """The dataset summary served at ``/v1/manifest`` (one serializer
+        shared with ``cz-compress inspect --json``)."""
+        if self.closed:
+            raise IOError("FieldRegionServer is closed")
+        return self.ds.describe()
+
+    # -- introspection -----------------------------------------------------
+
     def stats(self) -> dict:
+        """Flat counter dict: store chunk-cache counters + region-cache,
+        scheduler, and request-level counters."""
         s = self.ds.stats()
-        s.update({
-            "queries": self.queries,
-            "mean_latency_ms": 1e3 * self.query_s / max(1, self.queries),
-        })
+        lat = self.latency.snapshot()
+        with self._lock:
+            s.update({
+                "queries": self.queries,
+                "bytes_served": self.bytes_served,
+                "mean_latency_ms": 1e3 * lat["sum"] / max(1, lat["count"]),
+            })
+        s.update({f"region_cache_{k}": v
+                  for k, v in self.cache.stats().items()})
+        s.update(self.scheduler.stats())
+        s["region_flights_led"] = self._region_sf.led
+        s["region_flights_joined"] = self._region_sf.joined
         return s
 
-    def close(self):
-        self.ds.close()
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        """Idempotent.  Closes the dataset only when this server opened it
+        from a path — a borrowed :class:`CZDataset` stays open for its
+        owner."""
+        if self.closed:
+            return
+        self.closed = True
+        if self._owns_dataset:
+            self.ds.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

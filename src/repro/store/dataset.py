@@ -147,6 +147,28 @@ class CZDataset:
         raise KeyError(f"quantity {quantity!r} has no timestep {t} "
                        f"(has: {self.timesteps(quantity)})")
 
+    def describe(self) -> dict:
+        """Machine-readable dataset summary: spec, version, and the full
+        per-quantity timestep tables, as one JSON-able dict (deep copy).
+
+        The single serializer behind both ``cz-compress inspect --json`` and
+        the HTTP service's ``/v1/manifest`` — external tooling sees one
+        schema however it asks.
+        """
+        with self._lock:
+            return {
+                "store": "CZDS",
+                "format": int(self._m["format"]),
+                "version": int(self._m["version"]),
+                "spec": dict(self._m["spec"]),
+                "quantities": {
+                    q: {"shape": list(ent["shape"]),
+                        "dtype": str(ent["dtype"]),
+                        "timesteps": [dict(ts) for ts in ent["timesteps"]]}
+                    for q, ent in self._m["quantities"].items()
+                },
+            }
+
     def refresh(self) -> None:
         """Re-read the manifest (pick up commits by a concurrent appender)."""
         with self._lock:
@@ -251,15 +273,22 @@ class CZDataset:
         return self.reader(quantity, t).read_all()
 
     def stats(self) -> dict:
-        """Aggregate decode-cache counters across member readers."""
+        """Aggregate decode-cache counters across member readers (retired
+        readers' counts are folded in at eviction/close, so totals are
+        monotonic).  ``chunks_decoded == cache_misses`` by construction —
+        a FieldReader inflates a chunk exactly when its LRU misses — but
+        both names are exposed so cache consumers (``/metrics``,
+        ``bench_serve``) can report true hit rates without knowing that."""
         with self._lock:
             live = list(self._readers.values())
+            decoded = self._retired_decoded + sum(r.chunks_decoded for r in live)
+            hits = self._retired_hits + sum(r.cache_hits for r in live)
             return {
                 "open_readers": len(live),
-                "chunks_decoded": self._retired_decoded
-                + sum(r.chunks_decoded for r in live),
-                "cache_hits": self._retired_hits
-                + sum(r.cache_hits for r in live),
+                "chunks_decoded": decoded,
+                "cache_hits": hits,
+                "cache_misses": decoded,
+                "cache_hit_rate": hits / (hits + decoded) if hits + decoded else None,
             }
 
     # -- retention ---------------------------------------------------------

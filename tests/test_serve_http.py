@@ -1,0 +1,334 @@
+"""repro.serve HTTP service coverage (ISSUE 5 acceptance): socket
+round-trips byte-identical to direct ``CZDataset.read_box``, single-flight
+decode coalescing under eviction pressure, tiered-cache metrics, the
+close-ownership contract, and the manifest serializer shared with
+``cz-compress inspect --json``."""
+import contextlib
+import io
+import json
+import os
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import CompressionSpec, Pipeline
+from repro.launch.compress import inspect_main
+from repro.serve import (
+    Client,
+    FieldRegionServer,
+    RegionCache,
+    RegionHTTPServer,
+    SingleFlight,
+)
+from repro.store import CZDataset
+
+N = 32
+BS = 8
+# 4 KiB buffers -> 2 blocks per chunk at 8^3 float32: 32 chunks per member
+SPEC = CompressionSpec(scheme="raw", block_size=BS, buffer_bytes=1 << 12)
+
+RNG = np.random.default_rng(42)
+FIELDS = {"p": RNG.normal(size=(N, N, N)).astype(np.float32),
+          "rho": RNG.normal(size=(N, N, N)).astype(np.float32)}
+
+
+def _make_dataset(root):
+    with CZDataset(root, "a", spec=SPEC) as ds:
+        for k in range(2):
+            ds.append({q: f + np.float32(k) for q, f in FIELDS.items()},
+                      time=float(k))
+    return root
+
+
+@pytest.fixture(scope="module")
+def ds_root(tmp_path_factory):
+    return _make_dataset(str(tmp_path_factory.mktemp("serve") / "ds"))
+
+
+@pytest.fixture(scope="module")
+def server(ds_root):
+    with RegionHTTPServer(ds_root, port=0).start() as srv:
+        yield srv
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: HTTP payloads byte-identical to direct read_box
+# ---------------------------------------------------------------------------
+
+def test_http_region_roundtrip_bit_identical(ds_root, server):
+    lo, hi = (3, 9, 14), (19, 25, 30)  # interior, block-unaligned
+    with CZDataset(ds_root) as ds:
+        ref = ds.read_box("rho", 1, lo, hi)
+    with Client(server.url) as c:
+        via_npy = c.region("rho", 1, lo, hi)
+        via_raw = c.region_raw("rho", 1, lo, hi)
+    assert via_npy.dtype == ref.dtype and via_npy.shape == ref.shape
+    assert via_npy.tobytes() == ref.tobytes()
+    assert via_raw.tobytes() == ref.tobytes()
+
+
+def test_manifest_endpoint_shares_inspect_json_serializer(ds_root, server):
+    with Client(server.url) as c:
+        manifest = c.manifest()
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert inspect_main(["--json", "--no-verify", ds_root]) == 0
+    via_cli = json.loads(buf.getvalue())
+    # inspect --json adds root + per-member chunk tables on top of the same
+    # CZDataset.describe() document the HTTP endpoint serves
+    assert {k: via_cli[k] for k in manifest} == manifest
+    assert manifest["quantities"]["p"]["timesteps"][0]["file"] == "p/t000000.cz"
+    assert set(via_cli["members"]) == {
+        f"{q}/t{t:06d}.cz" for q in FIELDS for t in range(2)}
+
+
+def test_inspect_json_single_container(ds_root, capsys):
+    member = os.path.join(ds_root, "p", "t000000.cz")
+    assert inspect_main(["--json", member]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["container"] == "CZ2"
+    assert out["scheme"] == "raw"
+    assert out["crc_ok"] is True
+    assert all(row["crc_ok"] for row in out["chunks"])
+    assert sum(row["blocks"] for row in out["chunks"]) == out["nblocks"]
+
+
+def test_healthz_and_http_errors(server):
+    with Client(server.url) as c:
+        assert c.healthz()
+    for path, code in [
+        ("/nope", 404),
+        ("/v1/region/vorticity/0?lo=0,0,0&hi=4,4,4", 404),      # quantity
+        ("/v1/region/p/9?lo=0,0,0&hi=4,4,4", 404),              # timestep
+        ("/v1/region/p/0?lo=0,0,0&hi=99,4,4", 400),             # out of range
+        ("/v1/region/p/0?lo=0,0&hi=4,4,4", 400),                # 2 components
+        ("/v1/region/p/0?hi=4,4,4", 400),                       # missing lo
+        ("/v1/region/p/xx?lo=0,0,0&hi=4,4,4", 400),             # bad t
+        ("/v1/region/p/0?lo=0,0,0&hi=4,4,4&format=xml", 400),   # bad format
+    ]:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(server.url + path)
+        assert ei.value.code == code, path
+        assert "error" in json.load(ei.value)
+    req = urllib.request.Request(server.url + "/v1/manifest", data=b"x")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req)                             # POST
+    assert ei.value.code == 405
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: /metrics hit-rate reflects the decoded-region LRU
+# ---------------------------------------------------------------------------
+
+def test_metrics_reflect_region_cache(tmp_path):
+    root = _make_dataset(str(tmp_path / "ds"))
+    with RegionHTTPServer(root, port=0).start() as srv:
+        with Client(srv.url) as c:
+            for _ in range(3):
+                box = c.region("p", 0, (0, 0, 0), (BS, BS, BS))
+            np.testing.assert_array_equal(box, FIELDS["p"][:BS, :BS, :BS])
+            assert c.metric("cz_serve_queries_total") == 3
+            assert c.metric("cz_serve_region_cache_misses_total") == 1
+            assert c.metric("cz_serve_region_cache_hits_total") == 2
+            # one 8^3 box sits inside one chunk: exactly one decode ever
+            assert c.metric("cz_serve_chunks_decoded_total") == 1
+            assert c.metric("cz_serve_chunk_cache_misses_total") == 1
+            assert c.metric("cz_serve_bytes_served_total") == 3 * BS**3 * 4
+            assert c.metric("cz_serve_bytes_decoded_total") > 0
+            # histogram: count equals queries, +Inf bucket is cumulative
+            text = c.metrics()
+            assert 'cz_serve_request_seconds_bucket{le="+Inf"} 3' in text
+            assert "cz_serve_request_seconds_count 3" in text
+            assert 'cz_serve_http_responses_total{code="200"}' in text
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: concurrent duplicate requests decode each chunk exactly once
+# ---------------------------------------------------------------------------
+
+def _slow_decode(monkeypatch, seconds=0.05):
+    orig = Pipeline.decompress_chunk
+
+    def slow(self, *a, **k):
+        time.sleep(seconds)
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(Pipeline, "decompress_chunk", slow)
+
+
+def test_concurrent_duplicate_requests_single_decode(tmp_path, monkeypatch):
+    root = _make_dataset(str(tmp_path / "ds"))
+    _slow_decode(monkeypatch)
+    n_clients = 6
+    lo, hi = (0, 0, 0), (BS, 3 * BS, BS)  # spans multiple chunks
+    barrier = threading.Barrier(n_clients)
+    out = []
+
+    # cache_chunks=1: the reader LRU alone cannot stop duplicate decodes —
+    # only the single-flight scheduler can
+    with RegionHTTPServer(root, port=0, cache_chunks=1,
+                          max_inflight=n_clients).start() as srv:
+        covering = srv.region.ds.reader("p", 0).box_chunks(lo, hi)
+        assert len(covering) > 1
+
+        def fetch():
+            with Client(srv.url) as c:
+                barrier.wait()
+                out.append(c.region("p", 0, lo, hi).tobytes())
+
+        threads = [threading.Thread(target=fetch) for _ in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.region.stats()
+
+    ref = FIELDS["p"][:BS, :3 * BS, :BS].tobytes()
+    assert out == [ref] * n_clients
+    assert stats["chunks_decoded"] == len(covering), \
+        "coalescing must decode each covering chunk exactly once"
+    assert stats["queries"] == n_clients
+    # everyone but the leader was answered by a shared flight or the LRU
+    assert (stats["region_cache_hits"] + stats["region_flights_joined"]
+            + stats["flights_joined"]) == n_clients - 1
+
+
+def test_overlapping_boxes_coalesce_shared_chunk(tmp_path, monkeypatch):
+    """Two *different* concurrent boxes sharing their first chunk split the
+    decode: chunk-level flights, not just whole-region memoisation."""
+    root = _make_dataset(str(tmp_path / "ds"))
+    _slow_decode(monkeypatch)
+    srv = FieldRegionServer(root, cache_chunks=1)
+    r = srv.ds.reader("p", 0)
+    # both boxes start at block (0,0,0) -> both fetch chunk 0 first
+    box_a = ((0, 0, 0), (BS, BS, 2 * BS))
+    box_b = ((0, 0, 0), (BS, 2 * BS, BS))
+    chunks = set(r.box_chunks(*box_a)) | set(r.box_chunks(*box_b))
+    barrier = threading.Barrier(2)
+
+    def q(box):
+        barrier.wait()
+        srv.query("p", 0, *box)
+
+    threads = [threading.Thread(target=q, args=(b,)) for b in (box_a, box_b)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stats = srv.stats()
+    srv.close()
+    assert stats["chunks_decoded"] == len(chunks)
+    assert stats["flights_joined"] >= 1  # the shared chunk was coalesced
+
+
+# ---------------------------------------------------------------------------
+# SingleFlight semantics (deterministic, event-driven)
+# ---------------------------------------------------------------------------
+
+def test_single_flight_leader_and_follower():
+    sf = SingleFlight()
+    started, release = threading.Event(), threading.Event()
+    calls, results = [], []
+
+    def leader_fn():
+        started.set()
+        assert release.wait(5)
+        calls.append("leader")
+        return 42
+
+    t1 = threading.Thread(target=lambda: results.append(sf.do("k", leader_fn)))
+    t1.start()
+    assert started.wait(5)
+
+    def follower_fn():  # pragma: no cover - must never run
+        calls.append("follower")
+        return -1
+
+    t2 = threading.Thread(
+        target=lambda: results.append(sf.do("k", follower_fn)))
+    t2.start()
+    deadline = time.time() + 5
+    while sf.joined < 1:
+        assert time.time() < deadline, "follower never joined the flight"
+        time.sleep(0.001)
+    release.set()
+    t1.join(5)
+    t2.join(5)
+    assert results == [42, 42]
+    assert calls == ["leader"]
+    assert (sf.led, sf.joined) == (1, 1)
+    # the flight landed: a later call runs again (memory is the cache's job)
+    assert sf.do("k", lambda: 7) == 7
+    assert sf.led == 2
+
+
+def test_single_flight_propagates_exceptions():
+    sf = SingleFlight()
+
+    def boom():
+        raise RuntimeError("decode failed")
+
+    with pytest.raises(RuntimeError, match="decode failed"):
+        sf.do("k", boom)
+    assert sf.do("k", lambda: 1) == 1  # a failed flight is not sticky
+
+
+# ---------------------------------------------------------------------------
+# RegionCache unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_region_cache_byte_budget_lru():
+    a = np.ones(256, np.float32)  # 1 KiB each
+    cache = RegionCache(max_bytes=2 * a.nbytes)
+    assert cache.get("a") is None
+    assert cache.put("a", a) and cache.put("b", a + 1)
+    assert cache.get("a")[0] == 1  # refresh "a": "b" is now LRU
+    assert cache.put("c", a + 2)
+    assert cache.get("b") is None  # evicted by the byte budget
+    assert cache.get("a") is not None and cache.get("c") is not None
+    s = cache.stats()
+    assert (s["entries"], s["evictions"]) == (2, 1)
+    assert s["bytes"] == 2 * a.nbytes
+    assert not cache.get("a").flags.writeable  # shared entries are frozen
+    # an array bigger than the whole budget is never admitted
+    assert not cache.put("huge", np.ones(4096, np.float32))
+    assert cache.get("huge") is None
+    assert RegionCache(0).put("x", a) is False  # 0 disables caching
+
+
+def test_server_query_copy_semantics(tmp_path):
+    root = _make_dataset(str(tmp_path / "ds"))
+    with FieldRegionServer(root) as srv:
+        box = srv.query("p", 0, (0, 0, 0), (BS, BS, BS))
+        assert box.flags.writeable  # default: private copy
+        shared = srv.query("p", 0, (0, 0, 0), (BS, BS, BS), copy=False)
+        assert not shared.flags.writeable  # zero-copy cache view
+
+
+# ---------------------------------------------------------------------------
+# Satellite: close() ownership
+# ---------------------------------------------------------------------------
+
+def test_close_only_closes_owned_dataset(tmp_path):
+    root = _make_dataset(str(tmp_path / "ds"))
+    # borrowed: the caller's dataset must survive the server's close()
+    with CZDataset(root, "a") as ds:
+        srv = FieldRegionServer(ds)
+        srv.query("p", 0, (0, 0, 0), (BS, BS, BS))
+        srv.close()
+        assert srv.closed
+        # still readable AND appendable: the writer pool was not shut down
+        ds.read_box("p", 0, (0, 0, 0), (BS, BS, BS))
+        ds.append({q: f for q, f in FIELDS.items()})
+    # owned: constructed from a path, so close() closes the dataset
+    srv = FieldRegionServer(root)
+    srv.close()
+    srv.close()  # idempotent
+    with pytest.raises(IOError, match="closed"):
+        srv.query("p", 0, (0, 0, 0), (BS, BS, BS))
+    with pytest.raises(IOError, match="closed"):
+        srv.manifest()
