@@ -1,0 +1,122 @@
+"""Storage-backend benchmark: append + region-read cost per backend.
+
+Same dataset, same spec, three stores — what does the byte-store layer
+cost, and what does the read path ask of an object store?
+
+* **append** — timesteps/s through FileStore (streaming file writer),
+  MemoryStore (buffered put), and RangeStore (whole-object put);
+* **read_box cold** — per-query latency with an empty chunk cache (every
+  query pays ranged gets + decode);
+* **read_box warm** — the same queries again through a warm cache (the
+  backend drops out entirely — this row should be backend-independent);
+* **amplification** — RangeStore's request counters over the cold pass:
+  bytes fetched vs bytes stored, and requests per query.  This is the
+  honesty check that region reads stay byte-ranged on S3-style backends.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import CompressionSpec
+from repro.store import CZDataset, FileStore, MemoryStore, RangeStore
+
+from .common import dataset, emit, save_json
+
+
+def _queries(n: int, box: int, k: int, seed: int = 11) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n - box, (k, 3))
+
+
+def run(quick: bool = True):
+    steps = 2 if quick else 6
+    box = 24
+    n_queries = 16 if quick else 64
+    qois = ["p"] if quick else ["p", "rho"]
+
+    fields = {q: f for q, f in dataset("10k").items() if q in qois}
+    n = next(iter(fields.values())).shape[0]
+    spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3,
+                           block_size=16, buffer_bytes=1 << 18)
+    lows = _queries(n, box, n_queries)
+
+    tmp = tempfile.mkdtemp()
+    backends = {
+        "file": FileStore(f"{tmp}/ds"),
+        "mem": MemoryStore(),
+        "range": RangeStore(),
+    }
+    results = {"n": n, "box": box, "steps": steps, "queries": n_queries,
+               "backends": {}}
+    for name, store in backends.items():
+        t0 = time.perf_counter()
+        with CZDataset(store, "a", spec=spec, workers=4) as ds:
+            for k in range(steps):
+                ds.append({q: f + np.float32(k) for q, f in fields.items()},
+                          time=float(k))
+        append_s = time.perf_counter() - t0
+
+        # cold: fresh handle, tiny chunk cache -> every query hits the store
+        before = store.stats() if name == "range" else None
+        t0 = time.perf_counter()
+        with CZDataset(store, cache_chunks=4) as ds:
+            for lo in lows:
+                ds.read_box(qois[0], 0, lo, lo + box)
+            cold_s = time.perf_counter() - t0
+            amp = None
+            if before is not None:
+                after = store.stats()
+                amp = {
+                    "range_requests": after["range_requests"] - before["range_requests"],
+                    "bytes_fetched": after["bytes_fetched"] - before["bytes_fetched"],
+                    "bytes_stored": after["bytes_stored"],
+                }
+            # warm: same handle, same queries -> served from the chunk LRU
+            ds.read_box(qois[0], 0, lows[0], lows[0] + box)  # prime
+            t0 = time.perf_counter()
+            for lo in lows:
+                ds.read_box(qois[0], 0, lo, lo + box)
+            warm_s = time.perf_counter() - t0
+
+        row = {
+            "append_s": append_s,
+            "steps_per_s": steps / append_s,
+            "cold_us_per_query": cold_s / n_queries * 1e6,
+            "warm_us_per_query": warm_s / n_queries * 1e6,
+        }
+        if amp is not None:
+            row["amplification"] = amp
+            row["fetched_over_stored"] = amp["bytes_fetched"] / amp["bytes_stored"]
+            row["requests_per_query"] = amp["range_requests"] / n_queries
+        results["backends"][name] = row
+
+        emit(f"backends_append_{name}", append_s / steps * 1e6,
+             f"{steps / append_s:.2f}steps_per_s")
+        emit(f"backends_cold_{name}", row["cold_us_per_query"],
+             f"{n_queries}q_box{box}")
+        emit(f"backends_warm_{name}", row["warm_us_per_query"],
+             f"{n_queries}q_box{box}")
+    amp = results["backends"]["range"]["amplification"]
+    emit("backends_range_amplification",
+         results["backends"]["range"]["requests_per_query"] * 1e6,
+         f"fetched{amp['bytes_fetched']}_stored{amp['bytes_stored']}")
+
+    shutil.rmtree(tmp, ignore_errors=True)
+    path = save_json("backends", results)
+    print(f"# wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (also the default under benchmarks.run)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full)

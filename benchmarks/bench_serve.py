@@ -5,12 +5,13 @@ zipf-hot region mix (a few regions take most of the traffic — the analyst
 returning to the same vortex core) and report p50/p99 request latency,
 throughput, and where the queries were answered: decoded-region LRU vs
 chunk LRU vs cold decode.
+
+The dataset lives in a ``mem://`` store — no scratch directory, and the
+serve tier is exercised end-to-end over a non-file backend (URL root ->
+CZDataset -> byte-ranged reads).
 """
 from __future__ import annotations
 
-import os
-import shutil
-import tempfile
 import threading
 import time
 
@@ -18,7 +19,7 @@ import numpy as np
 
 from repro.core import CompressionSpec
 from repro.serve import Client, RegionHTTPServer
-from repro.store import CZDataset
+from repro.store import CZDataset, MemoryStore
 
 from .common import dataset, emit, save_json
 
@@ -39,7 +40,7 @@ def run(quick: bool = True):
     n = next(iter(fields.values())).shape[0]
     spec = CompressionSpec(scheme="wavelet", wavelet="w3ai", eps=1e-3,
                            block_size=16, buffer_bytes=1 << 18)
-    root = os.path.join(tempfile.mkdtemp(), "serve_ds")
+    root = "mem://bench_serve"
     with CZDataset(root, "a", spec=spec, workers=4) as ds:
         ds.append(fields, time=0.0)
 
@@ -112,7 +113,7 @@ def run(quick: bool = True):
          f"{len(cold_ms)}regions")
     emit("serve_hit_rate", region_hr * 1e6,
          f"region{region_hr:.2f}_chunk{chunk_hr:.2f}")
-    shutil.rmtree(os.path.dirname(root), ignore_errors=True)
+    MemoryStore.drop("bench_serve")
     path = save_json("serve", results)
     print(f"# wrote {path}")
     return results

@@ -20,6 +20,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (
+        bench_backends,
         bench_blocksize,
         bench_ckpt,
         bench_coeff,
@@ -52,6 +53,7 @@ def main(argv=None) -> None:
         "ckpt": bench_ckpt,
         "gradcomp": bench_gradcomp,
         "store": bench_store,
+        "backends": bench_backends,
         "parallel": bench_parallel,
         "device": bench_device,
         "serve": bench_serve,

@@ -1,12 +1,18 @@
 """Per-rank manifest sidecars for multi-writer in-situ append.
 
-A single-manifest dataset serializes every commit through one file.  In a
+A single-manifest dataset serializes every commit through one object.  In a
 rank-parallel in-situ run, each rank instead owns a :class:`RankWriter`: it
-writes its member files (rank-suffixed, so ranks can never collide on a
-path) and commits them to a private ``manifest.rank{r}.json`` sidecar —
+writes its member objects (rank-suffixed, so ranks can never collide on a
+key) and commits them to a private ``manifest.rank{r}.json`` sidecar —
 atomically, with zero coordination.  A coordinator later calls
 :func:`merge_manifests`, which folds every sidecar entry into the main
 ``manifest.json`` in one atomic commit and then retires the sidecars.
+
+Both sides take ``root`` as a path, store URL, or
+:class:`~repro.store.backends.Store` — rank-parallel append works over any
+backend whose :meth:`Store.lock` is exclusive across the participating
+writers (FileStore: ``flock``, so cross-process on a shared filesystem;
+MemoryStore: in-process threads).
 
 Crash safety at every point:
 
@@ -20,14 +26,11 @@ Crash safety at every point:
 """
 from __future__ import annotations
 
-import contextlib
-import fcntl
-import os
-
 import numpy as np
 
 from repro.core import container
 from repro.core.pipeline import CompressionSpec
+from repro.store.backends import open_store
 from repro.store.dataset import _member_stats
 from repro.store.manifest import (
     QUANTITY_RE,
@@ -44,24 +47,13 @@ from repro.store.writer import ShardWriter
 
 __all__ = ["RankWriter", "merge_manifests"]
 
-#: advisory lock serializing sidecar commits against sidecar retirement
+#: advisory lock serializing sidecar commits against sidecar retirement.
+#: Held for sidecar commit (RankWriter.append) and sidecar retirement
+#: (merge_manifests): without it, an entry committed between the merge's
+#: final re-read and its delete would vanish.  Member writes stay outside
+#: the lock — only the tiny JSON commit is serialized, so rank contention
+#: is negligible (the whole point of sidecars).
 _LOCK_NAME = ".sidecar.lock"
-
-
-@contextlib.contextmanager
-def _sidecar_lock(root: str):
-    """Exclusive flock held for sidecar commit (RankWriter.append) and
-    sidecar retirement (merge_manifests): without it, an entry committed
-    between the merge's final re-read and its unlink would vanish.  Member
-    writes stay outside the lock — only the tiny JSON commit is serialized,
-    so rank contention is negligible (the whole point of sidecars)."""
-    fd = os.open(os.path.join(root, _LOCK_NAME), os.O_CREAT | os.O_RDWR, 0o644)
-    try:
-        fcntl.flock(fd, fcntl.LOCK_EX)
-        yield
-    finally:
-        fcntl.flock(fd, fcntl.LOCK_UN)
-        os.close(fd)
 
 
 class RankWriter:
@@ -74,29 +66,30 @@ class RankWriter:
     ranks commit independently.
     """
 
-    def __init__(self, root: str, rank: int, spec: CompressionSpec | None = None,
+    def __init__(self, root, rank: int, spec: CompressionSpec | None = None,
                  workers: int = 1, stats: bool = False):
+        self.store = open_store(root)
         self.root = str(root)
         self.rank = int(rank)
         if self.rank < 0:
             raise ValueError(f"rank must be >= 0, got {rank}")
-        m = read_manifest(self.root)  # dataset must exist
+        m = read_manifest(self.store)  # dataset must exist
         self.spec = (CompressionSpec.from_json(m["spec"]) if spec is None
                      else spec.validate())
         self._writer = ShardWriter(self.spec, workers=workers)
         self._stats = bool(stats)
         try:
-            self._side = read_rank_manifest(self.root, self.rank)
+            self._side = read_rank_manifest(self.store, self.rank)
         except FileNotFoundError:
             self._side = new_rank_manifest(self.rank)
 
     def member_name(self, quantity: str, t: int) -> str:
-        """Rank-suffixed member path — two ranks can never collide."""
-        return os.path.join(quantity, f"t{int(t):06d}.r{self.rank}.cz")
+        """Rank-suffixed member key — two ranks can never collide."""
+        return f"{quantity}/t{int(t):06d}.r{self.rank}.cz"
 
     def append(self, fields: dict[str, np.ndarray], t: int,
                time: float | None = None) -> int:
-        """Write member files, then commit them to this rank's sidecar.
+        """Write member objects, then commit them to this rank's sidecar.
 
         Uncommitted (merged) entries are invisible to dataset readers until
         :func:`merge_manifests` folds the sidecar into the main manifest.
@@ -114,10 +107,8 @@ class RankWriter:
                     f"rank {self.rank} already appended {q!r} at t={t}")
             field = np.asarray(field)
             rel = self.member_name(q, t)
-            os.makedirs(os.path.join(self.root, q), exist_ok=True)
-            full = os.path.join(self.root, rel)
-            if os.path.exists(full):
-                # members are immutable; an existing file means this (q, t)
+            if self.store.exists(rel):
+                # members are immutable; an existing object means this (q, t)
                 # was already written — merged-and-committed (a restarted
                 # rank replaying a step) or orphaned by a crash.  Rewriting
                 # in place could tear a committed member; refuse.
@@ -126,9 +117,10 @@ class RankWriter:
                     "refusing to overwrite — gc the dataset or use a new t")
             member_spec = self._writer.spec_for(field)
             nbytes = self._writer.write(
-                full, field, spec=member_spec,
+                rel, field, spec=member_spec,
                 extra_header={"quantity": q, "t": t, "time": time,
-                              "rank": self.rank})
+                              "rank": self.rank},
+                store=self.store)
             entry = {
                 "quantity": q, "t": t, "time": time, "file": rel,
                 "bytes": int(nbytes), "raw_bytes": int(field.nbytes),
@@ -136,27 +128,28 @@ class RankWriter:
                 "dtype": str(member_spec.np_dtype),
             }
             if self._stats:
-                entry.update(_member_stats(field, container.read_field(full)))
+                entry.update(_member_stats(
+                    field, container.read_field(rel, store=self.store)))
             staged.append(entry)
-        # all members fsynced on disk -> one atomic sidecar commit.  The
-        # on-disk sidecar is the truth for *unmerged* entries (a concurrent
+        # all members durable in the store -> one atomic sidecar commit.  The
+        # stored sidecar is the truth for *unmerged* entries (a concurrent
         # merge may have retired some), so reconcile under the lock first —
         # a long-lived writer must not resurrect already-merged history.
-        with _sidecar_lock(self.root):
+        with self.store.lock(_LOCK_NAME):
             try:
-                self._side = read_rank_manifest(self.root, self.rank)
+                self._side = read_rank_manifest(self.store, self.rank)
             except FileNotFoundError:
                 self._side = new_rank_manifest(self.rank)
             self._side["entries"].extend(staged)
-            write_rank_manifest(self.root, self._side)
+            write_rank_manifest(self.store, self._side)
         return t
 
     @property
     def pending(self) -> int:
         """Entries committed to this rank's sidecar but not yet merged
-        (read from disk — a concurrent merge may have retired some)."""
+        (read from the store — a concurrent merge may have retired some)."""
         try:
-            return len(read_rank_manifest(self.root, self.rank)["entries"])
+            return len(read_rank_manifest(self.store, self.rank)["entries"])
         except FileNotFoundError:
             return 0
 
@@ -176,7 +169,7 @@ def _committed(m: dict) -> dict[tuple[str, int], str]:
             for ts in ent["timesteps"]}
 
 
-def merge_manifests(root: str, remove_sidecars: bool = True) -> int:
+def merge_manifests(root, remove_sidecars: bool = True) -> int:
     """Fold every rank sidecar into ``manifest.json`` in one atomic commit.
 
     Returns the number of newly merged entries.  Idempotent: entries already
@@ -186,22 +179,23 @@ def merge_manifests(root: str, remove_sidecars: bool = True) -> int:
     quantity/timestep), a sidecar referencing a missing member, or a shape
     mismatch; the dataset stays readable at its last committed state.
     """
-    m = read_manifest(root)
+    store = open_store(root)
+    m = read_manifest(store)
     committed = _committed(m)
-    ranks = list_rank_manifests(root)
+    ranks = list_rank_manifests(store)
     pending: list[tuple[int, dict]] = []
     for rank in ranks:
-        side = read_rank_manifest(root, rank)
+        side = read_rank_manifest(store, rank)
         for e in side["entries"]:
             key = (e["quantity"], int(e["t"]))
             if key in committed:
                 if committed[key] != e["file"]:
                     raise ManifestError(
-                        f"merge conflict in {root}: rank {rank} wrote "
+                        f"merge conflict in {store.url}: rank {rank} wrote "
                         f"{e['file']} for {key[0]!r} t={key[1]} but "
                         f"{committed[key]} is already committed")
                 continue  # already merged (idempotent re-run)
-            if not os.path.exists(os.path.join(root, e["file"])):
+            if not store.exists(e["file"]):
                 raise ManifestError(
                     f"rank {rank} sidecar references missing member "
                     f"{e['file']} — refusing to commit a torn timestep")
@@ -237,7 +231,7 @@ def merge_manifests(root: str, remove_sidecars: bool = True) -> int:
         for q in touched:
             m["quantities"][q]["timesteps"].sort(key=lambda ts: ts["t"])
         m["version"] = int(m["version"]) + 1
-        write_manifest(root, m)  # the single atomic commit point
+        write_manifest(store, m)  # the single atomic commit point
 
     if remove_sidecars:
         # a rank may have committed new entries after we read its sidecar:
@@ -246,9 +240,9 @@ def merge_manifests(root: str, remove_sidecars: bool = True) -> int:
         # retire a fully merged sidecar — concurrent appends are never
         # dropped
         for rank in ranks:
-            with _sidecar_lock(root):
+            with store.lock(_LOCK_NAME):
                 try:
-                    side = read_rank_manifest(root, rank)
+                    side = read_rank_manifest(store, rank)
                 except FileNotFoundError:
                     continue
                 remaining = [
@@ -257,7 +251,7 @@ def merge_manifests(root: str, remove_sidecars: bool = True) -> int:
                 ]
                 if remaining:
                     side["entries"] = remaining
-                    write_rank_manifest(root, side)
+                    write_rank_manifest(store, side)
                 else:
-                    os.unlink(os.path.join(root, rank_manifest_name(rank)))
+                    store.delete(rank_manifest_name(rank))
     return len(pending)

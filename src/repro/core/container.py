@@ -22,11 +22,20 @@ neighbouring block fetches hit the cache instead of re-inflating
 (paper §2.3 "Data decompression").  Decode is registry-driven: any scheme
 recorded in the header — including third-party ones registered via
 ``repro.core.schemes.register_scheme`` — round-trips.
+
+All container I/O flows through the :class:`repro.store.backends.Store`
+byte-store protocol: a plain ``path`` argument resolves to a
+:class:`FileStore` on the file's directory, and every reader/writer also
+takes ``store=`` with the path re-interpreted as a store *key* — the hook
+CZDataset uses to put members in memory or object-store backends.  Reads
+are byte-range ``store.get`` calls (footer first, then exactly the chunks
+touched): no open file handles, no seeks, S3-shaped access.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import io
 import json
 import os
 import struct
@@ -36,8 +45,20 @@ from typing import Iterable, Iterator
 
 import numpy as np
 
+from repro.store import backends as stores
+
 from . import blocks as blk
 from .pipeline import CompressedField, CompressionSpec, Pipeline
+
+
+def _source(path, store: stores.Store | None) -> tuple[stores.Store, str]:
+    """``(store, key)`` for a path-or-key: with no explicit store, a plain
+    path gets a :class:`FileStore` rooted at its directory, so every byte
+    of container I/O goes through the Store protocol."""
+    if store is not None:
+        return store, str(path)
+    head, tail = os.path.split(os.path.abspath(os.fspath(path)))
+    return stores.FileStore(head), tail
 
 
 def _decode_spec(header: dict, device: str | None) -> CompressionSpec:
@@ -85,17 +106,28 @@ def commit_footer(f, base_header: dict, sizes: list[int], nblks: list[int],
     f.write(_FOOTER_PTR.pack(footer_off))
     if fsync:
         f.flush()
-        os.fsync(f.fileno())
+        try:
+            fd = f.fileno()
+        except (OSError, io.UnsupportedOperation):
+            fd = None  # store-buffered sink: durability is the put's problem
+        if fd is not None:
+            os.fsync(fd)
     return footer_off + len(hbytes)
 
 
 def write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
-                 base_header: dict, fsync: bool = False) -> int:
-    """Stream ``(chunk, nblk)`` pairs to a CZ2 file; one chunk in memory."""
+                 base_header: dict, fsync: bool = False,
+                 store: stores.Store | None = None) -> int:
+    """Stream ``(chunk, nblk)`` pairs to a CZ2 container; one chunk in
+    memory.  ``store=`` writes through a byte-store backend (``path`` is
+    the key): file backends stream to a real handle, object-store backends
+    buffer and commit one whole-object put (they cannot seek to patch the
+    footer pointer)."""
     sizes: list[int] = []
     nblks: list[int] = []
     crcs: list[int] = []
-    with open(path, "wb") as f:
+    sink = open(path, "wb") if store is None else store.open_write(path)
+    with sink as f:
         f.write(MAGIC)
         f.write(_FOOTER_PTR.pack(0))  # patched once the footer offset is known
         for chunk, nblk in chunk_iter:
@@ -133,7 +165,8 @@ def build_field_header(pipe: Pipeline, source,
 
 def write_compressed(path: str, source, spec: CompressionSpec | None = None,
                      extra_header: dict | None = None, workers: int = 1,
-                     executor=None, fsync: bool = False) -> int:
+                     executor=None, fsync: bool = False,
+                     store: stores.Store | None = None) -> int:
     """Write a CZ2 container; returns total bytes written.
 
     ``source`` is either a 3D field / 4D block batch compressed on the fly
@@ -143,20 +176,21 @@ def write_compressed(path: str, source, spec: CompressionSpec | None = None,
     external pool, e.g. the store's shared one); the single ordered drain
     keeps the file byte-identical to a serial write.  ``fsync`` flushes the
     file to stable storage before returning (the store's commit protocol).
+    ``store=`` writes through a byte-store backend (``path`` is the key).
     """
     if isinstance(source, CompressedField):
         header = dict(source.header)
         for k in ("chunk_nblocks", "chunk_sizes", "chunk_crc32", "nblocks"):
             header.pop(k, None)
         pairs = zip(source.chunks, source.header["chunk_nblocks"])
-        return write_stream(path, pairs, header, fsync=fsync)
+        return write_stream(path, pairs, header, fsync=fsync, store=store)
 
     if spec is None:
         raise TypeError("spec is required when writing a raw field/blocks")
     pipe = Pipeline(spec, workers=workers)
     header, data = build_field_header(pipe, source, extra_header)
     chunk_iter = pipe.iter_chunks(data, workers=workers, executor=executor)
-    return write_stream(path, chunk_iter, header, fsync=fsync)
+    return write_stream(path, chunk_iter, header, fsync=fsync, store=store)
 
 
 def write_field(path: str, field: np.ndarray, spec: CompressionSpec,
@@ -165,7 +199,8 @@ def write_field(path: str, field: np.ndarray, spec: CompressionSpec,
 
 
 def _read_header(f) -> tuple[dict, int]:
-    """Dispatch on magic; returns (header, data_start)."""
+    """Dispatch on magic; returns (header, data_start).  File-handle variant
+    kept for callers that already hold one open (fixtures, tooling)."""
     magic = f.read(4)
     try:
         if magic == MAGIC_V1:
@@ -183,36 +218,68 @@ def _read_header(f) -> tuple[dict, int]:
     raise ValueError("not a CZ container")
 
 
-def iter_compressed(path: str) -> Iterator[tuple[bytes, int]]:
+def _fetch_header(store: stores.Store, key: str) -> tuple[dict, int, bytes]:
+    """Read a container's metadata with byte-range gets — magic + pointer
+    first, then exactly the header/footer bytes.  Returns
+    (header, data_start, magic)."""
+    head = store.get(key, (0, len(MAGIC) + _FOOTER_PTR.size))
+    if len(head) < len(MAGIC) + _FOOTER_PTR.size:
+        raise ValueError("not a CZ container")
+    magic = head[:len(MAGIC)]
+    (ptr,) = _FOOTER_PTR.unpack(head[len(MAGIC):])
+    try:
+        if magic == MAGIC_V1:
+            header = json.loads(store.get(key, (12, 12 + ptr)))
+            header.setdefault("format", 1)
+            return header, 12 + ptr, magic
+        if magic == MAGIC:
+            header = json.loads(store.get(key, (ptr, None)))
+            return header, 12, magic
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise IOError(f"corrupt container metadata: {e}") from None
+    raise ValueError("not a CZ container")
+
+
+def _iter_chunk_bytes(store: stores.Store, key: str, header: dict,
+                      data_start: int) -> Iterator[tuple[bytes, int, int]]:
+    """CRC-checked ``(chunk_bytes, nblk, index)`` stream for a full scan —
+    one ranged get over the whole data region (a sequential read is one
+    request on an object store, not one per chunk)."""
+    sizes = header["chunk_sizes"]
+    data = store.get(key, (data_start, data_start + int(sum(sizes))))
+    off = 0
+    for i, (sz, nblk, crc) in enumerate(zip(sizes, header["chunk_nblocks"],
+                                            header["chunk_crc32"])):
+        chunk = data[off:off + sz]
+        off += sz
+        if (zlib.crc32(chunk) & 0xFFFFFFFF) != crc:
+            raise IOError("chunk CRC mismatch — corrupt container")
+        yield chunk, nblk, i
+
+
+def iter_compressed(path: str, store: stores.Store | None = None
+                    ) -> Iterator[tuple[bytes, int]]:
     """Stream ``(chunk, nblk)`` pairs out of a container, CRC-checked."""
-    with open(path, "rb") as f:
-        header, data_start = _read_header(f)
-        f.seek(data_start)
-        for sz, nblk, crc in zip(header["chunk_sizes"], header["chunk_nblocks"],
-                                 header["chunk_crc32"]):
-            chunk = f.read(sz)
-            if (zlib.crc32(chunk) & 0xFFFFFFFF) != crc:
-                raise IOError("chunk CRC mismatch — corrupt container")
-            yield chunk, nblk
+    store, key = _source(path, store)
+    header, data_start, _ = _fetch_header(store, key)
+    for chunk, nblk, _i in _iter_chunk_bytes(store, key, header, data_start):
+        yield chunk, nblk
 
 
-def read_field(path: str, device: str | None = None) -> np.ndarray:
+def read_field(path: str, device: str | None = None,
+               store: stores.Store | None = None) -> np.ndarray:
     """Decompress a whole container: the field, or raw blocks if the file was
     written from a block batch (no ``field_shape`` recorded).  ``device``
     overrides the recorded stage-1 routing for the decode (e.g. force a host
-    decode of a device-written file)."""
-    with open(path, "rb") as f:
-        header, data_start = _read_header(f)
-        pipe = Pipeline(_decode_spec(header, device))
-        fmt = int(header.get("format", 1))
-        f.seek(data_start)
-        outs = []
-        for sz, nblk, crc in zip(header["chunk_sizes"], header["chunk_nblocks"],
-                                 header["chunk_crc32"]):
-            chunk = f.read(sz)
-            if (zlib.crc32(chunk) & 0xFFFFFFFF) != crc:
-                raise IOError("chunk CRC mismatch — corrupt container")
-            outs.append(pipe.decompress_chunk(chunk, nblk, fmt))
+    decode of a device-written file); ``store=`` reads ``path`` as a key in
+    a byte-store backend."""
+    store, key = _source(path, store)
+    header, data_start, _ = _fetch_header(store, key)
+    pipe = Pipeline(_decode_spec(header, device))
+    fmt = int(header.get("format", 1))
+    outs = [pipe.decompress_chunk(chunk, nblk, fmt)
+            for chunk, nblk, _i in _iter_chunk_bytes(store, key, header,
+                                                     data_start)]
     blocks = np.concatenate(outs)
     shape = header.get("field_shape")
     if shape is None:
@@ -220,7 +287,8 @@ def read_field(path: str, device: str | None = None) -> np.ndarray:
     return np.asarray(blk.unblockify(blocks, tuple(shape)))
 
 
-def describe(path: str, verify: bool = False) -> dict:
+def describe(path: str, verify: bool = False,
+             store: stores.Store | None = None) -> dict:
     """Machine-readable container summary: header fields plus the per-chunk
     table, as one JSON-able dict.
 
@@ -229,25 +297,25 @@ def describe(path: str, verify: bool = False) -> dict:
     ``verify=True`` re-reads every chunk and adds a ``crc_ok`` verdict per
     chunk (and an aggregate one).
     """
-    with open(path, "rb") as f:
-        magic = f.read(4)
-        f.seek(0)
-        header, data_start = _read_header(f)
-        sizes = header["chunk_sizes"]
-        crcs = header.get("chunk_crc32", [None] * len(sizes))
-        chunks = []
-        ok = True
-        if verify:
-            f.seek(data_start)
-        for i, (sz, nblk, crc) in enumerate(
-                zip(sizes, header["chunk_nblocks"], crcs)):
-            row = {"index": i, "blocks": int(nblk), "bytes": int(sz),
-                   "crc32": crc}
-            if verify and crc is not None:
-                good = (zlib.crc32(f.read(sz)) & 0xFFFFFFFF) == crc
-                row["crc_ok"] = good
-                ok &= good
-            chunks.append(row)
+    src, key = _source(path, store)
+    header, data_start, magic = _fetch_header(src, key)
+    sizes = header["chunk_sizes"]
+    crcs = header.get("chunk_crc32", [None] * len(sizes))
+    chunks = []
+    ok = True
+    data = src.get(key, (data_start, data_start + int(sum(sizes)))) \
+        if verify else b""
+    off = 0
+    for i, (sz, nblk, crc) in enumerate(
+            zip(sizes, header["chunk_nblocks"], crcs)):
+        row = {"index": i, "blocks": int(nblk), "bytes": int(sz),
+               "crc32": crc}
+        if verify and crc is not None:
+            good = (zlib.crc32(data[off:off + sz]) & 0xFFFFFFFF) == crc
+            row["crc_ok"] = good
+            ok &= good
+        off += sz
+        chunks.append(row)
     total = int(sum(sizes))
     spec = header["spec"]
     out = {
@@ -275,13 +343,21 @@ class FieldReader:
     decompressor).  Thread-safe: chunk inflation and the cache are guarded by
     a lock, so concurrent readers (e.g. the store's region-query server) can
     share one reader and its decode cache.
+
+    Chunks are fetched as **byte ranges** from the backing store — footer at
+    open, then ``store.get(key, (off, off + sz))`` per cold chunk.  The
+    reader holds no open file handle, so an idle reader costs nothing and a
+    serve tier can keep thousands pooled; ``close()`` is terminal (it only
+    marks the reader dead and drops its cache — use after close raises
+    ``ValueError``).
     """
 
     def __init__(self, path: str, cache_chunks: int = 8,
-                 device: str | None = None):
-        self.path = path
-        self._f = open(path, "rb")
-        self.header, data_start = _read_header(self._f)
+                 device: str | None = None,
+                 store: stores.Store | None = None):
+        self.path = str(path)
+        self.store, self.key = _source(path, store)
+        self.header, data_start, _ = _fetch_header(self.store, self.key)
         self.spec = _decode_spec(self.header, device)
         self.format = int(self.header.get("format", 1))
         self._pipe = Pipeline(self.spec)
@@ -290,7 +366,6 @@ class FieldReader:
         self._chunk_nblk = self.header["chunk_nblocks"]
         self._blk0 = np.concatenate([[0], np.cumsum(self._chunk_nblk)])
         if "field_shape" not in self.header:
-            self._f.close()
             raise ValueError(
                 "container was written from a block batch (no field_shape); "
                 "use read_field for raw blocks")
@@ -299,6 +374,7 @@ class FieldReader:
         self._cache: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
         self._cache_chunks = cache_chunks
         self._lock = threading.Lock()
+        self._closed = False
         self.cache_hits = 0
         self.cache_misses = 0
 
@@ -316,9 +392,18 @@ class FieldReader:
     def dtype(self) -> np.dtype:
         return self.spec.np_dtype
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def close(self):
+        """Terminal and idempotent: marks the reader dead and drops its
+        chunk cache.  There is no file handle to release — any later fetch
+        raises ``ValueError`` (a holder that outlives its owner's close must
+        fail loudly, not resurrect a retired cache)."""
         with self._lock:
-            self._f.close()
+            self._closed = True
+            self._cache.clear()
 
     def __enter__(self):
         return self
@@ -335,17 +420,18 @@ class FieldReader:
         built on it (e.g. the serve scheduler's bytes-decoded counter) stays
         exact under concurrency."""
         with self._lock:
+            if self._closed:
+                raise ValueError(
+                    f"FieldReader for {self.path!r} is closed "
+                    "(close() is terminal)")
             if ci in self._cache:
                 self._cache.move_to_end(ci)
                 self.cache_hits += 1
                 return self._cache[ci], False
             self.cache_misses += 1
-            if self._f.closed:
-                # a holder of this reader outlived a close() (e.g. the store
-                # evicted it from its LRU mid-read) — reopen transparently
-                self._f = open(self.path, "rb")
-            self._f.seek(self._chunk_off[ci])
-            buf = self._f.read(self.header["chunk_sizes"][ci])
+            off = int(self._chunk_off[ci])
+            buf = self.store.get(
+                self.key, (off, off + self.header["chunk_sizes"][ci]))
             out = self._pipe.decompress_chunk(buf, self._chunk_nblk[ci], self.format)
             self._cache[ci] = out
             while len(self._cache) > self._cache_chunks:

@@ -16,6 +16,10 @@ Examples:
   cz-compress inspect --json DATASET            # machine-readable tables
   cz-compress gc --dry-run DATASET              # list orphaned members
   cz-compress serve DATASET --port 8423         # HTTP region-query service
+
+DATASET is a directory path or a store URL (``file:///data/run42``,
+``mem://scratch`` — see repro.store.backends): inspect, gc, and serve work
+over any registered backend.
 """
 from __future__ import annotations
 
@@ -24,7 +28,6 @@ import json
 import os
 import sys
 import time
-import zlib
 
 import numpy as np
 
@@ -42,43 +45,62 @@ def _validated_spec(ap: argparse.ArgumentParser,
         ap.error(str(e))
 
 
-def _inspect_container(path: str, verify: bool = True) -> bool:
-    """Print a CZ container's self-description; returns CRC verdict."""
-    with open(path, "rb") as f:
-        magic = f.read(4)
-        f.seek(0)
-        header, data_start = container._read_header(f)
-    sizes = header["chunk_sizes"]
-    nblks = header["chunk_nblocks"]
-    total = sum(sizes)
-    print(f"{path}")
+def _is_dataset_root(path: str) -> bool:
+    """Store URLs are always dataset roots; plain paths are roots iff they
+    are directories (a file path is a single .cz container)."""
+    return "://" in path or os.path.isdir(path)
+
+
+def _local_out_dir(ap: argparse.ArgumentParser, out: str) -> str:
+    """Resolve --out for the ex-situ writers, which produce real local files
+    (the rank-parallel engine's processes seek into ONE shared file): plain
+    paths pass through, file:// URLs resolve to their directory, any other
+    store scheme is a usage error."""
+    if "://" not in out:
+        return out
+    from repro.store.backends import FileStore, open_store
+
+    store = open_store(out)
+    if isinstance(store, FileStore):
+        return store.root
+    ap.error(f"--out {out!r}: the ex-situ/parallel writers emit local files "
+             "(rank processes share one seekable file); use a plain path or "
+             "a file:// URL")
+
+
+def _inspect_container(path: str, verify: bool = True, store=None,
+                       label: str | None = None) -> bool:
+    """Print a CZ container's self-description; returns CRC verdict.
+    ``store`` reads the container from a byte store (``path`` is then a
+    store key); ``label`` overrides the printed heading."""
+    d = container.describe(path, verify=verify, store=store)
+    magic = container.MAGIC_V1 if d["container"] == "CZ1" else container.MAGIC
+    print(f"{label or path}")
     print(f"  magic        {magic!r}  (container "
-          f"{'CZ1 legacy' if magic == container.MAGIC_V1 else 'CZ2'}, "
-          f"chunk format {header.get('format', 1)})")
-    print(f"  scheme       {header.get('scheme', header['spec']['scheme'])}  "
-          f"params {header.get('scheme_params', {})}")
-    print(f"  dtype        {header.get('dtype', header['spec'].get('dtype', 'float32'))}")
-    print(f"  field_shape  {header.get('field_shape', '(block batch)')}  "
-          f"nblocks {header.get('nblocks')}  block_size {header['spec']['block_size']}")
-    if header.get("raw_bytes"):
-        print(f"  bytes        {total} compressed / {header['raw_bytes']} raw "
-              f"(CR {header['raw_bytes']/max(1, total):.2f}x)")
-    crcs = header.get("chunk_crc32", [None] * len(sizes))
+          f"{'CZ1 legacy' if d['container'] == 'CZ1' else 'CZ2'}, "
+          f"chunk format {d['format']})")
+    print(f"  scheme       {d['scheme']}  params {d['scheme_params']}")
+    print(f"  dtype        {d['dtype']}")
+    shape = d["field_shape"] if d["field_shape"] is not None else "(block batch)"
+    print(f"  field_shape  {shape}  "
+          f"nblocks {d['nblocks']}  block_size {d['block_size']}")
+    if d["raw_bytes"]:
+        print(f"  bytes        {d['compressed_bytes']} compressed / "
+              f"{d['raw_bytes']} raw "
+              f"(CR {d['raw_bytes']/max(1, d['compressed_bytes']):.2f}x)")
     ok = True
     print(f"  {'chunk':>5} {'blocks':>7} {'bytes':>10}  crc32")
-    with open(path, "rb") as f:
-        f.seek(data_start)
-        for i, (sz, nb, crc) in enumerate(zip(sizes, nblks, crcs)):
-            buf = f.read(sz)
-            if crc is None:
-                verdict = "-"
-            elif not verify:
-                verdict = f"{crc:08x}"
-            else:
-                good = (zlib.crc32(buf) & 0xFFFFFFFF) == crc
-                ok &= good
-                verdict = f"{crc:08x} {'ok' if good else 'MISMATCH'}"
-            print(f"  {i:>5} {nb:>7} {sz:>10}  {verdict}")
+    for row in d["chunks"]:
+        crc = row["crc32"]
+        if crc is None:
+            verdict = "-"
+        elif not verify:
+            verdict = f"{crc:08x}"
+        else:
+            good = row["crc_ok"]
+            ok &= good
+            verdict = f"{crc:08x} {'ok' if good else 'MISMATCH'}"
+        print(f"  {row['index']:>5} {row['blocks']:>7} {row['bytes']:>10}  {verdict}")
     print(f"  CRC verify   {'ok' if ok else 'FAILED'}")
     return ok
 
@@ -93,7 +115,9 @@ def _inspect_dataset(root: str, verify: bool) -> bool:
             print(f"  {q}: shape {list(ds.shape(q))} dtype {ds.dtype(q)} "
                   f"timesteps {ds.timesteps(q)}")
             for ts in ds.timestep_info(q):
-                ok &= _inspect_container(os.path.join(root, ts["file"]), verify)
+                ok &= _inspect_container(
+                    ts["file"], verify, store=ds.store,
+                    label=f"{root.rstrip('/')}/{ts['file']}")
     return ok
 
 
@@ -130,7 +154,7 @@ def _inspect_json(path: str, verify: bool) -> int:
     (``CZDataset.describe`` for ``/v1/manifest``, ``container.describe`` for
     the per-member chunk tables), so external tooling and the server can't
     drift apart."""
-    if os.path.isdir(path):
+    if _is_dataset_root(path):
         from repro.store import CZDataset
 
         with CZDataset(path) as ds:
@@ -138,7 +162,7 @@ def _inspect_json(path: str, verify: bool) -> int:
             out["root"] = path
             out["members"] = {
                 ts["file"]: container.describe(
-                    os.path.join(path, ts["file"]), verify=verify)
+                    ts["file"], verify=verify, store=ds.store)
                 for q in ds.quantities for ts in ds.timestep_info(q)}
     else:
         out = container.describe(path, verify=verify)
@@ -152,22 +176,23 @@ def _inspect_json(path: str, verify: bool) -> int:
 
 def inspect_main(argv) -> int:
     ap = argparse.ArgumentParser(prog="cz-compress inspect")
-    ap.add_argument("path", help="a .cz container or a CZDataset directory")
+    ap.add_argument("path", help="a .cz container, a CZDataset directory, or "
+                    "a store URL (file://, mem://, any registered scheme)")
     ap.add_argument("--no-verify", action="store_true",
                     help="print CRCs without re-reading chunk data")
     ap.add_argument("--stats", action="store_true",
-                    help="per-member CR/PSNR table for a dataset directory")
+                    help="per-member CR/PSNR table for a dataset root")
     ap.add_argument("--json", action="store_true",
                     help="machine-readable output: manifest + member/chunk "
                     "tables as one JSON document on stdout")
     args = ap.parse_args(argv)
     if args.stats:
-        if not os.path.isdir(args.path):
-            ap.error("--stats needs a CZDataset directory")
+        if not _is_dataset_root(args.path):
+            ap.error("--stats needs a CZDataset directory or store URL")
         return _stats_table(args.path)
     if args.json:
         return _inspect_json(args.path, not args.no_verify)
-    if os.path.isdir(args.path):
+    if _is_dataset_root(args.path):
         ok = _inspect_dataset(args.path, not args.no_verify)
     else:
         ok = _inspect_container(args.path, not args.no_verify)
@@ -181,13 +206,14 @@ def gc_main(argv) -> int:
                     "from the manifest, e.g. after a torn append or an "
                     "aborted rank merge).  Members pending in rank sidecars "
                     "are never touched.")
-    ap.add_argument("root", help="CZDataset directory")
+    ap.add_argument("root", help="CZDataset directory or store URL "
+                    "(file://, mem://)")
     ap.add_argument("--dry-run", action="store_true",
                     help="list orphans without deleting")
     args = ap.parse_args(argv)
-    from repro.store import CZDataset, MANIFEST_NAME
+    from repro.store import CZDataset, MANIFEST_NAME, open_store
 
-    if not os.path.exists(os.path.join(args.root, MANIFEST_NAME)):
+    if not open_store(args.root).exists(MANIFEST_NAME):
         print(f"error: no {MANIFEST_NAME} in {args.root}", file=sys.stderr)
         return 1
     with CZDataset(args.root, "r" if args.dry_run else "a") as ds:
@@ -229,11 +255,13 @@ def parallel_main(argv) -> int:
                     help=f"stage-1 routing, one of {DEVICES} (jax = the "
                     "jit'd Pallas kernel wrappers)")
     ap.add_argument("--buffer-bytes", type=int, default=1 << 20)
-    ap.add_argument("--out", default="artifacts/fields")
+    ap.add_argument("--out", default="artifacts/fields",
+                    help="output directory (plain path or file:// URL)")
     ap.add_argument("--check-identical", action="store_true",
                     help="also write serially and verify the shared file is "
                     "bit-identical (the engine's core guarantee)")
     args = ap.parse_args(argv)
+    args.out = _local_out_dir(ap, args.out)
 
     spec = _validated_spec(ap, CompressionSpec(
         scheme=args.scheme, wavelet=args.wavelet, eps=args.eps,
@@ -315,10 +343,12 @@ def main(argv=None):
                     "jit'd Pallas kernel wrappers).  With --decompress, "
                     "overrides the routing recorded in the container "
                     "(default: decode as recorded)")
-    ap.add_argument("--out", default="artifacts/fields")
+    ap.add_argument("--out", default="artifacts/fields",
+                    help="output directory (plain path or file:// URL)")
     ap.add_argument("--decompress", default="")
     ap.add_argument("--verify-against", default="")
     args = ap.parse_args(argv)
+    args.out = _local_out_dir(ap, args.out)
     if args.device is not None and args.device not in DEVICES:
         ap.error(f"unknown device {args.device!r}; one of {DEVICES}")
 

@@ -408,7 +408,8 @@ def main(argv=None) -> int:
         prog="cz-compress serve",
         description="HTTP region-query service over a CZDataset: "
                     "/v1/region, /v1/manifest, /healthz, /metrics.")
-    ap.add_argument("dataset", help="CZDataset directory")
+    ap.add_argument("dataset", help="CZDataset directory or store URL "
+                    "(file://, mem://, any registered backend)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8423,
                     help="0 picks an ephemeral port (printed on start)")

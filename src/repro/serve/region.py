@@ -76,8 +76,10 @@ class FieldRegionServer:
     Parameters
     ----------
     dataset:
-        A :class:`repro.store.CZDataset` **or** a dataset path.  A path is
-        opened — and therefore closed — by this server; a dataset object is
+        A :class:`repro.store.CZDataset` **or** a dataset root — a local
+        path or a store URL (``file://``, ``mem://``, any registered
+        backend); the serve tier is backend-agnostic.  A root is opened —
+        and therefore closed — by this server; a dataset object is
         borrowed, and :meth:`close` leaves it untouched (the caller opened
         it, the caller closes it).
     cache_bytes:

@@ -3,15 +3,19 @@
 A petascale run is a *dataset* — many quantities x many timesteps — not a
 pile of loose files.  :class:`CZDataset` makes the paper's per-quantity,
 per-snapshot output layout first-class (Zarr-style manifest-driven store;
-WaveRange-style per-field, per-snapshot records):
+WaveRange-style per-field, per-snapshot records), and since PR 6 it lives
+on a pluggable byte store (:mod:`repro.store.backends`): the same dataset
+opens from a local directory (``file://`` or a plain path), from process
+memory (``mem://``), or from an object-store-style backend (``range://``)
+that only speaks whole-object put + byte-range get.
 
-On-disk layout
---------------
+Store layout (keys are relative POSIX paths, shown here on a FileStore)
+-----------------------------------------------------------------------
 
 ::
 
     dataset/
-      manifest.json            # the ONLY mutable file; atomic tmp+rename
+      manifest.json            # the ONLY mutable object; atomic put_atomic
       p/
         t000000.cz             # CZ2 container: quantity "p", timestep 0
         t000001.cz
@@ -34,25 +38,65 @@ On-disk layout
                               "bytes": ..., "raw_bytes": ...}, ...]}}}
 
   A timestep exists iff the manifest references it; members are written
-  first and the manifest is replaced atomically, so a crash mid-append
-  leaves at most orphaned member files, never a torn dataset.
+  first and the manifest is replaced through ``Store.put_atomic``, so a
+  crash mid-append leaves at most orphaned member objects, never a torn
+  dataset.
 * **Append mode** (``mode="a"``): an in-situ simulation opens the dataset
   once and appends timesteps as they are produced; chunk encoding for all
   quantities of a snapshot runs on one shared thread pool
   (:class:`ShardWriter` — the paper's per-thread writers) with a single
-  ordered drain per file, byte-identical to a serial write.
+  ordered drain per member, byte-identical to a serial write on every
+  backend.
 * **Region reads**: ``read_box(quantity, t, lo, hi)`` decodes only the
   chunks covering the sub-box through per-member LRU chunk caches
-  (``FieldReader``) — never the whole field.
+  (``FieldReader``), fetched as *byte ranges* from the store — never the
+  whole member, never the whole field.
 * **Multi-writer runs** (``repro.cluster.multiwriter``): per-rank
   ``manifest.rank{r}.json`` sidecars commit independently during in-situ
   append and are folded into ``manifest.json`` by one atomic merge;
   ``CZDataset.gc()`` reclaims orphans from torn appends or aborted merges
-  without ever touching sidecar-referenced (still pending) members.
-"""
-from .dataset import CZDataset  # noqa: F401
-from .manifest import MANIFEST_NAME, ManifestError  # noqa: F401
-from .writer import DtypeCoercionWarning, ShardWriter  # noqa: F401
+  (``Store.list``-driven, so gc works on every backend) without ever
+  touching sidecar-referenced (still pending) members.
 
-__all__ = ["CZDataset", "ShardWriter", "DtypeCoercionWarning",
-           "ManifestError", "MANIFEST_NAME"]
+This module resolves its exports lazily (PEP 562): ``repro.core.container``
+imports :mod:`repro.store.backends` for the byte-store protocol, and
+:mod:`repro.store.dataset` imports the container — eager re-exports here
+would close that loop.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "CZDataset": ".dataset",
+    "ShardWriter": ".writer",
+    "DtypeCoercionWarning": ".writer",
+    "ManifestError": ".manifest",
+    "MANIFEST_NAME": ".manifest",
+    "Store": ".backends",
+    "StoreKeyError": ".backends",
+    "FileStore": ".backends",
+    "MemoryStore": ".backends",
+    "RangeStore": ".backends",
+    "FlakyStore": ".backends",
+    "InjectedFault": ".backends",
+    "open_store": ".backends",
+    "register_store_scheme": ".backends",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(module, __name__), name)
+    globals()[name] = value  # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,79 @@
+"""``repro.store.backends`` — pluggable byte stores under CZDataset.
+
+Zarr names the design goal: a "pluggable storage subsystem with support for
+file systems, key-value databases and cloud object stores".  Everything
+above this package (the CZ2 container reader, CZDataset, the serve tier)
+talks to a :class:`Store` — *what* is stored (chunk streams + footers) is
+decoupled from *where* it lives.
+
+Built-in backends:
+
+========== ===================== =========================================
+URL scheme class                 semantics
+========== ===================== =========================================
+``file://`` :class:`FileStore`   local directory; bit-compatible with
+                                 pre-backend datasets on disk (plain paths
+                                 resolve here)
+``mem://``  :class:`MemoryStore` process-local dict; named URLs share one
+                                 instance per process (tests, ephemeral
+                                 in-situ runs)
+``range://`` :class:`RangeStore` object-store semantics: whole-object put,
+                                 byte-range get, request counters — keeps
+                                 the read path honest
+========== ===================== =========================================
+
+Third-party backends subclass :class:`Store` and register a URL scheme with
+:func:`register_store_scheme`; every ``CZDataset(root)``, CLI entry point,
+and serve tier then accepts their URLs.
+"""
+from __future__ import annotations
+
+import os
+
+from .base import Store, StoreKeyError, check_key  # noqa: F401
+from .file import FileStore  # noqa: F401
+from .flaky import FlakyStore, InjectedFault  # noqa: F401
+from .memory import MemoryStore  # noqa: F401
+from .object import RangeStore  # noqa: F401
+
+__all__ = ["Store", "StoreKeyError", "check_key", "FileStore", "MemoryStore",
+           "RangeStore", "FlakyStore", "InjectedFault", "open_store",
+           "register_store_scheme", "STORE_SCHEMES"]
+
+#: URL scheme -> factory taking the part after ``scheme://``.
+STORE_SCHEMES: dict[str, type | object] = {
+    "file": FileStore.from_url,
+    "mem": MemoryStore.from_url,
+    "range": RangeStore.from_url,
+}
+
+
+def register_store_scheme(scheme: str, factory) -> None:
+    """Register a third-party store: ``factory(rest)`` gets the URL part
+    after ``{scheme}://`` and returns a :class:`Store`."""
+    if not scheme or "://" in scheme:
+        raise ValueError(f"invalid store scheme {scheme!r}")
+    STORE_SCHEMES[str(scheme)] = factory
+
+
+def open_store(root) -> Store:
+    """Resolve a dataset root to a :class:`Store`.
+
+    ``root`` is a :class:`Store` (returned as-is), a URL
+    (``file:///data/run42``, ``mem://myds``, any registered scheme), or a
+    plain local path (the historical form — resolves to a
+    :class:`FileStore`).
+    """
+    if isinstance(root, Store):
+        return root
+    root = os.fspath(root)
+    if "://" in root:
+        scheme, rest = root.split("://", 1)
+        try:
+            factory = STORE_SCHEMES[scheme]
+        except KeyError:
+            raise ValueError(
+                f"unknown store scheme {scheme!r} in {root!r} "
+                f"(registered: {', '.join(sorted(STORE_SCHEMES))})") from None
+        return factory(rest)
+    return FileStore(root)

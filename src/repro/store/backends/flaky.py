@@ -1,0 +1,81 @@
+"""FlakyStore: fault-injection wrapper for read-path resilience tests.
+
+Wraps any :class:`Store` and fails the Nth ``get`` (and every ``fail_every``
+afterwards, if configured) with an injected :class:`IOError`.  Everything
+else delegates untouched, so a dataset written through the inner store can
+be read through a flaky view of it — proving that a mid-``read_box`` fetch
+failure surfaces as a clean error and that an immediate retry succeeds
+against intact caches.
+"""
+from __future__ import annotations
+
+import threading
+
+from .base import Store
+
+__all__ = ["FlakyStore", "InjectedFault"]
+
+
+class InjectedFault(IOError):
+    """The configured fault, raised by :class:`FlakyStore`."""
+
+
+class FlakyStore(Store):
+    """Delegating store that raises on the ``fail_on_get``-th get call.
+
+    ``fail_on_get`` counts 1-based across the wrapper's lifetime and may be
+    reassigned between operations (``flaky.fail_on_get = flaky.gets + 1``
+    arms the *next* get).  ``fail_every`` repeats the failure periodically
+    after the first; ``None`` (default) fails exactly once.
+    """
+
+    def __init__(self, inner: Store, fail_on_get: int | None = None,
+                 fail_every: int | None = None):
+        super().__init__()
+        self.inner = inner
+        self.fail_on_get = fail_on_get
+        self.fail_every = fail_every
+        self.gets = 0
+        self.faults = 0
+        self._count_guard = threading.Lock()
+
+    def _maybe_fail(self) -> None:
+        with self._count_guard:
+            self.gets += 1
+            n, first = self.gets, self.fail_on_get
+            if first is None or n < first:
+                return
+            if n == first or (self.fail_every
+                              and (n - first) % self.fail_every == 0):
+                self.faults += 1
+                raise InjectedFault(
+                    f"injected fault on get #{n} (fail_on_get={first})")
+
+    def get(self, key, byte_range=None):
+        self._maybe_fail()
+        return self.inner.get(key, byte_range)
+
+    def put(self, key, data):
+        self.inner.put(key, data)
+
+    def put_atomic(self, key, data):
+        self.inner.put_atomic(key, data)
+
+    def list(self, prefix=""):
+        return self.inner.list(prefix)
+
+    def delete(self, key):
+        self.inner.delete(key)
+
+    def exists(self, key):
+        return self.inner.exists(key)
+
+    def open_write(self, key):
+        return self.inner.open_write(key)
+
+    def lock(self, name):
+        return self.inner.lock(name)
+
+    @property
+    def url(self) -> str:
+        return f"flaky+{self.inner.url}"

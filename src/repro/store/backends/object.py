@@ -1,0 +1,77 @@
+"""RangeStore: an object-store-style backend with S3 access semantics.
+
+The test double that keeps the read path honest.  Like a cloud object
+store, it permits exactly two data operations:
+
+* **whole-object put** — objects are immutable blobs, there is no seek,
+  no append, no rename.  ``put_atomic`` *is* ``put`` (a single PUT is
+  atomic), and the CZ2 writer goes through the buffering ``open_write``
+  because you cannot patch a footer pointer in place;
+* **byte-range get** — ``get(key, byte_range=(off, end))``, the S3
+  ``Range: bytes=off-`` request.
+
+Every request is counted (``stats()``), so tests and benchmarks can assert
+that a region query fetched *ranges of* a member, not the member — the
+access pattern error-bounded compressors are judged on.  An optional
+``latency`` models per-request round-trip cost so ``bench_backends`` can
+show how chunk caching amortizes a remote store.
+"""
+from __future__ import annotations
+
+import time
+
+from .memory import MemoryStore
+
+__all__ = ["RangeStore"]
+
+
+class RangeStore(MemoryStore):
+    """Object-store semantics over in-memory blobs, with request counters."""
+
+    scheme = "range"
+
+    #: distinct ``range://`` namespace (MemoryStore's registry is per-class)
+    _named: dict[str, "RangeStore"] = {}
+
+    def __init__(self, name: str | None = None, latency: float = 0.0):
+        super().__init__(name)
+        self.latency = float(latency)
+        self.get_requests = 0
+        self.range_requests = 0
+        self.put_requests = 0
+        self.bytes_fetched = 0
+        self.bytes_put = 0
+
+    def _request(self) -> None:
+        if self.latency:
+            time.sleep(self.latency)
+
+    def get(self, key, byte_range=None):
+        self._request()
+        data = super().get(key, byte_range)
+        with self._guard:
+            self.get_requests += 1
+            if byte_range is not None:
+                self.range_requests += 1
+            self.bytes_fetched += len(data)
+        return data
+
+    def put(self, key, data):
+        self._request()
+        super().put(key, data)
+        with self._guard:
+            self.put_requests += 1
+            self.bytes_put += len(data)
+
+    def stats(self) -> dict:
+        """Request/traffic counters since construction."""
+        with self._guard:
+            return {
+                "get_requests": self.get_requests,
+                "range_requests": self.range_requests,
+                "put_requests": self.put_requests,
+                "bytes_fetched": self.bytes_fetched,
+                "bytes_put": self.bytes_put,
+                "objects": len(self._objects),
+                "bytes_stored": sum(map(len, self._objects.values())),
+            }

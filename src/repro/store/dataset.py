@@ -1,21 +1,26 @@
-"""CZDataset: a directory of per-quantity/per-timestep CZ2 members.
+"""CZDataset: per-quantity/per-timestep CZ2 members over a byte store.
 
-See :mod:`repro.store` for the on-disk layout.  One object serves both ends
+See :mod:`repro.store` for the store layout.  One object serves both ends
 of the paper's workflow:
 
 * **append mode** — an in-situ simulation opens the dataset once and calls
   :meth:`CZDataset.append` as snapshots are produced; every commit writes the
-  member files first and then atomically patches the manifest, so readers
+  member objects first and then atomically replaces the manifest, so readers
   never observe a half-written timestep.
 * **random access** — :meth:`CZDataset.read_box` decodes only the chunks
   covering the requested sub-box through a pool of cached
   :class:`~repro.core.container.FieldReader` objects (each with its own LRU
-  chunk cache); the full field is never inflated for a region query.
+  chunk cache); chunks are fetched from the store as byte ranges, and the
+  full field is never inflated for a region query.
+
+The backing store is pluggable (:mod:`repro.store.backends`): ``root`` is a
+local path (the historical form), a store URL (``file://``, ``mem://``,
+``range://``, anything registered), or a :class:`~repro.store.backends.Store`
+instance.
 """
 from __future__ import annotations
 
 import collections
-import os
 import threading
 
 import numpy as np
@@ -24,6 +29,7 @@ from repro.core import container, metrics
 from repro.core.container import FieldReader
 from repro.core.pipeline import CompressionSpec
 
+from .backends import Store, open_store
 from .manifest import (
     MANIFEST_NAME,
     QUANTITY_RE,
@@ -52,12 +58,14 @@ def _member_stats(field: np.ndarray, dec: np.ndarray) -> dict:
 
 
 class CZDataset:
-    """Sharded multi-quantity dataset store over CZ2 member files.
+    """Sharded multi-quantity dataset store over CZ2 member objects.
 
     Parameters
     ----------
     root:
-        Dataset directory.
+        Dataset location: a local directory path, a store URL
+        (``file:///data/run42``, ``mem://scratch``, ``range://sim``), or a
+        :class:`~repro.store.backends.Store` instance.
     mode:
         ``"r"`` (read-only, manifest must exist) or ``"a"`` (append; the
         dataset is created on first use if ``root`` holds no manifest).
@@ -75,13 +83,14 @@ class CZDataset:
         ``cz-compress inspect --stats``.  Costs one decode per append.
     """
 
-    def __init__(self, root: str, mode: str = "r",
+    def __init__(self, root, mode: str = "r",
                  spec: CompressionSpec | None = None, workers: int = 1,
                  cache_readers: int = 8, cache_chunks: int = 8,
                  stats: bool = False):
         if mode not in ("r", "a"):
             raise ValueError(f"mode must be 'r' or 'a', got {mode!r}")
-        self.root = str(root)
+        self.store = open_store(root)
+        self.root = (self.store.url if isinstance(root, Store) else str(root))
         self.mode = mode
         self._stats = bool(stats)
         self._lock = threading.RLock()
@@ -93,14 +102,12 @@ class CZDataset:
         self._retired_hits = 0
 
         try:
-            self._m = read_manifest(self.root)
+            self._m = read_manifest(self.store)
         except ManifestError:
-            if mode != "a" or os.path.exists(
-                    os.path.join(self.root, MANIFEST_NAME)):
+            if mode != "a" or self.store.exists(MANIFEST_NAME):
                 raise  # corrupt, or missing in read-only mode: surface it
-            os.makedirs(self.root, exist_ok=True)
             self._m = new_manifest((spec or CompressionSpec()).validate().to_json())
-            write_manifest(self.root, self._m)
+            write_manifest(self.store, self._m)
         self.spec = CompressionSpec.from_json(self._m["spec"])
         self._writer = (ShardWriter(self.spec, workers=workers)
                         if mode == "a" else None)
@@ -172,7 +179,7 @@ class CZDataset:
     def refresh(self) -> None:
         """Re-read the manifest (pick up commits by a concurrent appender)."""
         with self._lock:
-            self._m = read_manifest(self.root)
+            self._m = read_manifest(self.store)
 
     # -- append mode -------------------------------------------------------
 
@@ -180,9 +187,9 @@ class CZDataset:
                time: float | None = None) -> int:
         """Commit one timestep of one or more quantities; returns its index.
 
-        Member files are written first (concurrently chunk-encoded through
-        the shared pool), then the manifest is patched atomically — a crash
-        mid-append leaves at most orphaned member files, never a timestep
+        Member objects are written first (concurrently chunk-encoded through
+        the shared pool), then the manifest is replaced atomically — a crash
+        mid-append leaves at most orphaned member objects, never a timestep
         that is half-visible.
         """
         if self._writer is None:
@@ -196,7 +203,7 @@ class CZDataset:
             # timestep indices.  (Appending *concurrently* with a merge from
             # another process remains a documented single-coordinator
             # assumption; rank-parallel writers go through RankWriter.)
-            self._m = read_manifest(self.root)
+            self._m = read_manifest(self.store)
             t = int(self._m["next_t"])
             staged = []
             for q, field in fields.items():
@@ -215,18 +222,18 @@ class CZDataset:
                         f"quantity {q!r} is {ent['dtype']}, append got "
                         f"{member_spec.np_dtype} — the quantity-level dtype "
                         "tag is fixed at first append")
-                rel = os.path.join(q, f"t{t:06d}.cz")
-                os.makedirs(os.path.join(self.root, q), exist_ok=True)
-                full = os.path.join(self.root, rel)
+                rel = f"{q}/t{t:06d}.cz"
                 nbytes = self._writer.write(
-                    full, field, spec=member_spec,
-                    extra_header={"quantity": q, "t": t, "time": time})
+                    rel, field, spec=member_spec,
+                    extra_header={"quantity": q, "t": t, "time": time},
+                    store=self.store)
                 rec = {"t": t, "time": time, "file": rel, "bytes": int(nbytes),
                        "raw_bytes": int(field.nbytes)}
                 if self._stats:
-                    rec.update(_member_stats(field, container.read_field(full)))
+                    rec.update(_member_stats(
+                        field, container.read_field(rel, store=self.store)))
                 staged.append((q, field, member_spec, rec))
-            # all members on disk -> patch the manifest in one atomic commit
+            # all members stored -> patch the manifest in one atomic commit
             for q, field, member_spec, rec in staged:
                 ent = self._m["quantities"].get(q)
                 if ent is None:
@@ -238,14 +245,20 @@ class CZDataset:
                 ent["timesteps"].append(rec)
             self._m["next_t"] = t + 1
             self._m["version"] = int(self._m["version"]) + 1
-            write_manifest(self.root, self._m)
+            write_manifest(self.store, self._m)
             return t
 
     # -- random access -----------------------------------------------------
 
     def reader(self, quantity: str, t: int) -> FieldReader:
         """Cached (LRU) FieldReader for one member — the decode cache shared
-        by every region query against that quantity/timestep."""
+        by every region query against that quantity/timestep.
+
+        Eviction folds the reader's counters into the dataset totals and
+        drops the reference; it does *not* close the reader (store-backed
+        readers hold no OS resources), so an evicted reader a caller still
+        holds keeps serving from its own cache.
+        """
         key = (quantity, int(t))
         with self._lock:
             r = self._readers.get(key)
@@ -253,14 +266,13 @@ class CZDataset:
                 self._readers.move_to_end(key)
                 return r
             ts = self._timestep(quantity, int(t))
-            r = FieldReader(os.path.join(self.root, ts["file"]),
-                            cache_chunks=self._cache_chunks)
+            r = FieldReader(ts["file"], cache_chunks=self._cache_chunks,
+                            store=self.store)
             self._readers[key] = r
             while len(self._readers) > self._cache_readers:
                 _, old = self._readers.popitem(last=False)
                 self._retired_decoded += old.chunks_decoded
                 self._retired_hits += old.cache_hits
-                old.close()
             return r
 
     def read_box(self, quantity: str, t: int, lo, hi) -> np.ndarray:
@@ -294,49 +306,41 @@ class CZDataset:
     # -- retention ---------------------------------------------------------
 
     def gc(self, dry_run: bool = False) -> list[str]:
-        """Delete orphaned files: members on disk but absent from the
+        """Delete orphaned objects: members in the store but absent from the
         manifest (a torn append or an aborted rank merge) and stale
-        ``.tmp``/``.part`` leftovers.  Returns the orphans' relative paths.
+        ``.tmp``/``.part`` leftovers.  Returns the orphans' keys, sorted.
 
-        Members referenced by an unmerged rank sidecar
+        Orphans are enumerated through ``Store.list`` — the same sweep on
+        every backend.  Members referenced by an unmerged rank sidecar
         (``manifest.rank{r}.json``) are *live* — they are committed data
         awaiting :func:`repro.cluster.multiwriter.merge_manifests` — and are
         never collected.  Run gc quiesced (no concurrent appenders).
         ``dry_run=True`` only lists; actual deletion needs ``mode='a'``.
         """
         with self._lock:
-            self._m = read_manifest(self.root)
-            live = {os.path.normpath(ts["file"])
+            self._m = read_manifest(self.store)
+            live = {ts["file"]
                     for ent in self._m["quantities"].values()
                     for ts in ent["timesteps"]}
-            for rank in list_rank_manifests(self.root):
-                side = read_rank_manifest(self.root, rank)
-                live |= {os.path.normpath(e["file"]) for e in side["entries"]}
+            for rank in list_rank_manifests(self.store):
+                side = read_rank_manifest(self.store, rank)
+                live |= {e["file"] for e in side["entries"]}
             orphans = []
-            for dirpath, _dirnames, filenames in os.walk(self.root):
-                for fn in filenames:
-                    rel = os.path.relpath(os.path.join(dirpath, fn), self.root)
-                    if rel == MANIFEST_NAME or RANK_MANIFEST_RE.match(rel):
-                        continue
-                    if fn.endswith((".tmp", ".part")):
-                        orphans.append(rel)
-                    elif fn.endswith(".cz") and os.path.normpath(rel) not in live:
-                        orphans.append(rel)
+            for key in self.store.list(""):
+                if key == MANIFEST_NAME or RANK_MANIFEST_RE.match(key):
+                    continue
+                if key.endswith((".tmp", ".part")):
+                    orphans.append(key)
+                elif key.endswith(".cz") and key not in live:
+                    orphans.append(key)
             orphans.sort()
             if dry_run or not orphans:
                 return orphans
             if self.mode != "a":
                 raise IOError("dataset opened read-only; gc deletion needs "
                               "mode='a' (or use dry_run=True)")
-            for rel in orphans:
-                os.unlink(os.path.join(self.root, rel))
-            for dirpath, _dirnames, _filenames in os.walk(self.root,
-                                                          topdown=False):
-                if dirpath != self.root:
-                    try:
-                        os.rmdir(dirpath)  # prune now-empty quantity dirs
-                    except OSError:
-                        pass
+            for key in orphans:
+                self.store.delete(key)  # FileStore prunes emptied quantity dirs
             return orphans
 
     # -- lifecycle ---------------------------------------------------------

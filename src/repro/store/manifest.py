@@ -1,24 +1,31 @@
-"""Dataset manifest: one JSON file, committed atomically.
+"""Dataset manifest: one JSON object, committed atomically.
 
-The manifest is the *only* mutable object in a CZDataset.  Member files are
-immutable once written; a timestep exists iff the manifest references it, so
-the commit protocol is write-members -> write ``manifest.json.tmp`` -> fsync
--> ``os.replace``.  A crash between member write and manifest commit leaves
-orphaned member files but never a dataset that references missing or partial
+The manifest is the *only* mutable object in a CZDataset.  Member objects
+are immutable once written; a timestep exists iff the manifest references
+it, so the commit protocol is write-members -> ``Store.put_atomic`` of the
+manifest.  On a file backend that is the historical tmp + fsync + rename +
+directory-fsync sequence; on an object store a single PUT is already
+atomic.  A crash between member write and manifest commit leaves orphaned
+member objects but never a dataset that references missing or partial
 data.
+
+Every function here takes ``root`` as either a local path / store URL or a
+:class:`~repro.store.backends.Store` instance — one code path for every
+backend.
 
 Rank sidecars (``manifest.rank{r}.json``) extend the same protocol to
 multi-writer runs: each rank commits its own sidecar atomically, with no
-contention on ``manifest.json``, and a coordinator later folds them into the
-main manifest (``repro.cluster.multiwriter.merge_manifests``).  A sidecar
-entry is *live* — :meth:`CZDataset.gc` must not collect its member — until
-the merge commits it and deletes the sidecar.
+contention on ``manifest.json``, and a coordinator later folds them into
+the main manifest (``repro.cluster.multiwriter.merge_manifests``).  A
+sidecar entry is *live* — :meth:`CZDataset.gc` must not collect its member
+— until the merge commits it and deletes the sidecar.
 """
 from __future__ import annotations
 
 import json
-import os
 import re
+
+from .backends import Store, StoreKeyError, open_store
 
 __all__ = ["MANIFEST_NAME", "MANIFEST_FORMAT", "QUANTITY_RE", "ManifestError",
            "new_manifest", "read_manifest", "write_manifest",
@@ -28,8 +35,8 @@ __all__ = ["MANIFEST_NAME", "MANIFEST_FORMAT", "QUANTITY_RE", "ManifestError",
 MANIFEST_NAME = "manifest.json"
 MANIFEST_FORMAT = 1
 
-#: legal quantity names (also member subdirectory names); the lookahead
-#: rejects all-dot names ('.', '..') that would escape the dataset root
+#: legal quantity names (also member key prefixes); the lookahead rejects
+#: all-dot names ('.', '..') that would escape the dataset root
 QUANTITY_RE = re.compile(r"^(?!\.+$)[A-Za-z0-9_.\-]+$")
 
 RANK_MANIFEST_RE = re.compile(r"^manifest\.rank(\d+)\.json$")
@@ -37,6 +44,10 @@ RANK_MANIFEST_RE = re.compile(r"^manifest\.rank(\d+)\.json$")
 
 class ManifestError(IOError):
     """The dataset manifest is missing, unreadable, or structurally invalid."""
+
+
+def _store(root) -> Store:
+    return root if isinstance(root, Store) else open_store(root)
 
 
 def new_manifest(spec_json: dict) -> dict:
@@ -50,18 +61,17 @@ def new_manifest(spec_json: dict) -> dict:
     }
 
 
-def _check(m: dict, root: str) -> dict:
+def _check(m: dict, where: str) -> dict:
     if not isinstance(m, dict) or m.get("magic") != "CZDS":
         raise ManifestError(
-            f"{os.path.join(root, MANIFEST_NAME)} is not a CZDataset manifest "
-            "(bad magic)")
+            f"{where}/{MANIFEST_NAME} is not a CZDataset manifest (bad magic)")
     if int(m.get("format", 0)) > MANIFEST_FORMAT:
         raise ManifestError(
             f"manifest format {m['format']} is newer than supported "
-            f"({MANIFEST_FORMAT}) — upgrade repro to read {root}")
+            f"({MANIFEST_FORMAT}) — upgrade repro to read {where}")
     for key in ("version", "next_t", "spec", "quantities"):
         if key not in m:
-            raise ManifestError(f"manifest in {root} is missing {key!r}")
+            raise ManifestError(f"manifest in {where} is missing {key!r}")
     for q, ent in m["quantities"].items():
         for key in ("shape", "dtype", "timesteps"):
             if key not in ent:
@@ -70,48 +80,37 @@ def _check(m: dict, root: str) -> dict:
     return m
 
 
-def _load_json(path: str, what: str) -> dict:
+def _load_json(store: Store, key: str, what: str) -> dict:
+    data = store.get(key)  # StoreKeyError propagates to the caller
     try:
-        with open(path) as f:
-            return json.load(f)
-    except FileNotFoundError:
-        raise
+        return json.loads(data)
     except (json.JSONDecodeError, UnicodeDecodeError) as e:
-        raise ManifestError(f"corrupt {what} {path}: {e}") from None
+        raise ManifestError(f"corrupt {what} {store.url}/{key}: {e}") from None
 
 
-def read_manifest(root: str) -> dict:
-    path = os.path.join(root, MANIFEST_NAME)
+def read_manifest(root) -> dict:
+    store = _store(root)
     try:
-        m = _load_json(path, "manifest")
-    except FileNotFoundError:
-        raise ManifestError(f"no {MANIFEST_NAME} in {root} — not a CZDataset "
-                            "(or the first commit never completed)") from None
-    return _check(m, root)
+        m = _load_json(store, MANIFEST_NAME, "manifest")
+    except StoreKeyError:
+        raise ManifestError(
+            f"no {MANIFEST_NAME} in {store.url} — not a CZDataset "
+            "(or the first commit never completed)") from None
+    return _check(m, store.url)
 
 
-def _atomic_json(root: str, name: str, obj: dict) -> None:
-    """tmp write + fsync + rename + directory fsync — the commit primitive
+def _atomic_json(store: Store, name: str, obj: dict) -> None:
+    """``put_atomic`` of an indented-JSON object — the commit primitive
     shared by the main manifest and the per-rank sidecars."""
-    path = os.path.join(root, name)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(obj, f, indent=1)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
-    dfd = os.open(root, os.O_RDONLY)
-    try:
-        os.fsync(dfd)
-    finally:
-        os.close(dfd)
+    store.put_atomic(name, json.dumps(obj, indent=1).encode())
 
 
-def write_manifest(root: str, manifest: dict) -> None:
-    """Atomic commit: tmp write + fsync + rename over the old manifest, then
-    fsync the directory so the rename itself is durable.  (Member files are
-    fsynced by :class:`~repro.store.ShardWriter` before this is called.)"""
-    _atomic_json(root, MANIFEST_NAME, manifest)
+def write_manifest(root, manifest: dict) -> None:
+    """Atomic commit through ``Store.put_atomic`` (file backends: tmp write
+    + fsync + rename + directory fsync; object stores: one PUT).  Member
+    objects are made durable by :class:`~repro.store.ShardWriter` before
+    this is called."""
+    _atomic_json(_store(root), MANIFEST_NAME, manifest)
 
 
 # -- per-rank sidecars -------------------------------------------------------
@@ -120,15 +119,11 @@ def rank_manifest_name(rank: int) -> str:
     return f"manifest.rank{int(rank)}.json"
 
 
-def list_rank_manifests(root: str) -> list[int]:
+def list_rank_manifests(root) -> list[int]:
     """Ranks with a committed sidecar in ``root``, ascending."""
     ranks = []
-    try:
-        names = os.listdir(root)
-    except FileNotFoundError:
-        return ranks
-    for name in names:
-        m = RANK_MANIFEST_RE.match(name)
+    for key in _store(root).list("manifest.rank"):
+        m = RANK_MANIFEST_RE.match(key)
         if m:
             ranks.append(int(m.group(1)))
     return sorted(ranks)
@@ -139,23 +134,30 @@ def new_rank_manifest(rank: int) -> dict:
             "rank": int(rank), "entries": []}
 
 
-def read_rank_manifest(root: str, rank: int) -> dict:
-    path = os.path.join(root, rank_manifest_name(rank))
-    side = _load_json(path, "rank sidecar")  # FileNotFoundError propagates
+def read_rank_manifest(root, rank: int) -> dict:
+    store = _store(root)
+    name = rank_manifest_name(rank)
+    try:
+        side = _load_json(store, name, "rank sidecar")
+    except StoreKeyError:
+        # historical contract: a missing sidecar is FileNotFoundError, on
+        # every backend
+        raise FileNotFoundError(f"{store.url}/{name}") from None
     if not isinstance(side, dict) or side.get("magic") != "CZRK":
-        raise ManifestError(f"{path} is not a rank sidecar (bad magic)")
+        raise ManifestError(f"{name} in {store.url} is not a rank sidecar "
+                            "(bad magic)")
     if int(side.get("rank", -1)) != int(rank):
         raise ManifestError(
-            f"{path} claims rank {side.get('rank')}, expected {rank}")
+            f"{name} claims rank {side.get('rank')}, expected {rank}")
     for e in side.get("entries", []):
         for key in ("quantity", "t", "time", "file", "bytes", "raw_bytes",
                     "shape", "dtype"):
             if key not in e:
-                raise ManifestError(f"sidecar entry in {path} missing {key!r}")
+                raise ManifestError(f"sidecar entry in {name} missing {key!r}")
     return side
 
 
-def write_rank_manifest(root: str, side: dict) -> None:
+def write_rank_manifest(root, side: dict) -> None:
     """Atomic sidecar commit — a rank's private, contention-free analogue of
     :func:`write_manifest`."""
-    _atomic_json(root, rank_manifest_name(side["rank"]), side)
+    _atomic_json(_store(root), rank_manifest_name(side["rank"]), side)

@@ -69,12 +69,15 @@ class ShardWriter:
 
     def write(self, path: str, field: np.ndarray,
               extra_header: dict | None = None,
-              spec: CompressionSpec | None = None) -> int:
-        """Stream one field into a CZ2 file; returns bytes written.
+              spec: CompressionSpec | None = None, store=None) -> int:
+        """Stream one field into a CZ2 member; returns bytes written.
 
         ``spec`` lets a caller that already ran :meth:`spec_for` (e.g. for
         the manifest's dtype tag) pass it in instead of re-deriving it —
-        and re-emitting any coercion warning.  Members are fsynced: the
+        and re-emitting any coercion warning.  ``store`` routes the member
+        bytes through a :class:`~repro.store.backends.Store` (``path`` is
+        then a store key); ``None`` keeps the historical local-file path.
+        Members are fsynced (where the backend has an fd to sync): the
         dataset's atomic-manifest guarantee needs member data on stable
         storage *before* the manifest references it.
         """
@@ -84,7 +87,7 @@ class ShardWriter:
         return container.write_compressed(
             path, field, spec or self.spec_for(field),
             extra_header=extra_header, workers=self.workers,
-            executor=self._pool, fsync=True)
+            executor=self._pool, fsync=True, store=store)
 
     def close(self) -> None:
         if self._pool is not None:

@@ -290,20 +290,28 @@ def test_field_snapshotter_roundtrip(tmp_path):
 # ---------------------------------------------------------------------------
 
 def test_evicted_reader_still_serves(tmp_path):
-    """A FieldReader evicted (and closed) by the dataset's LRU while a
-    thread still holds it must transparently reopen, not crash mid-read."""
+    """A FieldReader evicted by the dataset's LRU while a thread still holds
+    it keeps serving: store-backed readers hold no OS file handle, so
+    eviction just folds counters and drops the dataset's reference.  Only an
+    *explicit* close() retires a reader — and that close is terminal."""
     root = os.path.join(tmp_path, "ds")
     with CZDataset(root, "a", spec=SPEC) as ds:
         for k in range(3):
             ds.append(_stepped(k))
     ds = CZDataset(root, cache_readers=1)
     held = ds.reader("p", 0)
-    ds.reader("p", 1)  # evicts + closes `held`
-    assert held._f.closed
+    ds.reader("p", 1)  # evicts `held` from the dataset's LRU
+    assert not held.closed
     box = held.read_box((0, 0, 0), (BS, BS, BS))
     np.testing.assert_array_equal(box, FIELDS["p"][:BS, :BS, :BS])
-    assert held.chunks_decoded == 1  # decoded through the reopened handle
-    ds.close()
+    assert held.chunks_decoded == 1  # served straight through the store
+    ds.close()  # closes the dataset's live readers...
+    assert held.closed is False  # ...but not the evicted one it let go of
+    held.close()
+    assert held.closed
+    held.close()  # idempotent
+    with pytest.raises(ValueError, match="closed"):
+        held.read_box((0, 0, 0), (BS, BS, BS))
 
 
 def test_append_dtype_unsupported_by_scheme_coerces(tmp_path):

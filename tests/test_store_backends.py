@@ -1,0 +1,379 @@
+"""Backend conformance: the Store protocol contract and CZDataset behavior
+over every built-in backend (file / memory / object-store), plus the
+fault-injection wrapper and the URL registry.
+
+Two layers:
+
+* **protocol contract** — put/get/ranged-get/list/delete/exists/put_atomic/
+  open_write/lock behave identically on every backend (parametrized over
+  all three);
+* **dataset conformance** — a CZDataset appended through any backend reads
+  back bit-exact, member objects are byte-identical *across* backends
+  (FileStore's streaming file writer and the buffered object-store sink
+  must produce the same CZ2 bytes), gc agrees everywhere, and the
+  object-store backend proves the read path really is byte-ranged.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CompressionSpec, container
+from repro.store import (
+    CZDataset,
+    FileStore,
+    FlakyStore,
+    InjectedFault,
+    MemoryStore,
+    RangeStore,
+    open_store,
+)
+from repro.store.backends import STORE_SCHEMES, Store, register_store_scheme
+
+from test_pipeline_api import smooth_field
+
+N = 32
+BS = 16
+# 16 KiB buffers -> one 16^3 float32 block per chunk: 8 chunks per member
+SPEC = CompressionSpec(scheme="raw", block_size=BS, buffer_bytes=1 << 14)
+
+FIELDS = {"p": smooth_field(N, seed=3), "rho": smooth_field(N, seed=4)}
+
+BACKENDS = ["file", "mem", "range"]
+
+
+def _make_store(kind: str, tmp_path) -> Store:
+    if kind == "file":
+        return FileStore(os.path.join(tmp_path, "ds"))
+    if kind == "mem":
+        return MemoryStore()
+    return RangeStore()
+
+
+@pytest.fixture(params=BACKENDS)
+def store(request, tmp_path):
+    return _make_store(request.param, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# protocol contract
+# ---------------------------------------------------------------------------
+
+def test_put_get_roundtrip_and_ranges(store):
+    store.put("a/b.bin", b"0123456789")
+    assert store.get("a/b.bin") == b"0123456789"
+    assert store.get("a/b.bin", (2, 5)) == b"234"
+    assert store.get("a/b.bin", (4, None)) == b"456789"
+    assert store.get("a/b.bin", (0, 0)) == b""
+    # a range past the end returns what exists (HTTP-range semantics)
+    assert store.get("a/b.bin", (8, 100)) == b"89"
+    store.put("a/b.bin", b"xy")  # overwrite replaces the whole object
+    assert store.get("a/b.bin") == b"xy"
+
+
+def test_missing_key_raises_storekeyerror(store):
+    from repro.store import StoreKeyError
+
+    for op in (lambda: store.get("nope"), lambda: store.get("nope", (0, 4)),
+               lambda: store.delete("nope")):
+        with pytest.raises(StoreKeyError) as ei:
+            op()
+        assert isinstance(ei.value, KeyError)
+        assert "nope" in str(ei.value)
+    assert not store.exists("nope")
+
+
+def test_list_prefix_sorted(store):
+    for k in ("q/t2.cz", "q/t0.cz", "p/t0.cz", "manifest.json"):
+        store.put(k, b"x")
+    assert store.list("") == ["manifest.json", "p/t0.cz", "q/t0.cz", "q/t2.cz"]
+    assert store.list("q/") == ["q/t0.cz", "q/t2.cz"]
+    assert store.list("manifest") == ["manifest.json"]
+    assert store.list("zzz") == []
+
+
+def test_delete_and_exists(store):
+    store.put("p/t0.cz", b"x")
+    assert store.exists("p/t0.cz")
+    store.delete("p/t0.cz")
+    assert not store.exists("p/t0.cz")
+    assert store.list("") == []
+
+
+def test_put_atomic_overwrites(store):
+    store.put_atomic("manifest.json", b'{"v": 1}')
+    store.put_atomic("manifest.json", b'{"v": 2}')
+    assert store.get("manifest.json") == b'{"v": 2}'
+    assert store.list("") == ["manifest.json"]  # no tmp residue
+
+
+def test_open_write_streams_and_commits(store):
+    with store.open_write("p/t0.cz") as f:
+        f.write(b"head")
+        f.write(b"body")
+        f.seek(0)
+        f.write(b"H")  # the CZ2 writer seeks back to patch its footer ptr
+    assert store.get("p/t0.cz") == b"Headbody"
+
+
+def test_open_write_exception_leaves_no_torn_object(store):
+    with pytest.raises(RuntimeError):
+        with store.open_write("p/t0.cz") as f:
+            f.write(b"partial")
+            raise RuntimeError("simulated encoder crash")
+    # FileStore necessarily has a partial file (it streams); the contract
+    # is that *buffered* backends never expose a torn object
+    if not isinstance(store, FileStore):
+        assert not store.exists("p/t0.cz")
+
+
+def test_bad_keys_rejected(store):
+    for bad in ("", "/abs", "a//b", "a/../b", ".", "..", "a\\b", None, 7):
+        with pytest.raises((ValueError, TypeError)):
+            store.put(bad, b"x")
+
+
+def test_lock_is_exclusive(store):
+    counter = {"v": 0}
+
+    def bump():
+        for _ in range(200):
+            with store.lock(".l"):
+                v = counter["v"]
+                counter["v"] = v + 1
+
+    threads = [threading.Thread(target=bump) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert counter["v"] == 800
+
+
+# ---------------------------------------------------------------------------
+# dataset conformance
+# ---------------------------------------------------------------------------
+
+def _fill(store) -> CZDataset:
+    ds = CZDataset(store, "a", spec=SPEC)
+    for k in range(2):
+        ds.append({q: f + np.float32(k) for q, f in FIELDS.items()},
+                  time=0.5 * k)
+    return ds
+
+
+def test_dataset_roundtrip_every_backend(store):
+    with _fill(store):
+        pass
+    with CZDataset(store) as ds:
+        assert ds.quantities == ["p", "rho"]
+        for q, f in FIELDS.items():
+            np.testing.assert_array_equal(ds.read_field(q, 0), f)
+            np.testing.assert_array_equal(
+                ds.read_box(q, 1, (3, 4, 5), (19, 20, 21)),
+                (f + np.float32(1))[3:19, 4:20, 5:21])
+
+
+def test_members_byte_identical_across_backends(tmp_path):
+    stores = [_make_store(kind, tmp_path) for kind in BACKENDS]
+    for st in stores:
+        with _fill(st):
+            pass
+    ref = stores[0]
+    keys = [k for k in ref.list("") if k.endswith(".cz")]
+    assert len(keys) == 4
+    for st in stores[1:]:
+        assert [k for k in st.list("") if k.endswith(".cz")] == keys
+        for k in keys:
+            assert st.get(k) == ref.get(k), f"{k} differs on {st.url}"
+
+
+def test_file_url_opens_plain_path_dataset(tmp_path):
+    """A dataset created with the historical plain-path constructor opens
+    unchanged through its file:// URL (and vice versa)."""
+    root = os.path.join(tmp_path, "ds")
+    with CZDataset(root, "a", spec=SPEC) as ds:
+        ds.append(FIELDS)
+    with CZDataset(f"file://{root}") as ds:
+        np.testing.assert_array_equal(ds.read_field("p", 0), FIELDS["p"])
+    # and the manifest on disk is where it always was
+    with open(os.path.join(root, "manifest.json")) as f:
+        assert json.load(f)["magic"] == "CZDS"
+
+
+def test_mem_url_shares_one_registry_instance(tmp_path):
+    with CZDataset("mem://conformance", "a", spec=SPEC) as w:
+        w.append(FIELDS)
+        with CZDataset("mem://conformance") as r:
+            np.testing.assert_array_equal(r.read_field("rho", 0),
+                                          FIELDS["rho"])
+        t = w.append(FIELDS)  # a second handle sees later commits too
+        with CZDataset("mem://conformance") as r:
+            assert r.timesteps("p") == [0, t]
+    MemoryStore.drop("conformance")
+
+
+def test_gc_identical_across_backends(tmp_path):
+    want = ["manifest.json.tmp", "p/t000099.cz", "rho/t000000.cz.rank0.part"]
+    for kind in BACKENDS:
+        st = _make_store(kind, tmp_path / kind)
+        with _fill(st):
+            pass
+        st.put("p/t000099.cz", b"orphan")              # torn append
+        st.put("rho/t000000.cz.rank0.part", b"part")   # stale partial
+        st.put("manifest.json.tmp", b"{}")             # stale commit tmp
+        with CZDataset(st) as ds:
+            assert ds.gc(dry_run=True) == want
+        with CZDataset(st, "a") as ds:
+            assert ds.gc() == want
+            assert ds.gc(dry_run=True) == []
+        for k in want:
+            assert not st.exists(k)
+
+
+def test_rangestore_reads_are_byte_ranged(tmp_path):
+    """The acceptance check on the whole refactor: a sub-box read over the
+    object-store backend fetches *byte ranges*, not whole members."""
+    st = RangeStore()
+    with _fill(st):
+        pass
+    stored = st.stats()["bytes_stored"]
+    before = st.stats()
+    with CZDataset(st, cache_chunks=2) as ds:
+        box = ds.read_box("p", 0, (0, 0, 0), (BS, BS, BS))  # 1 of 8 chunks
+    np.testing.assert_array_equal(box, FIELDS["p"][:BS, :BS, :BS])
+    delta_reqs = st.stats()["range_requests"] - before["range_requests"]
+    delta_bytes = st.stats()["bytes_fetched"] - before["bytes_fetched"]
+    assert delta_reqs >= 2            # footer fetch + >=1 chunk fetch
+    assert 0 < delta_bytes < stored / 4  # nowhere near a full-member read
+
+
+def test_rank_parallel_append_over_memory_store():
+    from repro.cluster.multiwriter import RankWriter, merge_manifests
+
+    st = MemoryStore.named("conformance_ranks")
+    try:
+        with CZDataset(st, "a", spec=SPEC):
+            pass
+        for rank in range(2):
+            with RankWriter(st, rank) as w:
+                w.append({"p": FIELDS["p"] + np.float32(rank)}, t=rank)
+        assert merge_manifests(st) == 2
+        with CZDataset(st) as ds:
+            assert ds.timesteps("p") == [0, 1]
+            np.testing.assert_array_equal(ds.read_field("p", 1),
+                                          FIELDS["p"] + np.float32(1))
+    finally:
+        MemoryStore.drop("conformance_ranks")
+
+
+def test_region_server_over_mem_url():
+    from repro.serve import FieldRegionServer
+
+    with CZDataset("mem://conformance_serve", "a", spec=SPEC) as w:
+        w.append(FIELDS)
+    try:
+        with FieldRegionServer("mem://conformance_serve") as srv:
+            reg = srv.query("p", 0, (1, 2, 3), (9, 10, 11))
+            np.testing.assert_array_equal(reg, FIELDS["p"][1:9, 2:10, 3:11])
+    finally:
+        MemoryStore.drop("conformance_serve")
+
+
+# ---------------------------------------------------------------------------
+# fault injection: mid-read failures surface cleanly, retry succeeds
+# ---------------------------------------------------------------------------
+
+def test_flaky_store_read_box_fails_clean_then_retries():
+    flaky = FlakyStore(MemoryStore())
+    with _fill(flaky):
+        pass
+    with CZDataset(flaky, cache_chunks=8) as ds:
+        warm = ds.read_box("p", 0, (0, 0, 0), (BS, BS, BS))  # caches chunk 0
+        flaky.fail_on_get = flaky.gets + 1  # arm: next get (a cold chunk)
+        with pytest.raises(InjectedFault):
+            ds.read_box("p", 0, (BS, 0, 0), (N, BS, BS))  # needs a cold chunk
+        assert flaky.faults == 1
+        assert isinstance(InjectedFault("x"), IOError)  # surfaces as IOError
+        # caches were not corrupted by the failed fetch: the warm box still
+        # serves without any store traffic, and the retry round-trips
+        gets = flaky.gets
+        np.testing.assert_array_equal(
+            ds.read_box("p", 0, (0, 0, 0), (BS, BS, BS)), warm)
+        assert flaky.gets == gets
+        np.testing.assert_array_equal(
+            ds.read_box("p", 0, (BS, 0, 0), (N, BS, BS)),
+            FIELDS["p"][BS:N, :BS, :BS])
+
+
+def test_flaky_store_periodic_faults_counted():
+    flaky = FlakyStore(MemoryStore(), fail_on_get=2, fail_every=2)
+    flaky.put("k", b"abc")
+    assert flaky.get("k") == b"abc"          # get #1
+    with pytest.raises(InjectedFault):
+        flaky.get("k")                       # get #2: first fault
+    assert flaky.get("k") == b"abc"          # get #3
+    with pytest.raises(InjectedFault):
+        flaky.get("k")                       # get #4: periodic fault
+    assert flaky.faults == 2
+
+
+# ---------------------------------------------------------------------------
+# URL registry
+# ---------------------------------------------------------------------------
+
+def test_open_store_url_parsing(tmp_path):
+    st = open_store(os.path.join(tmp_path, "plain"))
+    assert isinstance(st, FileStore)
+    st = open_store(f"file://{tmp_path}/sub")
+    assert isinstance(st, FileStore) and st.root.endswith("sub")
+    assert open_store("mem://conformance_urls") is \
+        open_store("mem://conformance_urls")
+    MemoryStore.drop("conformance_urls")
+    r = open_store("range://conformance_urls")
+    assert isinstance(r, RangeStore)
+    RangeStore.drop("conformance_urls")
+    passthrough = MemoryStore()
+    assert open_store(passthrough) is passthrough
+    with pytest.raises(ValueError, match="unknown store scheme 's3'"):
+        open_store("s3://bucket/prefix")
+    with pytest.raises(ValueError, match="mem:// URLs need a name"):
+        open_store("mem://")
+
+
+def test_register_third_party_scheme():
+    class UpperStore(MemoryStore):
+        scheme = "upper"
+        _named = {}
+
+    register_store_scheme("upper", UpperStore.from_url)
+    try:
+        st = open_store("upper://thirdparty")
+        assert isinstance(st, UpperStore)
+        with CZDataset("upper://thirdparty", "a", spec=SPEC) as ds:
+            ds.append({"p": FIELDS["p"]})
+        with CZDataset("upper://thirdparty") as ds:
+            np.testing.assert_array_equal(ds.read_field("p", 0), FIELDS["p"])
+    finally:
+        STORE_SCHEMES.pop("upper", None)
+        UpperStore.drop("thirdparty")
+
+
+def test_standalone_container_reads_from_any_store(store):
+    """The container layer itself (not just CZDataset) is store-backed:
+    write_compressed/read_field/describe/FieldReader all take store=."""
+    f = FIELDS["p"]
+    container.write_compressed("solo.cz", f, SPEC, store=store)
+    np.testing.assert_array_equal(
+        container.read_field("solo.cz", store=store), f)
+    d = container.describe("solo.cz", verify=True, store=store)
+    assert d["container"] == "CZ2" and d["crc_ok"] is True
+    r = container.FieldReader("solo.cz", store=store)
+    np.testing.assert_array_equal(r.read_box((0, 0, 0), (BS, BS, BS)),
+                                  f[:BS, :BS, :BS])
+    r.close()
+    assert r.closed
+    with pytest.raises(ValueError, match="closed"):
+        r.read_box((0, 0, 0), (BS, BS, BS))
