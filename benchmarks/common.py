@@ -51,5 +51,29 @@ def save_json(name: str, payload) -> str:
     return path
 
 
+def write_bench_record(name: str, params: dict, metrics) -> str:
+    """Write the machine-readable per-bench record
+    ``artifacts/bench/BENCH_<name>.json`` the harness emits for every run,
+    so the perf trajectory is diffable across PRs.
+
+    Schema: ``{"schema": 1, "name", "params", "metrics", "registry"}`` —
+    ``metrics`` is whatever the bench module's ``run()`` returned (often
+    None; the CSV on stdout remains the harness convention), ``registry``
+    is the full :func:`repro.obs.snapshot` at completion, so every
+    ``cz_*`` series the run touched (pipeline chunk timings, store op
+    counts, reader fetch/decode split) rides along without per-bench
+    plumbing.
+    """
+    from repro import obs
+
+    record = {"schema": 1, "name": name, "params": dict(params),
+              "metrics": metrics, "registry": obs.snapshot()}
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    return path
+
+
 def eps_sweep(lo=1e-4, hi=1e-1, n=6):
     return list(np.geomspace(lo, hi, n))

@@ -66,6 +66,8 @@ def main(argv=None) -> None:
         print(f"# unknown bench name(s): {', '.join(unknown)}; "
               f"known: {', '.join(sorted(benches))}", file=sys.stderr)
         raise SystemExit(2)
+    from . import common
+
     failures = []
     for name, mod in benches.items():
         if only and name not in only:
@@ -73,10 +75,17 @@ def main(argv=None) -> None:
         t0 = time.time()
         print(f"# === {name} ===", file=sys.stderr)
         try:
-            mod.run(quick=not args.full)
+            metrics = mod.run(quick=not args.full)
         except Exception:
             traceback.print_exc()
             failures.append(name)
+        else:
+            # one machine-readable record per bench: params + run() return
+            # + the full cz_* registry snapshot (perf trajectory across PRs)
+            rec = common.write_bench_record(
+                name, {"quick": not args.full,
+                       "duration_s": round(time.time() - t0, 3)}, metrics)
+            print(f"# wrote {rec}", file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     if failures:
         print(f"# FAILED: {failures}", file=sys.stderr)

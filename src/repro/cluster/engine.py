@@ -25,13 +25,18 @@ count — rank-count invariance is a tested guarantee, not an accident.
 """
 from __future__ import annotations
 
+import contextlib
+import json
 import multiprocessing
 import os
 import shutil
+import time
 import zlib
 
 import numpy as np
 
+from repro import obs
+from repro.obs import trace
 from repro.core import blocks as blk
 from repro.core import container
 from repro.core.pipeline import CompressionSpec, Pipeline
@@ -45,6 +50,33 @@ __all__ = ["ParallelCompressor"]
 #: faster to boot but inherits the parent's initialized XLA runtime)
 _START_ENV = "REPRO_CLUSTER_START"
 
+#: the paper's per-stage timing as live series (parent-side wall clock)
+_PHASE_SECONDS = obs.histogram(
+    "cz_cluster_phase_seconds",
+    "Parallel-compress phase wall time (encode / exscan / commit).",
+    labelnames=("phase",))
+_COMPRESSIONS = obs.counter("cz_cluster_compressions_total",
+                            "Parallel compress() calls by rank count.",
+                            labelnames=("ranks",))
+
+
+@contextlib.contextmanager
+def _rank_tracing(rank, trace_path):
+    """Worker-side tracing scope: when the parent asked for a trace file,
+    re-anchor this process's global tracer, collect, and save on exit (the
+    parent absorbs the file onto rank track ``pid=rank``)."""
+    if trace_path is None:
+        yield
+        return
+    trace.TRACER.reset()
+    trace.TRACER.process_name = f"rank {rank}"
+    trace.TRACER.enable()
+    try:
+        yield
+    finally:
+        trace.TRACER.disable()
+        trace.TRACER.save(trace_path)
+
 
 def _encode_rank(task) -> tuple[list[int], list[int], list[int]]:
     """Worker: encode one rank's block span into a private part file.
@@ -52,31 +84,35 @@ def _encode_rank(task) -> tuple[list[int], list[int], list[int]]:
     Returns (chunk_sizes, chunk_nblocks, chunk_crc32) — the per-rank metadata
     the parent gathers before the Exscan.
     """
-    spec_json, blocks_np, part_path = task
+    spec_json, blocks_np, part_path, rank, trace_path = task
     sizes: list[int] = []
     nblks: list[int] = []
     crcs: list[int] = []
-    with open(part_path, "wb") as f:
-        if blocks_np.shape[0]:
-            pipe = Pipeline(CompressionSpec.from_json(spec_json))
-            for chunk, nblk in pipe.iter_chunks(blocks_np):
-                f.write(chunk)
-                sizes.append(len(chunk))
-                nblks.append(nblk)
-                crcs.append(zlib.crc32(chunk) & 0xFFFFFFFF)
-        f.flush()
-        os.fsync(f.fileno())
+    with _rank_tracing(rank, trace_path), \
+            trace.span("encode", rank=rank, nblocks=int(blocks_np.shape[0])):
+        with open(part_path, "wb") as f:
+            if blocks_np.shape[0]:
+                pipe = Pipeline(CompressionSpec.from_json(spec_json))
+                for chunk, nblk in pipe.iter_chunks(blocks_np):
+                    f.write(chunk)
+                    sizes.append(len(chunk))
+                    nblks.append(nblk)
+                    crcs.append(zlib.crc32(chunk) & 0xFFFFFFFF)
+            f.flush()
+            os.fsync(f.fileno())
     return sizes, nblks, crcs
 
 
 def _write_at(task) -> None:
     """Worker: copy this rank's part file into the shared file at its
     Exscan offset (the ``MPI_File_write_at`` step), then drop the part."""
-    path, offset, part_path = task
-    with open(part_path, "rb") as src, open(path, "r+b") as dst:
-        dst.seek(offset)
-        shutil.copyfileobj(src, dst, 1 << 20)
-    os.unlink(part_path)
+    path, offset, part_path, rank, trace_path = task
+    with _rank_tracing(rank, trace_path), \
+            trace.span("commit", rank=rank, offset=int(offset)):
+        with open(part_path, "rb") as src, open(path, "r+b") as dst:
+            dst.seek(offset)
+            shutil.copyfileobj(src, dst, 1 << 20)
+        os.unlink(part_path)
 
 
 class ParallelCompressor:
@@ -154,42 +190,66 @@ class ParallelCompressor:
         if nranks == 1 or nchunks <= 1:
             return container.write_stream(
                 path, pipe.iter_chunks(data), header, fsync=fsync)
+        _COMPRESSIONS.inc(ranks=nranks)
 
+        # when the parent is tracing, every worker task also gets a trace
+        # file path: the worker collects its own timeline there and the
+        # parent absorbs each onto rank track pid=r after the run
+        tracing = trace.TRACER.enabled
         spec_json = spec.to_json()
-        tasks, parts = [], []
+        tasks, parts, rank_traces = [], [], []
         for r, (clo, chi) in enumerate(chunk_spans(nchunks, nranks)):
             blo, bhi = clo * bpc, min(chi * bpc, nblocks)
             part = f"{path}.rank{r}.part"
             parts.append(part)
-            tasks.append((spec_json, data[blo:bhi], part))
+            enc_trace = f"{part}.enc-trace.json" if tracing else None
+            wr_trace = f"{part}.wr-trace.json" if tracing else None
+            rank_traces.append((enc_trace, wr_trace))
+            tasks.append((spec_json, data[blo:bhi], part, r, enc_trace))
         shared_created = False
         try:
             # -- phase 1: per-rank encode (scatter of spans, gather of sizes)
-            enc = self._get_pool().map(_encode_rank, tasks)
+            t0 = time.perf_counter_ns()
+            with trace.span("encode", ranks=nranks, nchunks=nchunks):
+                enc = self._get_pool().map(_encode_rank, tasks)
+            _PHASE_SECONDS.observe((time.perf_counter_ns() - t0) / 1e9,
+                                   phase="encode")
 
             # -- phase 2: Exscan over per-rank totals -> shared-file offsets
-            totals = np.asarray([sum(sizes) for sizes, _, _ in enc], np.int64)
-            offsets = exclusive_offsets_np(totals)
-            data_start = len(container.MAGIC) + 8
-            with open(path, "wb") as f:
-                f.write(container.MAGIC)
-                f.write(container._FOOTER_PTR.pack(0))
-            shared_created = True
-            self._get_pool().map(
-                _write_at,
-                [(path, int(data_start + off), part)
-                 for off, part in zip(offsets, parts)])
+            t0 = time.perf_counter_ns()
+            with trace.span("exscan", ranks=nranks):
+                totals = np.asarray(
+                    [sum(sizes) for sizes, _, _ in enc], np.int64)
+                offsets = exclusive_offsets_np(totals)
+            _PHASE_SECONDS.observe((time.perf_counter_ns() - t0) / 1e9,
+                                   phase="exscan")
 
-            # -- phase 3: the parent commits the footer (rank-order
-            # concatenation of the gathered metadata == the serial writer's
-            # chunk table, through the same layout code)
-            with open(path, "r+b") as f:
-                return container.commit_footer(
-                    f, header,
-                    [s for ss, _, _ in enc for s in ss],
-                    [n for _, ns, _ in enc for n in ns],
-                    [c for _, _, cs in enc for c in cs],
-                    data_start + int(totals.sum()), fsync=fsync)
+            # -- phase 3: ranks write at their offsets, the parent commits
+            # the footer (rank-order concatenation of the gathered metadata
+            # == the serial writer's chunk table, through same layout code)
+            t0 = time.perf_counter_ns()
+            with trace.span("commit", ranks=nranks):
+                data_start = len(container.MAGIC) + 8
+                with open(path, "wb") as f:
+                    f.write(container.MAGIC)
+                    f.write(container._FOOTER_PTR.pack(0))
+                shared_created = True
+                self._get_pool().map(
+                    _write_at,
+                    [(path, int(data_start + off), part, r, wr)
+                     for r, (off, part, (_enc, wr))
+                     in enumerate(zip(offsets, parts, rank_traces))])
+                with open(path, "r+b") as f:
+                    nbytes = container.commit_footer(
+                        f, header,
+                        [s for ss, _, _ in enc for s in ss],
+                        [n for _, ns, _ in enc for n in ns],
+                        [c for _, _, cs in enc for c in cs],
+                        data_start + int(totals.sum()), fsync=fsync)
+            _PHASE_SECONDS.observe((time.perf_counter_ns() - t0) / 1e9,
+                                   phase="commit")
+            self._absorb_rank_traces(rank_traces)
+            return nbytes
         except BaseException:
             # don't leak part files / a headerless stub on a failed rank
             for part in parts:
@@ -197,12 +257,40 @@ class ParallelCompressor:
                     os.unlink(part)
                 except FileNotFoundError:
                     pass
+            for pair in rank_traces:
+                for tp in pair:
+                    if tp is not None:
+                        try:
+                            os.unlink(tp)
+                        except FileNotFoundError:
+                            pass
             if shared_created:
                 try:
                     os.unlink(path)
                 except FileNotFoundError:
                     pass
             raise
+
+    @staticmethod
+    def _absorb_rank_traces(rank_traces) -> None:
+        """Fold each rank's saved trace files into the parent's timeline as
+        ``pid=rank`` tracks, then drop the temp files.  Missing files (a
+        worker died before saving) are skipped — tracing never fails a
+        successful compress."""
+        for r, pair in enumerate(rank_traces):
+            for tp in pair:
+                if tp is None:
+                    continue
+                try:
+                    with open(tp) as f:
+                        doc = json.load(f)
+                except (OSError, ValueError):
+                    continue
+                trace.TRACER.absorb(doc, pid=r, process_name=f"rank {r}")
+                try:
+                    os.unlink(tp)
+                except FileNotFoundError:
+                    pass
 
     def close(self) -> None:
         if self._pool is not None:

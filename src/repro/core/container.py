@@ -40,15 +40,32 @@ import json
 import os
 import struct
 import threading
+import time
 import zlib
 from typing import Iterable, Iterator
 
 import numpy as np
 
+from repro import obs
+from repro.obs import trace
 from repro.store import backends as stores
 
 from . import blocks as blk
 from .pipeline import CompressedField, CompressionSpec, Pipeline
+
+# fetch (store byte-range get) vs decode (chunk inflation) split — the two
+# halves of a cold read a remote-backend PR must improve independently.
+_READS = obs.counter("cz_reader_chunk_reads_total",
+                     "FieldReader chunk requests by cache result.",
+                     labelnames=("result",))
+_FETCHED = obs.counter("cz_reader_fetched_bytes_total",
+                       "Compressed bytes fetched from stores by FieldReader.")
+_FETCH_SECONDS = obs.histogram("cz_reader_fetch_seconds",
+                               "Cold-chunk store fetch wall time.",
+                               buckets=obs.FAST_BUCKETS)
+_DECODE_SECONDS = obs.histogram("cz_reader_decode_seconds",
+                                "Cold-chunk decode wall time.",
+                                buckets=obs.FAST_BUCKETS)
 
 
 def _source(path, store: stores.Store | None) -> tuple[stores.Store, str]:
@@ -427,12 +444,21 @@ class FieldReader:
             if ci in self._cache:
                 self._cache.move_to_end(ci)
                 self.cache_hits += 1
+                _READS.inc(result="hit")
                 return self._cache[ci], False
             self.cache_misses += 1
+            _READS.inc(result="miss")
             off = int(self._chunk_off[ci])
+            t0 = time.perf_counter_ns()
             buf = self.store.get(
                 self.key, (off, off + self.header["chunk_sizes"][ci]))
+            t1 = time.perf_counter_ns()
             out = self._pipe.decompress_chunk(buf, self._chunk_nblk[ci], self.format)
+            t2 = time.perf_counter_ns()
+            _FETCHED.inc(len(buf))
+            _FETCH_SECONDS.observe((t1 - t0) / 1e9)
+            _DECODE_SECONDS.observe((t2 - t1) / 1e9)
+            trace.TRACER.record("fetch", t0, t1, chunk=ci, bytes=len(buf))
             self._cache[ci] = out
             while len(self._cache) > self._cache_chunks:
                 self._cache.popitem(last=False)

@@ -34,9 +34,13 @@ import concurrent.futures
 import dataclasses
 import itertools
 import json
+import time
 from typing import Any, Iterator
 
 import numpy as np
+
+from repro import obs
+from repro.obs import trace
 
 from . import blocks as blk
 from . import lossless, metrics
@@ -51,6 +55,46 @@ CODEC_FORMAT = 2
 
 #: dtypes a container can record; CZ1/headerless payloads default to float32
 DTYPES = ("float32", "float64", "float16")
+
+# -- per-chunk accounting (the paper's per-stage timing, as live series) -----
+_ENC_CHUNKS = obs.counter("cz_pipeline_chunks_encoded_total",
+                          "Chunks encoded (stage 1+2) by scheme.",
+                          labelnames=("scheme",))
+_DEC_CHUNKS = obs.counter("cz_pipeline_chunks_decoded_total",
+                          "Chunks decoded by scheme.",
+                          labelnames=("scheme",))
+_RAW_BYTES = obs.counter("cz_pipeline_raw_bytes_total",
+                         "Uncompressed bytes entering chunk encode.",
+                         labelnames=("scheme",))
+_ENC_BYTES = obs.counter("cz_pipeline_encoded_bytes_total",
+                         "Compressed bytes leaving chunk encode.",
+                         labelnames=("scheme",))
+_RATIO = obs.gauge("cz_pipeline_ratio",
+                   "Achieved compression ratio (cumulative raw/encoded).",
+                   labelnames=("scheme",))
+_ENC_SECONDS = obs.histogram("cz_pipeline_encode_seconds",
+                             "Per-chunk encode wall time by scheme.",
+                             buckets=obs.FAST_BUCKETS,
+                             labelnames=("scheme",))
+_DEC_SECONDS = obs.histogram("cz_pipeline_decode_seconds",
+                             "Per-chunk decode wall time by scheme.",
+                             buckets=obs.FAST_BUCKETS,
+                             labelnames=("scheme",))
+
+
+def _account_encode(scheme: str, ci: int, raw: int, enc: int,
+                    t0_ns: int, t1_ns: int) -> None:
+    _ENC_CHUNKS.inc(scheme=scheme)
+    _RAW_BYTES.inc(raw, scheme=scheme)
+    _ENC_BYTES.inc(enc, scheme=scheme)
+    total_raw = _RAW_BYTES.value(scheme=scheme)
+    total_enc = _ENC_BYTES.value(scheme=scheme)
+    if total_enc:
+        _RATIO.set(total_raw / total_enc, scheme=scheme)
+    _ENC_SECONDS.observe((t1_ns - t0_ns) / 1e9, scheme=scheme)
+    trace.TRACER.record("encode", t0_ns, t1_ns, chunk=ci, scheme=scheme,
+                        raw_bytes=raw, encoded_bytes=enc,
+                        ratio=round(raw / enc, 3) if enc else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,19 +219,27 @@ class Pipeline:
         """
         spec = self.spec
         blocks_np = np.asarray(blocks_np)
-        s1 = self.scheme.stage1(blocks_np, spec)
+        with trace.span("stage1", scheme=spec.scheme, device=spec.device,
+                        nblocks=int(blocks_np.shape[0])):
+            s1 = self.scheme.stage1(blocks_np, spec)
         bpc = self.blocks_per_chunk
-        ranges = [(lo, min(lo + bpc, blocks_np.shape[0]))
-                  for lo in range(0, blocks_np.shape[0], bpc)]
+        ranges = [(ci, lo, min(lo + bpc, blocks_np.shape[0]))
+                  for ci, lo in enumerate(
+                      range(0, blocks_np.shape[0], bpc))]
+        block_bytes = spec.np_dtype.itemsize * spec.block_size ** 3
 
-        def encode(lo: int, hi: int) -> bytes:
+        def encode(ci: int, lo: int, hi: int) -> bytes:
+            t0 = time.perf_counter_ns()
             payload = self.scheme.serialize(s1, lo, hi, spec)
-            return lossless.encode(payload, spec.stage2)
+            chunk = lossless.encode(payload, spec.stage2)
+            _account_encode(spec.scheme, ci, (hi - lo) * block_bytes,
+                            len(chunk), t0, time.perf_counter_ns())
+            return chunk
 
         nworkers = self.workers if workers is None else max(1, int(workers))
         if executor is None and nworkers <= 1:
-            for lo, hi in ranges:
-                yield encode(lo, hi), hi - lo
+            for ci, lo, hi in ranges:
+                yield encode(ci, lo, hi), hi - lo
             return
 
         own_pool = executor is None
@@ -200,7 +252,7 @@ class Pipeline:
             pending: collections.deque = collections.deque(
                 (r, pool.submit(encode, *r)) for r in itertools.islice(it, window))
             while pending:
-                (lo, hi), fut = pending.popleft()
+                (_ci, lo, hi), fut = pending.popleft()
                 nxt = next(it, None)
                 if nxt is not None:
                     pending.append((nxt, pool.submit(encode, *nxt)))
@@ -251,12 +303,19 @@ class Pipeline:
 
     def decompress_chunk(self, buf: bytes, nblk: int,
                          fmt: int = CODEC_FORMAT) -> np.ndarray:
+        t0 = time.perf_counter_ns()
         spec = self.scheme.decode_spec(self.spec, fmt)
         payload = lossless.decode(buf, spec.stage2)
         blocks = self.scheme.deserialize(payload, nblk, spec)
         # lossy schemes compute in float32; the dtype tag restores the field
         # dtype (raw already deserializes in the tagged dtype — no-op there)
-        return blocks.astype(spec.np_dtype, copy=False)
+        out = blocks.astype(spec.np_dtype, copy=False)
+        t1 = time.perf_counter_ns()
+        _DEC_CHUNKS.inc(scheme=spec.scheme)
+        _DEC_SECONDS.observe((t1 - t0) / 1e9, scheme=spec.scheme)
+        trace.TRACER.record("decode", t0, t1, scheme=spec.scheme, nblocks=nblk,
+                            encoded_bytes=len(buf))
+        return out
 
     def decompress_blocks(self, comp: CompressedField) -> np.ndarray:
         outs = [

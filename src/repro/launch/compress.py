@@ -16,14 +16,19 @@ Examples:
   cz-compress inspect --json DATASET            # machine-readable tables
   cz-compress gc --dry-run DATASET              # list orphaned members
   cz-compress serve DATASET --port 8423         # HTTP region-query service
+  cz-compress parallel --ranks 4 --trace t.json # merged per-rank Chrome trace
+  cz-compress stats http://127.0.0.1:8423       # pretty-print live /metrics
 
 DATASET is a directory path or a store URL (``file:///data/run42``,
 ``mem://scratch`` — see repro.store.backends): inspect, gc, and serve work
-over any registered backend.
+over any registered backend.  ``--trace OUT.json`` on compress/parallel/
+serve collects repro.obs spans and writes a Chrome trace-event file —
+open it at https://ui.perfetto.dev.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -33,6 +38,23 @@ import numpy as np
 
 from repro.core import DEVICES, SCHEMES, CompressionSpec, compression_ratio, psnr
 from repro.core import container
+
+
+@contextlib.contextmanager
+def _trace_scope(out_path: str | None):
+    """Collect repro.obs spans for the duration and write a Chrome trace
+    file on exit (no-op when ``out_path`` is falsy)."""
+    if not out_path:
+        yield
+        return
+    from repro.obs import trace
+
+    trace.enable()
+    try:
+        yield
+    finally:
+        trace.disable()
+        print(f"trace written to {trace.save(out_path)}")
 
 
 def _validated_spec(ap: argparse.ArgumentParser,
@@ -260,6 +282,9 @@ def parallel_main(argv) -> int:
     ap.add_argument("--check-identical", action="store_true",
                     help="also write serially and verify the shared file is "
                     "bit-identical (the engine's core guarantee)")
+    ap.add_argument("--trace", metavar="OUT.json",
+                    help="write one merged Chrome trace (parent phases + a "
+                         "track per rank) — view in Perfetto")
     args = ap.parse_args(argv)
     args.out = _local_out_dir(ap, args.out)
 
@@ -277,7 +302,7 @@ def parallel_main(argv) -> int:
     os.makedirs(args.out, exist_ok=True)
 
     ok = True
-    with ParallelCompressor(args.ranks) as pc:
+    with _trace_scope(args.trace), ParallelCompressor(args.ranks) as pc:
         for name, f in fields.items():
             path = os.path.join(args.out, f"{name}.cz")
             t0 = time.time()
@@ -307,6 +332,56 @@ def serve_main(argv) -> int:
     return http_main(argv)
 
 
+def stats_main(argv) -> int:
+    """Pretty-print a metrics snapshot: a running serve endpoint's
+    ``/metrics``, saved exposition text, or this process's registry."""
+    from repro import obs
+
+    ap = argparse.ArgumentParser(
+        prog="cz-compress stats",
+        description="Pretty-print a cz_* metrics snapshot.  SOURCE is an "
+                    "http(s)://host:port of a running `cz-compress serve` "
+                    "(its /metrics is fetched), a file of Prometheus text, "
+                    "or '-' for stdin; omitted = this process's registry.")
+    ap.add_argument("source", nargs="?")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable JSON instead of the table")
+    ap.add_argument("--buckets", action="store_true",
+                    help="include histogram bucket rows")
+    args = ap.parse_args(argv)
+
+    if args.source is None:
+        text = obs.render()
+    elif args.source.startswith(("http://", "https://")):
+        from urllib.request import urlopen
+
+        with urlopen(args.source.rstrip("/") + "/metrics") as r:
+            text = r.read().decode()
+    elif args.source == "-":
+        text = sys.stdin.read()
+    else:
+        with open(args.source) as f:
+            text = f.read()
+
+    samples = obs.parse_prometheus(text)
+    if args.json:
+        json.dump({name: [{"labels": lbl, "value": val}
+                          for lbl, val in rows]
+                   for name, rows in samples.items()}, sys.stdout, indent=1)
+        print()
+        return 0
+    width = max((len(n) for n in samples), default=10)
+    for name, rows in samples.items():
+        if not args.buckets and name.endswith("_bucket"):
+            continue
+        for lbl, val in rows:
+            ls = ",".join(f"{k}={v}" for k, v in lbl.items())
+            ls = f"{{{ls}}}" if ls else ""
+            v = int(val) if float(val).is_integer() else round(val, 6)
+            print(f"{name:<{width}} {ls:<28} {v}")
+    return 0
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "inspect":
@@ -317,8 +392,8 @@ def main(argv=None):
         raise SystemExit(parallel_main(argv[1:]))
     if argv and argv[0] == "serve":
         raise SystemExit(serve_main(argv[1:]))
-
-    from repro.fields import CloudConfig, cavitation_fields
+    if argv and argv[0] == "stats":
+        raise SystemExit(stats_main(argv[1:]))
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--source", default="cavitation",
@@ -347,10 +422,20 @@ def main(argv=None):
                     help="output directory (plain path or file:// URL)")
     ap.add_argument("--decompress", default="")
     ap.add_argument("--verify-against", default="")
+    ap.add_argument("--trace", metavar="OUT.json",
+                    help="collect repro.obs spans (stage1/encode/decode) and "
+                         "write a Chrome trace — view in Perfetto")
     args = ap.parse_args(argv)
     args.out = _local_out_dir(ap, args.out)
     if args.device is not None and args.device not in DEVICES:
         ap.error(f"unknown device {args.device!r}; one of {DEVICES}")
+
+    with _trace_scope(args.trace):
+        return _serial_body(ap, args)
+
+
+def _serial_body(ap: argparse.ArgumentParser, args) -> None:
+    from repro.fields import CloudConfig, cavitation_fields
 
     if args.list_schemes:
         for name in sorted(SCHEMES):

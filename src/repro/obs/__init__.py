@@ -1,0 +1,48 @@
+"""repro.obs — unified observability: metrics registry + span tracing.
+
+Two stdlib-only modules:
+
+* :mod:`repro.obs.registry` — thread-safe ``Counter``/``Gauge``/
+  ``Histogram`` with labels, a process-wide default ``REGISTRY``, and
+  Prometheus text exposition (``render``) / JSON snapshots (``snapshot``).
+* :mod:`repro.obs.trace` — ``with span("encode", chunk=i):`` span API
+  exporting Chrome trace-event JSON (Perfetto-viewable), disabled by
+  default at near-zero cost, with cross-process merge for the cluster
+  engine's per-rank traces.
+
+Every tier (pipeline, container reader, store backends, cluster engine,
+serve) instruments through this package; ``cz-compress ... --trace`` and
+``cz-compress stats`` surface it on the CLI.
+"""
+from repro.obs.registry import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    FAST_BUCKETS,
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    Metric,
+    Registry,
+    counter,
+    gauge,
+    histogram,
+    parse_prometheus,
+    render,
+    snapshot,
+)
+from repro.obs.trace import (  # noqa: F401
+    TRACER,
+    Tracer,
+    merge_traces,
+    span,
+    traced,
+    tracing,
+)
+from repro.obs import trace  # noqa: F401
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metric", "Registry", "REGISTRY",
+    "DEFAULT_BUCKETS", "FAST_BUCKETS", "counter", "gauge", "histogram",
+    "render", "snapshot", "parse_prometheus",
+    "Tracer", "TRACER", "span", "traced", "tracing", "trace", "merge_traces",
+]

@@ -39,6 +39,8 @@ from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
+from repro import obs
+
 from .region import FieldRegionServer
 
 __all__ = ["RegionHTTPServer", "Client", "render_metrics", "main"]
@@ -47,61 +49,58 @@ __all__ = ["RegionHTTPServer", "Client", "render_metrics", "main"]
 def render_metrics(region: FieldRegionServer,
                    responses: dict[int, int] | None = None) -> str:
     """Prometheus text-format (0.0.4) rendering of one region server's
-    counters."""
+    counters, through :class:`repro.obs.Registry`.
+
+    A fresh registry is assembled per scrape from the server's counter
+    snapshot — registration order reproduces the historical hand-rolled
+    exposition name-for-name (pinned by the parity test in
+    ``tests/test_obs.py``) — and the server's live ``LatencyHistogram`` is
+    registered directly, so the latency buckets are exposed without a copy.
+    """
     s = region.stats()
-    lat = region.latency.snapshot()
-    lines = []
+    reg = obs.Registry()
 
-    def metric(name, kind, help_, value):
-        lines.append(f"# HELP {name} {help_}")
-        lines.append(f"# TYPE {name} {kind}")
-        lines.append(f"{name} {value}")
+    def counter(name, help_, value):
+        reg.counter(name, help_).set_total(value)
 
-    metric("cz_serve_queries_total", "counter",
-           "Region queries answered.", s["queries"])
-    metric("cz_serve_bytes_served_total", "counter",
-           "Decoded bytes returned to clients.", s["bytes_served"])
-    metric("cz_serve_bytes_decoded_total", "counter",
-           "Bytes inflated from compressed chunks (cache misses only).",
-           s["bytes_decoded"])
-    metric("cz_serve_region_cache_hits_total", "counter",
-           "Queries answered from the decoded-region LRU.",
-           s["region_cache_hits"])
-    metric("cz_serve_region_cache_misses_total", "counter",
-           "Queries that had to assemble their box.", s["region_cache_misses"])
-    metric("cz_serve_region_cache_evictions_total", "counter",
-           "Regions evicted from the decoded-region LRU.",
-           s["region_cache_evictions"])
-    metric("cz_serve_region_cache_bytes", "gauge",
-           "Bytes resident in the decoded-region LRU.",
-           s["region_cache_bytes"])
-    metric("cz_serve_chunk_cache_hits_total", "counter",
-           "Chunk fetches served by the store's chunk LRUs.", s["cache_hits"])
-    metric("cz_serve_chunk_cache_misses_total", "counter",
-           "Chunk fetches that decoded (== chunks decoded).",
-           s["cache_misses"])
-    metric("cz_serve_chunks_decoded_total", "counter",
-           "Chunks inflated since the server started.", s["chunks_decoded"])
-    metric("cz_serve_coalesced_requests_total", "counter",
-           "Chunk fetches that joined another request's in-flight decode.",
-           s["flights_joined"])
-
-    name = "cz_serve_request_seconds"
-    lines.append(f"# HELP {name} Region query latency.")
-    lines.append(f"# TYPE {name} histogram")
-    for bound, cum in lat["buckets"]:
-        le = "+Inf" if bound == float("inf") else repr(bound)
-        lines.append(f'{name}_bucket{{le="{le}"}} {cum}')
-    lines.append(f"{name}_sum {lat['sum']}")
-    lines.append(f"{name}_count {lat['count']}")
-
+    counter("cz_serve_queries_total",
+            "Region queries answered.", s["queries"])
+    counter("cz_serve_bytes_served_total",
+            "Decoded bytes returned to clients.", s["bytes_served"])
+    counter("cz_serve_bytes_decoded_total",
+            "Bytes inflated from compressed chunks (cache misses only).",
+            s["bytes_decoded"])
+    counter("cz_serve_region_cache_hits_total",
+            "Queries answered from the decoded-region LRU.",
+            s["region_cache_hits"])
+    counter("cz_serve_region_cache_misses_total",
+            "Queries that had to assemble their box.",
+            s["region_cache_misses"])
+    counter("cz_serve_region_cache_evictions_total",
+            "Regions evicted from the decoded-region LRU.",
+            s["region_cache_evictions"])
+    reg.gauge("cz_serve_region_cache_bytes",
+              "Bytes resident in the decoded-region LRU."
+              ).set(s["region_cache_bytes"])
+    counter("cz_serve_chunk_cache_hits_total",
+            "Chunk fetches served by the store's chunk LRUs.",
+            s["cache_hits"])
+    counter("cz_serve_chunk_cache_misses_total",
+            "Chunk fetches that decoded (== chunks decoded).",
+            s["cache_misses"])
+    counter("cz_serve_chunks_decoded_total",
+            "Chunks inflated since the server started.", s["chunks_decoded"])
+    counter("cz_serve_coalesced_requests_total",
+            "Chunk fetches that joined another request's in-flight decode.",
+            s["flights_joined"])
+    reg.register(region.latency)  # live cz_serve_request_seconds histogram
     if responses is not None:
-        name = "cz_serve_http_responses_total"
-        lines.append(f"# HELP {name} HTTP responses by status code.")
-        lines.append(f"# TYPE {name} counter")
+        resp = reg.counter("cz_serve_http_responses_total",
+                           "HTTP responses by status code.",
+                           labelnames=("code",))
         for code in sorted(responses):
-            lines.append(f'{name}{{code="{code}"}} {responses[code]}')
-    return "\n".join(lines) + "\n"
+            resp.set_total(responses[code], code=code)
+    return reg.render()
 
 
 class _RegionHandler(BaseHTTPRequestHandler):
@@ -377,13 +376,36 @@ class Client:
     def metrics(self) -> str:
         return self._ok("/metrics")[1].decode()
 
-    def metric(self, name: str) -> float:
-        """One un-labelled sample out of :meth:`metrics` (convenience for
-        tests/benchmarks)."""
-        for line in self.metrics().splitlines():
-            if line.startswith(f"{name} "):
-                return float(line.split()[1])
-        raise KeyError(name)
+    def metrics_dict(self) -> dict[str, list[tuple[dict, float]]]:
+        """Parsed ``/metrics``: ``{name: [(labels, value), ...]}`` (histogram
+        sub-series under their exposed ``_bucket``/``_sum``/``_count``
+        names) — the structured alternative to grepping exposition text."""
+        return obs.parse_prometheus(self.metrics())
+
+    def metric(self, name: str, labels: dict | None = None) -> float:
+        """One sample out of :meth:`metrics` (convenience for tests and
+        benchmarks).  Without ``labels`` the metric's un-labelled sample is
+        returned; with a label dict, the unique sample whose labels contain
+        every given pair (``KeyError`` if none match, ``ValueError`` if the
+        match is ambiguous)."""
+        samples = self.metrics_dict().get(name)
+        if not samples:
+            raise KeyError(name)
+        if labels is None:
+            for lbl, val in samples:
+                if not lbl:
+                    return val
+            raise KeyError(f"{name} has no un-labelled sample "
+                           f"(labelled: {[lbl for lbl, _ in samples]})")
+        want = {k: str(v) for k, v in labels.items()}
+        hits = [val for lbl, val in samples
+                if all(lbl.get(k) == v for k, v in want.items())]
+        if not hits:
+            raise KeyError(f"{name} has no sample matching {labels}")
+        if len(hits) > 1:
+            raise ValueError(f"{name}: labels {labels} match "
+                             f"{len(hits)} samples — add more labels")
+        return hits[0]
 
     def healthz(self) -> bool:
         return self._request("/healthz")[0] == 200
@@ -423,8 +445,13 @@ def main(argv=None) -> int:
                     help="LRU chunk slots per reader")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per request")
+    ap.add_argument("--trace", metavar="OUT.json",
+                    help="collect spans while serving and write a Chrome "
+                         "trace (view in Perfetto) on shutdown")
     args = ap.parse_args(argv)
 
+    if args.trace:
+        obs.trace.enable()
     srv = RegionHTTPServer(args.dataset, host=args.host, port=args.port,
                            cache_bytes=int(args.cache_mb * 2**20),
                            cache_readers=args.cache_readers,
@@ -440,6 +467,9 @@ def main(argv=None) -> int:
         print("shutting down")
     finally:
         srv.close()
+        if args.trace:
+            obs.trace.disable()
+            print(f"trace written to {obs.trace.save(args.trace)}")
     return 0
 
 

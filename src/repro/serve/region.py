@@ -25,45 +25,31 @@ import contextlib
 import threading
 import time
 
+from repro import obs
+from repro.obs import trace
+
 from .cache import RegionCache
 from .scheduler import ChunkScheduler, SingleFlight
 
 __all__ = ["FieldRegionServer", "LatencyHistogram", "LATENCY_BUCKETS"]
 
 #: Prometheus-style cumulative bucket bounds, seconds (+Inf is implicit).
-LATENCY_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
-                   0.1, 0.25, 0.5, 1.0, 2.5)
+#: Same bounds as :data:`repro.obs.DEFAULT_BUCKETS` — kept as a named
+#: constant because the serve tier's ``/metrics`` shape predates ``obs``.
+LATENCY_BUCKETS = obs.DEFAULT_BUCKETS
 
 
-class LatencyHistogram:
-    """Fixed-bucket latency histogram in the Prometheus text-format shape
-    (cumulative ``le`` buckets plus sum and count)."""
+class LatencyHistogram(obs.Histogram):
+    """The serve tier's request-latency histogram — an
+    :class:`repro.obs.Histogram` pre-named for the ``/metrics`` exposition
+    (``render_metrics`` registers the live instance, so scraped buckets are
+    the ones ``observe`` filled — no copy, no drift).  ``snapshot()``
+    (inherited) keeps the historical
+    ``{"buckets": [(le, cum), ...], "sum": s, "count": n}`` shape."""
 
     def __init__(self, buckets=LATENCY_BUCKETS):
-        self.bounds = tuple(float(b) for b in buckets)
-        self._counts = [0] * (len(self.bounds) + 1)  # last = +Inf
-        self._sum = 0.0
-        self._lock = threading.Lock()
-
-    def observe(self, seconds: float) -> None:
-        i = 0
-        while i < len(self.bounds) and seconds > self.bounds[i]:
-            i += 1
-        with self._lock:
-            self._counts[i] += 1
-            self._sum += seconds
-
-    def snapshot(self) -> dict:
-        """``{"buckets": [(le, cumulative_count), ...], "sum": s, "count": n}``
-        with the +Inf bucket last."""
-        with self._lock:
-            counts = list(self._counts)
-            total = self._sum
-        cum, rows = 0, []
-        for bound, c in zip(self.bounds + (float("inf"),), counts):
-            cum += c
-            rows.append((bound, cum))
-        return {"buckets": rows, "sum": total, "count": cum}
+        super().__init__("cz_serve_request_seconds", "Region query latency.",
+                         buckets=buckets)
 
 
 class FieldRegionServer:
@@ -130,12 +116,13 @@ class FieldRegionServer:
         key = (str(quantity), int(t),
                tuple(int(v) for v in lo), tuple(int(v) for v in hi))
         t0 = time.perf_counter()
-        out = self.cache.get(key)
-        if out is None:
-            # coalesce identical in-flight regions, then chunk-level flights
-            # inside read_box take care of partial overlaps
-            out = self._region_sf.do(
-                key, lambda: self._decode_region(key))
+        with trace.span("serve.query", quantity=key[0], t=key[1]):
+            out = self.cache.get(key)
+            if out is None:
+                # coalesce identical in-flight regions, then chunk-level
+                # flights inside read_box take care of partial overlaps
+                out = self._region_sf.do(
+                    key, lambda: self._decode_region(key))
         dt = time.perf_counter() - t0
         self.latency.observe(dt)
         with self._lock:

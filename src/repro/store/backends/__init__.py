@@ -33,12 +33,14 @@ import os
 from .base import Store, StoreKeyError, check_key  # noqa: F401
 from .file import FileStore  # noqa: F401
 from .flaky import FlakyStore, InjectedFault  # noqa: F401
+from .instrument import InstrumentedStore, StoreMeter  # noqa: F401
 from .memory import MemoryStore  # noqa: F401
 from .object import RangeStore  # noqa: F401
 
 __all__ = ["Store", "StoreKeyError", "check_key", "FileStore", "MemoryStore",
-           "RangeStore", "FlakyStore", "InjectedFault", "open_store",
-           "register_store_scheme", "STORE_SCHEMES"]
+           "RangeStore", "FlakyStore", "InjectedFault", "InstrumentedStore",
+           "StoreMeter", "open_store", "register_store_scheme",
+           "STORE_SCHEMES"]
 
 #: URL scheme -> factory taking the part after ``scheme://``.
 STORE_SCHEMES: dict[str, type | object] = {
@@ -56,24 +58,32 @@ def register_store_scheme(scheme: str, factory) -> None:
     STORE_SCHEMES[str(scheme)] = factory
 
 
-def open_store(root) -> Store:
+def open_store(root, *, instrument: bool = False) -> Store:
     """Resolve a dataset root to a :class:`Store`.
 
     ``root`` is a :class:`Store` (returned as-is), a URL
     (``file:///data/run42``, ``mem://myds``, any registered scheme), or a
     plain local path (the historical form — resolves to a
-    :class:`FileStore`).
+    :class:`FileStore`).  ``instrument=True`` wraps the resolved backend in
+    an :class:`InstrumentedStore` so every op is metered into the global
+    ``cz_store_*`` registry series (already-instrumented stores pass
+    through unwrapped).
     """
     if isinstance(root, Store):
-        return root
-    root = os.fspath(root)
-    if "://" in root:
-        scheme, rest = root.split("://", 1)
-        try:
-            factory = STORE_SCHEMES[scheme]
-        except KeyError:
-            raise ValueError(
-                f"unknown store scheme {scheme!r} in {root!r} "
-                f"(registered: {', '.join(sorted(STORE_SCHEMES))})") from None
-        return factory(rest)
-    return FileStore(root)
+        store = root
+    else:
+        root = os.fspath(root)
+        if "://" in root:
+            scheme, rest = root.split("://", 1)
+            try:
+                factory = STORE_SCHEMES[scheme]
+            except KeyError:
+                raise ValueError(
+                    f"unknown store scheme {scheme!r} in {root!r} (registered:"
+                    f" {', '.join(sorted(STORE_SCHEMES))})") from None
+            store = factory(rest)
+        else:
+            store = FileStore(root)
+    if instrument and not isinstance(store, (InstrumentedStore, RangeStore)):
+        store = InstrumentedStore(store)
+    return store

@@ -10,9 +10,13 @@ store, it permits exactly two data operations:
 * **byte-range get** — ``get(key, byte_range=(off, end))``, the S3
   ``Range: bytes=off-`` request.
 
-Every request is counted (``stats()``), so tests and benchmarks can assert
-that a region query fetched *ranges of* a member, not the member — the
-access pattern error-bounded compressors are judged on.  An optional
+Every request is counted (``stats()``) through a shared
+:class:`~repro.store.backends.instrument.StoreMeter`, so tests and
+benchmarks can assert that a region query fetched *ranges of* a member,
+not the member — the access pattern error-bounded compressors are judged
+on — and the same tallies surface as ``cz_store_*`` series in the global
+metrics registry.  The historical per-instance counters
+(``get_requests`` etc.) remain readable as compat properties.  An optional
 ``latency`` models per-request round-trip cost so ``bench_backends`` can
 show how chunk caching amortizes a remote store.
 """
@@ -20,6 +24,7 @@ from __future__ import annotations
 
 import time
 
+from .instrument import StoreMeter
 from .memory import MemoryStore
 
 __all__ = ["RangeStore"]
@@ -36,42 +41,53 @@ class RangeStore(MemoryStore):
     def __init__(self, name: str | None = None, latency: float = 0.0):
         super().__init__(name)
         self.latency = float(latency)
-        self.get_requests = 0
-        self.range_requests = 0
-        self.put_requests = 0
-        self.bytes_fetched = 0
-        self.bytes_put = 0
+        self.meter = StoreMeter("range")
 
     def _request(self) -> None:
         if self.latency:
             time.sleep(self.latency)
 
+    # -- historical counter attributes, now views over the meter ------------
+
+    @property
+    def get_requests(self) -> int:
+        return self.meter.get_requests
+
+    @property
+    def range_requests(self) -> int:
+        return self.meter.range_requests
+
+    @property
+    def put_requests(self) -> int:
+        return self.meter.put_requests
+
+    @property
+    def bytes_fetched(self) -> int:
+        return self.meter.bytes_fetched
+
+    @property
+    def bytes_put(self) -> int:
+        return self.meter.bytes_put
+
     def get(self, key, byte_range=None):
+        t0 = time.perf_counter()
         self._request()
         data = super().get(key, byte_range)
-        with self._guard:
-            self.get_requests += 1
-            if byte_range is not None:
-                self.range_requests += 1
-            self.bytes_fetched += len(data)
+        self.meter.record("get", len(data), time.perf_counter() - t0,
+                          ranged=byte_range is not None)
         return data
 
     def put(self, key, data):
+        t0 = time.perf_counter()
         self._request()
         super().put(key, data)
-        with self._guard:
-            self.put_requests += 1
-            self.bytes_put += len(data)
+        self.meter.record("put", len(data), time.perf_counter() - t0)
 
     def stats(self) -> dict:
         """Request/traffic counters since construction."""
+        out = self.meter.stats()
+        del out["list_requests"]  # not part of the historical shape
         with self._guard:
-            return {
-                "get_requests": self.get_requests,
-                "range_requests": self.range_requests,
-                "put_requests": self.put_requests,
-                "bytes_fetched": self.bytes_fetched,
-                "bytes_put": self.bytes_put,
-                "objects": len(self._objects),
-                "bytes_stored": sum(map(len, self._objects.values())),
-            }
+            out["objects"] = len(self._objects)
+            out["bytes_stored"] = sum(map(len, self._objects.values()))
+        return out

@@ -1,0 +1,567 @@
+"""repro.obs coverage (ISSUE 7): registry thread-safety, label handling and
+exposition-format validity, Chrome-trace validity and per-rank merge
+ordering, serve ``/metrics`` name/value parity with the pre-registry
+formatter, the store instrumentation wrapper, and the naming lint over
+everything that actually registered."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
+from repro.obs.trace import Tracer, merge_traces
+
+N = 24
+BS = 8
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(autouse=True)
+def _tracer_off():
+    """Every test starts and ends with the process tracer disabled and
+    empty — tracing state is global and must not leak between tests."""
+    obs_trace.disable()
+    obs_trace.reset()
+    yield
+    obs_trace.disable()
+    obs_trace.reset()
+
+
+# ---------------------------------------------------------------------------
+# registry: kinds, labels, validation
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = obs.Registry()
+    c = reg.counter("cz_t_reqs_total", "Requests.")
+    c.inc()
+    c.inc(4)
+    assert c.value() == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+    g = reg.gauge("cz_t_depth", "Queue depth.")
+    g.set(7)
+    g.dec(3)
+    assert g.value() == 4
+
+    h = reg.histogram("cz_t_lat_seconds", "Latency.", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    snap = h.snapshot()
+    assert snap["count"] == 3
+    assert snap["buckets"] == [(0.1, 1), (1.0, 2), (float("inf"), 3)]
+    assert snap["sum"] == pytest.approx(5.55)
+
+
+def test_labelled_series_and_cardinality():
+    reg = obs.Registry()
+    c = reg.counter("cz_t_ops_total", "Ops.", labelnames=("backend", "op"))
+    c.inc(backend="mem", op="get")
+    c.inc(2, backend="mem", op="put")
+    c.inc(backend="file", op="get")
+    assert c.value(backend="mem", op="put") == 2
+    assert c.value(backend="nope", op="get") == 0  # untouched series reads 0
+    assert len(c.samples()) == 4  # the read above materialized its series
+    with pytest.raises(ValueError):
+        c.inc(backend="mem")  # missing a label
+    with pytest.raises(ValueError):
+        c.inc(backend="mem", op="get", extra="x")
+
+
+def test_name_and_help_validation():
+    reg = obs.Registry()
+    with pytest.raises(ValueError):
+        reg.counter("serve_queries", "No cz_ prefix.")
+    with pytest.raises(ValueError):
+        reg.counter("cz_Bad_Case", "Uppercase.")
+    with pytest.raises(ValueError):
+        reg.counter("cz_ok_total", "")
+    with pytest.raises(ValueError):
+        reg.histogram("cz_h_seconds", "le is reserved.", labelnames=("le",))
+
+
+def test_get_or_create_idempotent_and_collisions():
+    reg = obs.Registry()
+    a = reg.counter("cz_t_total", "Help.")
+    assert reg.counter("cz_t_total", "Different help ignored.") is a
+    with pytest.raises(ValueError):
+        reg.gauge("cz_t_total", "Kind mismatch.")
+    with pytest.raises(ValueError):
+        reg.counter("cz_t_total", "Labels mismatch.", labelnames=("x",))
+    with pytest.raises(ValueError):
+        reg.register(obs.Counter("cz_t_total", "Other object."))
+    assert reg.register(a) is a  # same object: idempotent
+
+
+def test_registry_thread_safety_under_concurrent_increments():
+    reg = obs.Registry()
+    c = reg.counter("cz_t_concurrent_total", "Contended.", labelnames=("w",))
+    h = reg.histogram("cz_t_concurrent_seconds", "Contended.",
+                      buckets=(0.5,))
+    nthreads, per = 8, 2000
+
+    def work(i):
+        for _ in range(per):
+            c.inc(w=i % 2)
+            h.observe(0.1)
+
+    ts = [threading.Thread(target=work, args=(i,)) for i in range(nthreads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value(w=0) + c.value(w=1) == nthreads * per
+    assert h.snapshot()["count"] == nthreads * per
+
+
+def test_set_total_and_histogram_load():
+    reg = obs.Registry()
+    c = reg.counter("cz_t_sync_total", "Synced.")
+    c.set_total(41)
+    c.inc()
+    assert c.value() == 42
+
+    src = obs.Histogram("cz_t_src_seconds", "Src.", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 2.0):
+        src.observe(v)
+    dst = reg.histogram("cz_t_dst_seconds", "Dst.", buckets=(0.1, 1.0))
+    dst.load(src.snapshot())
+    assert dst.snapshot() == src.snapshot()
+    with pytest.raises(ValueError):
+        dst.load({"buckets": [(0.1, 1)], "sum": 0.1})  # wrong bucket count
+
+
+def test_render_parse_roundtrip_and_format_validity():
+    reg = obs.Registry()
+    reg.counter("cz_t_a_total", "A.").inc(3)
+    g = reg.gauge("cz_t_b_bytes", "B.", labelnames=("tier",))
+    g.set(10, tier="hot")
+    g.set(20, tier="cold")
+    h = reg.histogram("cz_t_c_seconds", "C.", buckets=(0.1,))
+    h.observe(0.05)
+    text = reg.render()
+
+    # every metric has HELP+TYPE, in registration order
+    helps = [ln.split()[2] for ln in text.splitlines()
+             if ln.startswith("# HELP")]
+    assert helps == ["cz_t_a_total", "cz_t_b_bytes", "cz_t_c_seconds"]
+
+    parsed = obs.parse_prometheus(text)
+    assert parsed["cz_t_a_total"] == [({}, 3.0)]
+    assert ({"tier": "hot"}, 10.0) in parsed["cz_t_b_bytes"]
+    assert ({"tier": "cold"}, 20.0) in parsed["cz_t_b_bytes"]
+    assert ({"le": "0.1"}, 1.0) in parsed["cz_t_c_seconds_bucket"]
+    assert ({"le": "+Inf"}, 1.0) in parsed["cz_t_c_seconds_bucket"]
+    assert parsed["cz_t_c_seconds_count"] == [({}, 1.0)]
+    with pytest.raises(ValueError):
+        obs.parse_prometheus("not a metric line at all !!!")
+
+
+def test_snapshot_shape():
+    reg = obs.Registry()
+    reg.counter("cz_t_snap_total", "S.").inc(2)
+    reg.histogram("cz_t_snap_seconds", "S.", buckets=(1.0,)).observe(0.5)
+    snap = reg.snapshot()
+    assert snap["cz_t_snap_total"]["kind"] == "counter"
+    assert snap["cz_t_snap_total"]["samples"] == [{"labels": {}, "value": 2}]
+    hrow = snap["cz_t_snap_seconds"]["samples"][0]
+    assert hrow["count"] == 1 and hrow["buckets"][0] == [1.0, 1]
+    json.dumps(snap)  # JSON-able end to end
+
+
+# ---------------------------------------------------------------------------
+# trace: span API, Chrome validity, merge ordering
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_records_nothing_and_reuses_null_span():
+    assert not obs_trace.tracing()
+    s1 = obs_trace.span("x", a=1)
+    s2 = obs_trace.span("y")
+    assert s1 is s2  # the shared no-op singleton: no per-span allocation
+    with s1:
+        pass
+    obs_trace.TRACER.record("x", 0, 10)
+    assert obs_trace.TRACER.events() == []
+
+
+def test_span_and_chrome_document():
+    obs_trace.enable()
+    with obs_trace.span("outer", chunk=3):
+        with obs_trace.span("inner"):
+            pass
+    obs_trace.disable()
+    doc = obs_trace.TRACER.chrome()
+    json.dumps(doc)  # valid JSON end to end
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {e["name"] for e in evs} == {"outer", "inner"}
+    assert any(e["name"] == "process_name" for e in meta)
+    assert any(e["name"] == "thread_name" for e in meta)
+    for e in evs:
+        assert e["ts"] >= 0 and e["dur"] >= 0 and e["pid"] and "tid" in e
+    # inner closed first and events are ts-sorted: inner within outer
+    outer = next(e for e in evs if e["name"] == "outer")
+    inner = next(e for e in evs if e["name"] == "inner")
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert outer["args"] == {"chunk": 3}
+    assert "epoch_us" in doc["metadata"]
+
+
+def test_traced_decorator_and_thread_tracks():
+    obs_trace.enable()
+
+    @obs_trace.traced("worker_fn")
+    def fn():
+        return 42
+
+    assert fn() == 42
+    t = threading.Thread(target=fn, name="side")
+    t.start()
+    t.join()
+    evs = obs_trace.TRACER.events()
+    tids = {e["tid"] for e in evs if e["name"] == "worker_fn"}
+    assert len(evs) == 2 and len(tids) == 2  # one track per thread
+    names = {e["args"]["name"]
+             for e in obs_trace.TRACER._metadata_events()
+             if e["name"] == "thread_name"}
+    assert "side" in names
+
+
+def test_merge_traces_ordering_and_pid_assignment(tmp_path):
+    paths = []
+    for r, (epoch, ts0) in enumerate([(2_000_000, 5.0), (1_000_000, 3.0)]):
+        tr = Tracer(process_name=f"rank {r}")
+        tr.enable()
+        tr._epoch_us = epoch  # deterministic anchors for the ordering check
+        tr._events = [{"name": "encode", "ph": "X", "ts": ts0, "dur": 1.0,
+                       "pid": tr.pid, "tid": 0}]
+        p = str(tmp_path / f"r{r}.json")
+        tr.save(p)
+        paths.append(p)
+
+    merged = merge_traces(paths, out=str(tmp_path / "merged.json"),
+                          pids=[0, 1])
+    evs = [e for e in merged["traceEvents"] if e["ph"] == "X"]
+    # doc 1's epoch is 1s earlier -> becomes t=0 base; doc 0 shifts +1e6 us
+    assert [e["pid"] for e in evs] == [1, 0]
+    assert evs[0]["ts"] == pytest.approx(3.0)
+    assert evs[1]["ts"] == pytest.approx(1_000_005.0)
+    assert sorted(e["ts"] for e in evs) == [e["ts"] for e in evs]
+    assert merged["metadata"]["merged_from"] == 2
+    reloaded = json.load(open(tmp_path / "merged.json"))
+    assert reloaded["traceEvents"] == json.loads(
+        json.dumps(merged["traceEvents"]))
+
+
+def test_absorb_shifts_onto_parent_timeline():
+    parent = Tracer()
+    parent.enable()
+    parent._epoch_us = 1_000_000
+    child_doc = {"traceEvents": [
+        {"name": "process_name", "ph": "M", "pid": 999, "tid": 0,
+         "args": {"name": "main"}},
+        {"name": "encode", "ph": "X", "ts": 10.0, "dur": 2.0,
+         "pid": 999, "tid": 0},
+    ], "metadata": {"epoch_us": 1_000_100}}
+    n = parent.absorb(child_doc, pid=3, process_name="rank 3")
+    assert n == 2
+    evs = parent.events()
+    span = next(e for e in evs if e["ph"] == "X")
+    assert span["pid"] == 3 and span["ts"] == pytest.approx(110.0)
+    meta = next(e for e in evs if e["ph"] == "M")
+    assert meta["pid"] == 3 and meta["args"] == {"name": "rank 3"}
+
+
+# ---------------------------------------------------------------------------
+# instrumentation wiring: pipeline, reader, store
+# ---------------------------------------------------------------------------
+
+def _field(n=N):
+    return RNG.normal(size=(n, n, n)).astype(np.float32)
+
+
+def test_pipeline_encode_decode_metrics_and_spans():
+    from repro.core import CompressionSpec, Pipeline
+
+    enc = obs.REGISTRY.get("cz_pipeline_chunks_encoded_total")
+    dec = obs.REGISTRY.get("cz_pipeline_chunks_decoded_total")
+    raw = obs.REGISTRY.get("cz_pipeline_raw_bytes_total")
+    out = obs.REGISTRY.get("cz_pipeline_encoded_bytes_total")
+    e0, d0 = enc.value(scheme="raw"), dec.value(scheme="raw")
+    r0, o0 = raw.value(scheme="raw"), out.value(scheme="raw")
+
+    obs_trace.enable()
+    pipe = Pipeline(CompressionSpec(scheme="raw", block_size=BS,
+                                    buffer_bytes=1 << 12))
+    field = _field()
+    comp = pipe.compress(field)
+    rec = pipe.decompress(comp)
+    obs_trace.disable()
+
+    np.testing.assert_array_equal(rec, field)
+    nchunks = len(comp.chunks)
+    assert nchunks > 1
+    assert enc.value(scheme="raw") - e0 == nchunks
+    assert dec.value(scheme="raw") - d0 == nchunks
+    assert raw.value(scheme="raw") - r0 == field.nbytes
+    assert out.value(scheme="raw") - o0 == sum(len(c) for c in comp.chunks)
+    ratio = obs.REGISTRY.get("cz_pipeline_ratio").value(scheme="raw")
+    assert ratio > 0
+    names = [e["name"] for e in obs_trace.TRACER.events()]
+    assert names.count("encode") == nchunks
+    assert names.count("decode") == nchunks
+    assert "stage1" in names
+    echunks = sorted(e["args"]["chunk"] for e in obs_trace.TRACER.events()
+                     if e["name"] == "encode")
+    assert echunks == list(range(nchunks))
+
+
+def test_reader_fetch_vs_decode_split(tmp_path):
+    from repro.core import CompressionSpec, container
+
+    reads = obs.REGISTRY.get("cz_reader_chunk_reads_total")
+    fetched = obs.REGISTRY.get("cz_reader_fetched_bytes_total")
+    fsec = obs.REGISTRY.get("cz_reader_fetch_seconds")
+    dsec = obs.REGISTRY.get("cz_reader_decode_seconds")
+    h0, m0 = reads.value(result="hit"), reads.value(result="miss")
+    b0 = fetched.value()
+    fc0, dc0 = fsec.snapshot()["count"], dsec.snapshot()["count"]
+
+    path = str(tmp_path / "f.cz")
+    spec = CompressionSpec(scheme="raw", block_size=BS, buffer_bytes=1 << 12)
+    container.write_field(path, _field(), spec)
+    with container.FieldReader(path, cache_chunks=4) as rd:
+        rd.read_block(0, 0, 0)
+        rd.read_block(0, 0, 0)  # second read: LRU hit, no fetch
+    assert reads.value(result="miss") - m0 == 1
+    assert reads.value(result="hit") - h0 == 1
+    assert fetched.value() - b0 > 0
+    assert fsec.snapshot()["count"] - fc0 == 1
+    assert dsec.snapshot()["count"] - dc0 == 1
+
+
+def test_instrumented_store_wrapper_and_open_store_knob():
+    from repro.store.backends import (
+        InstrumentedStore,
+        MemoryStore,
+        open_store,
+    )
+
+    st = InstrumentedStore(MemoryStore())
+    st.put("a/b.cz", b"0123456789")
+    assert st.get("a/b.cz", (2, 6)) == b"2345"
+    assert st.list("a/") == ["a/b.cz"]
+    assert st.exists("a/b.cz")
+    st.put_atomic("m.json", b"{}")
+    s = st.stats()
+    assert s["get_requests"] == 1 and s["range_requests"] == 1
+    assert s["put_requests"] == 2  # put + put_atomic
+    assert s["bytes_fetched"] == 4 and s["bytes_put"] == 12
+    assert s["list_requests"] == 1
+
+    ops = obs.REGISTRY.get("cz_store_ops_total")
+    before = ops.value(backend="mem", op="get")
+    wrapped = open_store("mem://t_obs_knob", instrument=True)
+    assert isinstance(wrapped, InstrumentedStore)
+    wrapped.put("k", b"x")
+    wrapped.get("k")
+    assert ops.value(backend="mem", op="get") - before == 1
+    # idempotent: an instrumented store is not double-wrapped
+    assert open_store(wrapped, instrument=True) is wrapped
+    MemoryStore.drop("t_obs_knob")
+
+
+def test_rangestore_compat_counters_feed_the_meter():
+    from repro.store.backends import RangeStore
+
+    ops = obs.REGISTRY.get("cz_store_ops_total")
+    g0 = ops.value(backend="range", op="get")
+    st = RangeStore()
+    st.put("k", b"x" * 100)
+    st.get("k", (0, 10))
+    st.get("k")
+    # historical attribute views still move
+    assert st.get_requests == 2 and st.range_requests == 1
+    assert st.bytes_fetched == 110 and st.bytes_put == 100
+    assert st.put_requests == 1
+    stats = st.stats()
+    assert stats["objects"] == 1 and stats["bytes_stored"] == 100
+    assert "list_requests" not in stats  # historical stats() shape
+    # and the same traffic landed in the global registry
+    assert ops.value(backend="range", op="get") - g0 == 2
+    with pytest.raises(AttributeError):
+        st.get_requests = 5  # counters are views now, not assignable
+
+
+# ---------------------------------------------------------------------------
+# naming lint: everything registered in the process-wide registry
+# ---------------------------------------------------------------------------
+
+def test_naming_lint_every_registered_metric():
+    # import every instrumented tier so its metrics exist, then lint
+    import repro.core.container  # noqa: F401
+    import repro.core.pipeline  # noqa: F401
+    import repro.cluster.engine  # noqa: F401
+    import repro.store.backends.instrument  # noqa: F401
+
+    assert len(obs.REGISTRY) >= 10
+    for m in obs.REGISTRY:
+        assert obs_registry.NAME_RE.fullmatch(m.name), m.name
+        assert m.help.strip(), f"{m.name} has no help string"
+        assert m.kind in ("counter", "gauge", "histogram")
+        for ln in m.labelnames:
+            assert ln != "le"
+
+
+# ---------------------------------------------------------------------------
+# serve: /metrics parity with the pre-registry formatter
+# ---------------------------------------------------------------------------
+
+#: exact metric names (and order) the PR 5 hand-rolled formatter exposed —
+#: the registry migration must keep /metrics byte-compatible in names.
+SERVE_METRIC_NAMES = [
+    "cz_serve_queries_total",
+    "cz_serve_bytes_served_total",
+    "cz_serve_bytes_decoded_total",
+    "cz_serve_region_cache_hits_total",
+    "cz_serve_region_cache_misses_total",
+    "cz_serve_region_cache_evictions_total",
+    "cz_serve_region_cache_bytes",
+    "cz_serve_chunk_cache_hits_total",
+    "cz_serve_chunk_cache_misses_total",
+    "cz_serve_chunks_decoded_total",
+    "cz_serve_coalesced_requests_total",
+    "cz_serve_request_seconds",
+    "cz_serve_http_responses_total",
+]
+
+
+@pytest.fixture(scope="module")
+def serve_setup(tmp_path_factory):
+    from repro.core import CompressionSpec
+    from repro.serve import RegionHTTPServer
+    from repro.store import CZDataset
+
+    root = str(tmp_path_factory.mktemp("obs_serve") / "ds")
+    spec = CompressionSpec(scheme="raw", block_size=BS, buffer_bytes=1 << 12)
+    with CZDataset(root, "a", spec=spec) as ds:
+        ds.append({"p": _field()}, time=0.0)
+    with RegionHTTPServer(root, port=0).start() as srv:
+        yield srv
+
+
+def test_serve_metrics_name_parity_and_values(serve_setup):
+    from repro.serve import Client
+
+    srv = serve_setup
+    with Client(srv.url) as c:
+        for _ in range(3):
+            c.region("p", 0, (0, 0, 0), (8, 8, 8))
+        text = c.metrics()
+
+        helps = [ln.split()[2] for ln in text.splitlines()
+                 if ln.startswith("# HELP")]
+        types = [ln.split()[2] for ln in text.splitlines()
+                 if ln.startswith("# TYPE")]
+        assert helps == SERVE_METRIC_NAMES
+        assert types == SERVE_METRIC_NAMES
+
+        # the old formatter's literal shapes survive the migration
+        assert "cz_serve_queries_total 3" in text.splitlines()
+        assert 'cz_serve_request_seconds_bucket{le="0.0005"}' in text
+        assert 'cz_serve_request_seconds_bucket{le="+Inf"}' in text
+        assert 'cz_serve_http_responses_total{code="200"}' in text
+
+        # structured access: metric() / metrics_dict() replace text grepping
+        assert c.metric("cz_serve_queries_total") == 3
+        stats = srv.region.stats()
+        assert c.metric("cz_serve_bytes_served_total") == stats["bytes_served"]
+        assert c.metric("cz_serve_http_responses_total",
+                        labels={"code": 200}) >= 3
+        md = c.metrics_dict()
+        assert md["cz_serve_request_seconds_count"][0][1] == stats["queries"]
+        with pytest.raises(KeyError):
+            c.metric("cz_serve_nope_total")
+        with pytest.raises(KeyError):
+            c.metric("cz_serve_http_responses_total", labels={"code": 999})
+        with pytest.raises(KeyError):
+            c.metric("cz_serve_http_responses_total")  # labelled-only metric
+
+
+def test_latency_histogram_is_an_obs_histogram():
+    from repro.serve.region import LATENCY_BUCKETS, LatencyHistogram
+
+    h = LatencyHistogram()
+    assert isinstance(h, obs.Histogram)
+    assert h.name == "cz_serve_request_seconds"
+    assert h.bounds == tuple(LATENCY_BUCKETS)
+    h.observe(0.004)
+    snap = h.snapshot()
+    assert snap["count"] == 1 and snap["sum"] == pytest.approx(0.004)
+    assert snap["buckets"][-1][0] == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# cluster: per-rank trace files merge into one timeline (CLI end-to-end)
+# ---------------------------------------------------------------------------
+
+def test_parallel_cli_writes_merged_rank_trace(tmp_path):
+    from repro.launch.compress import parallel_main
+
+    npy = str(tmp_path / "f.npy")
+    np.save(npy, _field(32))
+    trace_out = str(tmp_path / "t.json")
+    # block 16 at 32^3 -> 8 blocks; 32 KiB buffers -> 2 blocks/chunk
+    # -> 4 chunks across 2 ranks: every rank encodes and commits
+    rc = parallel_main([
+        "--ranks", "2", "--source", "npy", "--npy", npy,
+        "--scheme", "raw", "--block-size", "16",
+        "--buffer-bytes", str(32 << 10),
+        "--out", str(tmp_path / "out"), "--trace", trace_out,
+    ])
+    assert rc == 0
+
+    doc = json.load(open(trace_out))
+    evs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    names = {e["name"] for e in evs}
+    assert {"encode", "exscan", "commit"} <= names
+
+    # one track per rank, carrying that rank's encode + commit spans
+    parent_pid = None
+    for e in evs:
+        if e["name"] == "exscan":
+            parent_pid = e["pid"]
+    assert parent_pid is not None
+    for rank in (0, 1):
+        rank_names = {e["name"] for e in evs if e["pid"] == rank}
+        assert "encode" in rank_names, f"rank {rank} has no encode span"
+        assert "commit" in rank_names, f"rank {rank} has no commit span"
+    assert len({e["pid"] for e in evs}) >= 3  # parent + 2 rank tracks
+    rank_meta = {e["args"]["name"]
+                 for e in doc["traceEvents"]
+                 if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"rank 0", "rank 1"} <= rank_meta
+
+    # rank encode spans carry the pipeline's per-chunk events too
+    assert any(e["pid"] in (0, 1) and e["name"] == "encode"
+               and "chunk" in e.get("args", {}) for e in evs)
+
+    # timestamps are globally sorted (the merge contract)
+    ts = [e["ts"] for e in doc["traceEvents"] if e.get("ph") != "M"]
+    assert ts == sorted(ts)
+
+    # no rank trace temp files leak next to the output
+    leftovers = [p for p in (tmp_path / "out").iterdir()
+                 if "trace" in p.name]
+    assert leftovers == []
+
+    # phase timing landed in the registry as well
+    ph = obs.REGISTRY.get("cz_cluster_phase_seconds")
+    for phase in ("encode", "exscan", "commit"):
+        assert ph.snapshot(phase=phase)["count"] >= 1
