@@ -6,6 +6,14 @@ returning to the same vortex core) and report p50/p99 request latency,
 throughput, and where the queries were answered: decoded-region LRU vs
 chunk LRU vs cold decode.
 
+The run is two-phase: the identical load is driven once with tail-based
+trace sampling **disabled** and once **enabled** (the production default),
+so the record quantifies the sampling overhead at the median
+(``sampling_overhead_pct``) and verifies the ``/debug/traces`` contract —
+only error/slow-tail requests retained, within the byte budget, every
+retained trace carrying the request ID its response echoed in
+``X-CZ-Request-Id``.
+
 The dataset lives in a ``mem://`` store — no scratch directory, and the
 serve tier is exercised end-to-end over a non-file backend (URL root ->
 CZDataset -> byte-ranged reads).
@@ -14,6 +22,7 @@ from __future__ import annotations
 
 import threading
 import time
+from http.client import HTTPConnection
 
 import numpy as np
 
@@ -27,6 +36,84 @@ from .common import dataset, emit, save_json
 def _zipf_weights(k: int, a: float = 1.1) -> np.ndarray:
     w = 1.0 / np.arange(1, k + 1) ** a
     return w / w.sum()
+
+
+def _drive(srv, qois, lows, box, n_threads, n_req, weights):
+    """One load phase against a started server: a cold pass over every
+    candidate region, then the zipf-hot timed phase.  Returns
+    ``(cold_ms, lat_ms, wall_s)``."""
+    n_regions = len(lows)
+    cold = []
+    with Client(srv.url) as c:
+        for q in qois:
+            for lo in lows:
+                t1 = time.perf_counter()
+                c.region(q, 0, lo, lo + box)
+                cold.append(time.perf_counter() - t1)
+
+    lats: list[list[float]] = [[] for _ in range(n_threads)]
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i: int) -> None:
+        c = Client(srv.url)
+        trng = np.random.default_rng(100 + i)
+        barrier.wait()
+        for k in range(n_req):
+            lo = lows[trng.choice(n_regions, p=weights)]
+            t1 = time.perf_counter()
+            c.region(qois[k % len(qois)], 0, lo, lo + box)
+            lats[i].append(time.perf_counter() - t1)
+        c.close()
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    cold_ms = np.asarray(cold) * 1e3
+    lat_ms = np.concatenate([np.asarray(ts) for ts in lats]) * 1e3
+    return cold_ms, lat_ms, wall
+
+
+def _error_request(srv, rid: str) -> str | None:
+    """One deliberately failing request with a client-chosen request ID;
+    returns the ID the response echoed back."""
+    host, port = srv.server_address[:2]
+    conn = HTTPConnection(host, port, timeout=30)
+    try:
+        conn.request("GET", "/v1/region/no_such_quantity/0"
+                            "?lo=0,0,0&hi=8,8,8",
+                     headers={"X-CZ-Request-Id": rid})
+        r = conn.getresponse()
+        r.read()
+        return r.getheader("X-CZ-Request-Id")
+    finally:
+        conn.close()
+
+
+def _traces_readout(srv, err_rid: str, echoed: str | None) -> dict:
+    """The /debug/traces contract, checked live and recorded."""
+    with Client(srv.url) as c:
+        doc = c.traces()
+    traces, stats = doc["traces"], doc["stats"]
+    kept_ids = [t["request_id"] for t in traces]
+    return {
+        "retained": len(traces),
+        "reasons": sorted({t["reason"] for t in traces}),
+        "bytes": stats["bytes"],
+        "budget_bytes": stats["budget_bytes"],
+        "within_budget": stats["bytes"] <= stats["budget_bytes"],
+        "threshold_ms": stats["threshold_s"] * 1e3,
+        "sampled": stats["sampled"],
+        "all_have_request_id": all(kept_ids),
+        "only_error_or_slow": all(t["reason"] in ("error", "slow")
+                                  for t in traces),
+        "error_id_echoed": echoed == err_rid,
+        "error_trace_kept": err_rid in kept_ids,
+    }
 
 
 def run(quick: bool = True):
@@ -47,49 +134,30 @@ def run(quick: bool = True):
     rng = np.random.default_rng(7)
     lows = rng.integers(0, n - box, (n_regions, 3))
     weights = _zipf_weights(n_regions)
+    srv_kw = dict(port=0, cache_bytes=32 << 20, cache_chunks=32,
+                  max_inflight=n_threads)
 
-    lats: list[list[float]] = [[] for _ in range(n_threads)]
-    barrier = threading.Barrier(n_threads)
-
-    with RegionHTTPServer(root, port=0, cache_bytes=32 << 20,
-                          cache_chunks=32, max_inflight=n_threads) as srv:
+    # phase 1: sampling disabled — the overhead baseline
+    with RegionHTTPServer(root, sample=False, **srv_kw) as srv:
         srv.start()
+        _, base_ms, _ = _drive(srv, qois, lows, box, n_threads, n_req,
+                               weights)
 
-        # cold pass: one client walks every candidate region once, so the
-        # timed phase below measures the steady state (and this measures the
-        # decode-bound worst case)
-        cold = []
-        with Client(srv.url) as c:
-            for q in qois:
-                for lo in lows:
-                    t1 = time.perf_counter()
-                    c.region(q, 0, lo, lo + box)
-                    cold.append(time.perf_counter() - t1)
-        cold_ms = np.asarray(cold) * 1e3
-
-        def worker(i: int) -> None:
-            c = Client(srv.url)
-            trng = np.random.default_rng(100 + i)
-            barrier.wait()
-            for k in range(n_req):
-                lo = lows[trng.choice(n_regions, p=weights)]
-                t1 = time.perf_counter()
-                c.region(qois[k % len(qois)], 0, lo, lo + box)
-                lats[i].append(time.perf_counter() - t1)
-            c.close()
-
-        threads = [threading.Thread(target=worker, args=(i,))
-                   for i in range(n_threads)]
-        t0 = time.perf_counter()
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        wall = time.perf_counter() - t0
+    # phase 2: sampling enabled (the production default) — same load, plus
+    # one deliberate error request so /debug/traces has a kept-on-error
+    # entry whose response header we can check against the retained trace
+    with RegionHTTPServer(root, sample=True, **srv_kw) as srv:
+        srv.start()
+        cold_ms, lat_ms, wall = _drive(srv, qois, lows, box, n_threads,
+                                       n_req, weights)
+        err_rid = "bench-err-0001"
+        echoed = _error_request(srv, err_rid)
+        debug = _traces_readout(srv, err_rid, echoed)
         stats = srv.region.stats()
 
-    lat_ms = np.concatenate([np.asarray(ts) for ts in lats]) * 1e3
     p50, p99 = np.percentile(lat_ms, [50, 99])
+    base_p50 = float(np.percentile(base_ms, 50))
+    overhead_pct = 100.0 * (float(p50) - base_p50) / base_p50
     total = n_threads * n_req
     rps = total / wall
     region_hr = stats["region_cache_hit_rate"] or 0.0
@@ -100,11 +168,14 @@ def run(quick: bool = True):
         "n": n, "box": box, "threads": n_threads, "requests": total,
         "n_regions": n_regions, "wall_s": wall, "rps": rps,
         "p50_ms": float(p50), "p99_ms": float(p99),
+        "p50_nosample_ms": base_p50,
+        "sampling_overhead_pct": overhead_pct,
         "cold_p50_ms": float(np.percentile(cold_ms, 50)),
         "cold_p99_ms": float(np.percentile(cold_ms, 99)),
         "region_cache_hit_rate": region_hr,
         "chunk_cache_hit_rate": chunk_hr,
         "decode_amplification": amplification,
+        "debug_traces": debug,
         "server_stats": stats,
     }
     emit("serve_p50", p50 * 1e3, f"{rps:.0f}rps")
@@ -113,6 +184,10 @@ def run(quick: bool = True):
          f"{len(cold_ms)}regions")
     emit("serve_hit_rate", region_hr * 1e6,
          f"region{region_hr:.2f}_chunk{chunk_hr:.2f}")
+    emit("serve_sampling_overhead", overhead_pct * 1e3,
+         f"p50_{p50:.2f}ms_vs_{base_p50:.2f}ms")
+    emit("serve_traces_kept", debug["retained"],
+         f"{debug['bytes']}B_of_{debug['budget_bytes']}B")
     MemoryStore.drop("bench_serve")
     path = save_json("serve", results)
     print(f"# wrote {path}")

@@ -1,0 +1,117 @@
+"""Self-contained terminal dashboard for a running ``cz-compress serve``.
+
+No Grafana required: polls ``/metrics`` and ``/debug/traces`` and redraws a
+compact panel — request rate, latency percentiles from the histogram
+buckets, cache hit rates, tail-sampling status, and the most recent kept
+traces with their request IDs (fetch one in full with
+``curl $URL/debug/traces/<id>``).
+
+Usage::
+
+    PYTHONPATH=src python examples/dashboard/serve_dashboard.py \
+        http://127.0.0.1:8423 [--interval 2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.serve.http import Client
+
+
+def _quantile(buckets: list[tuple[dict, float]], q: float) -> float:
+    """Percentile estimate from cumulative ``_bucket`` samples (upper bound
+    of the first bucket whose cumulative count reaches the target)."""
+    rows = sorted(((float(lbl["le"]), val) for lbl, val in buckets
+                   if lbl.get("le") not in (None, "+Inf")),
+                  key=lambda r: r[0])
+    inf = next((val for lbl, val in buckets if lbl.get("le") == "+Inf"), 0.0)
+    total = max(inf, rows[-1][1] if rows else 0.0)
+    if total <= 0:
+        return 0.0
+    target = q * total
+    for bound, cum in rows:
+        if cum >= target:
+            return bound
+    return rows[-1][0] if rows else 0.0
+
+
+def _rate(cur: float, prev: float | None, dt: float) -> str:
+    if prev is None or dt <= 0:
+        return "-"
+    return f"{(cur - prev) / dt:,.1f}/s"
+
+
+def draw(client: Client, prev: dict | None, dt: float) -> dict:
+    md = client.metrics_dict()
+
+    def scalar(name, default=0.0):
+        rows = md.get(name)
+        return rows[0][1] if rows else default
+
+    queries = scalar("cz_serve_queries_total")
+    decoded = scalar("cz_serve_bytes_decoded_total")
+    served = scalar("cz_serve_bytes_served_total")
+    rhits = scalar("cz_serve_region_cache_hits_total")
+    rmiss = scalar("cz_serve_region_cache_misses_total")
+    buckets = md.get("cz_serve_request_seconds_bucket", [])
+    p50 = _quantile(buckets, 0.50)
+    p99 = _quantile(buckets, 0.99)
+
+    lines = [
+        f"cz-serve dashboard  {time.strftime('%H:%M:%S')}",
+        "",
+        f"  queries   {int(queries):>12,}   "
+        f"rate {_rate(queries, (prev or {}).get('queries'), dt):>12}",
+        f"  latency   p50 {p50 * 1e3:>8.2f} ms   p99 {p99 * 1e3:>8.2f} ms",
+        f"  region$   {rhits / max(1.0, rhits + rmiss):>11.1%} hit   "
+        f"coalesced {int(scalar('cz_serve_coalesced_requests_total')):,}",
+        f"  bytes     decoded {decoded / 2**20:>10.1f} MiB   "
+        f"served {served / 2**20:>10.1f} MiB",
+    ]
+    try:
+        tr = client.traces()
+    except IOError:
+        lines.append("  sampling  disabled (--no-sample)")
+    else:
+        st = tr["stats"]
+        lines.append(
+            f"  sampling  kept {st['kept_error'] + st['kept_slow']:>4} "
+            f"({st['kept_error']} err / {st['kept_slow']} slow)   "
+            f"{st['bytes'] / 2**10:,.0f}/{st['budget_bytes'] / 2**10:,.0f} "
+            f"KiB   thresh {st['threshold_s'] * 1e3:.1f} ms")
+        if tr["traces"]:
+            lines.append("")
+            lines.append("  recent kept traces (newest last):")
+            for rec in tr["traces"][-5:]:
+                err = f"  {rec['error']}" if rec["error"] else ""
+                lines.append(
+                    f"    {rec['request_id']:<18} {rec['reason']:<5} "
+                    f"{rec['duration_ms']:>9.2f} ms  "
+                    f"{rec['events']:>4} spans{err}")
+    sys.stdout.write("\x1b[2J\x1b[H" + "\n".join(lines) + "\n")
+    sys.stdout.flush()
+    return {"queries": queries}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("url", help="base URL of a running cz-compress serve")
+    ap.add_argument("--interval", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    prev: dict | None = None
+    last = time.perf_counter()
+    with Client(args.url) as client:
+        try:
+            while True:
+                now = time.perf_counter()
+                prev = draw(client, prev, now - last)
+                last = now
+                time.sleep(args.interval)
+        except KeyboardInterrupt:
+            return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -458,7 +458,7 @@ class FieldReader:
             _FETCHED.inc(len(buf))
             _FETCH_SECONDS.observe((t1 - t0) / 1e9)
             _DECODE_SECONDS.observe((t2 - t1) / 1e9)
-            trace.TRACER.record("fetch", t0, t1, chunk=ci, bytes=len(buf))
+            trace.record("fetch", t0, t1, chunk=ci, bytes=len(buf))
             self._cache[ci] = out
             while len(self._cache) > self._cache_chunks:
                 self._cache.popitem(last=False)

@@ -92,9 +92,9 @@ def _account_encode(scheme: str, ci: int, raw: int, enc: int,
     if total_enc:
         _RATIO.set(total_raw / total_enc, scheme=scheme)
     _ENC_SECONDS.observe((t1_ns - t0_ns) / 1e9, scheme=scheme)
-    trace.TRACER.record("encode", t0_ns, t1_ns, chunk=ci, scheme=scheme,
-                        raw_bytes=raw, encoded_bytes=enc,
-                        ratio=round(raw / enc, 3) if enc else None)
+    trace.record("encode", t0_ns, t1_ns, chunk=ci, scheme=scheme,
+                 raw_bytes=raw, encoded_bytes=enc,
+                 ratio=round(raw / enc, 3) if enc else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -313,8 +313,8 @@ class Pipeline:
         t1 = time.perf_counter_ns()
         _DEC_CHUNKS.inc(scheme=spec.scheme)
         _DEC_SECONDS.observe((t1 - t0) / 1e9, scheme=spec.scheme)
-        trace.TRACER.record("decode", t0, t1, scheme=spec.scheme, nblocks=nblk,
-                            encoded_bytes=len(buf))
+        trace.record("decode", t0, t1, scheme=spec.scheme, nblocks=nblk,
+                     encoded_bytes=len(buf))
         return out
 
     def decompress_blocks(self, comp: CompressedField) -> np.ndarray:

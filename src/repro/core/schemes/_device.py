@@ -22,8 +22,16 @@ from __future__ import annotations
 
 import warnings
 
+from repro import obs
+from repro.obs import events as _events
+
 __all__ = ["DEVICES", "DeviceFallbackWarning", "check_device", "kernel_ops",
            "resolve_ops", "route", "resolved_device"]
+
+_FALLBACKS = obs.counter(
+    "cz_kernel_fallbacks_total",
+    "device='jax' requests that fell back to the host path "
+    "(Pallas toolchain unavailable).")
 
 #: devices a spec may name (recorded in CZ2 headers, validated everywhere)
 DEVICES = ("host", "jax")
@@ -69,6 +77,9 @@ def resolve_ops(spec):
         return None
     ops = kernel_ops()
     if ops is None:
+        _FALLBACKS.inc()
+        _events.event("device.fallback", level="warn", requested="jax",
+                      used="host")
         warnings.warn(
             "device='jax' requested but repro.kernels.ops is unavailable "
             "(no Pallas toolchain); stage 1 falling back to the host path",

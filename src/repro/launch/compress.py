@@ -332,9 +332,108 @@ def serve_main(argv) -> int:
     return http_main(argv)
 
 
+def _stats_fetch(source: str | None) -> str:
+    """One metrics snapshot as Prometheus text, from any stats source."""
+    from repro import obs
+
+    if source is None:
+        return obs.render()
+    if source.startswith(("http://", "https://")):
+        from urllib.request import urlopen
+
+        with urlopen(source.rstrip("/") + "/metrics") as r:
+            return r.read().decode()
+    if source == "-":
+        return sys.stdin.read()
+    with open(source) as f:
+        return f.read()
+
+
+def _metrics_table(samples: dict, buckets: bool) -> str:
+    width = max((len(n) for n in samples), default=10)
+    lines = []
+    for name, rows in samples.items():
+        if not buckets and name.endswith("_bucket"):
+            continue
+        for lbl, val in rows:
+            ls = ",".join(f"{k}={v}" for k, v in lbl.items())
+            ls = f"{{{ls}}}" if ls else ""
+            v = int(val) if float(val).is_integer() else round(val, 6)
+            lines.append(f"{name:<{width}} {ls:<28} {v}")
+    return "\n".join(lines)
+
+
+def _stats_flatten(doc: dict) -> dict:
+    """Normalize any saved snapshot shape into ``{(name, labelstr): value}``.
+
+    Accepts all three JSON shapes this repo writes: ``cz-compress stats
+    --json`` output, a raw :func:`repro.obs.snapshot` dump, and a bench
+    record (``BENCH_*.json``, whose registry dump sits under ``"registry"``).
+    Histogram samples flatten to ``name_count`` / ``name_sum`` entries.
+    """
+    if isinstance(doc.get("registry"), dict) and "schema" in doc:
+        doc = doc["registry"]  # a BENCH_*.json record
+    out: dict[tuple[str, str], float] = {}
+    for name, val in doc.items():
+        rows = val.get("samples") if isinstance(val, dict) else val
+        if not isinstance(rows, list):
+            continue
+        for row in rows:
+            if not isinstance(row, dict):
+                continue
+            lbl = row.get("labels") or {}
+            key = ",".join(f"{k}={v}" for k, v in sorted(lbl.items()))
+            if "value" in row:
+                out[(name, key)] = float(row["value"])
+            else:  # histogram sample: count + sum are the comparable scalars
+                out[(f"{name}_count", key)] = float(row.get("count", 0))
+                out[(f"{name}_sum", key)] = float(row.get("sum", 0.0))
+    return out
+
+
+def _stats_diff(path_a: str, path_b: str, as_json: bool) -> int:
+    """``cz-compress stats --diff A.json B.json``: what changed between two
+    snapshots (e.g. two bench records, or before/after of one serve run)."""
+    with open(path_a) as f:
+        a = _stats_flatten(json.load(f))
+    with open(path_b) as f:
+        b = _stats_flatten(json.load(f))
+    rows = []
+    for key in sorted(set(a) | set(b)):
+        va, vb = a.get(key), b.get(key)
+        delta = (vb or 0.0) - (va or 0.0)
+        if delta == 0.0 and va is not None and vb is not None:
+            continue  # unchanged — noise in a delta report
+        rows.append({"name": key[0], "labels": key[1], "a": va, "b": vb,
+                     "delta": delta})
+    if as_json:
+        json.dump({"a": path_a, "b": path_b, "changed": rows},
+                  sys.stdout, indent=1)
+        print()
+        return 0
+    if not rows:
+        print("no differences")
+        return 0
+    width = max(len(r["name"]) for r in rows)
+
+    def fmt(v):
+        if v is None:
+            return "-"
+        return str(int(v)) if float(v).is_integer() else f"{v:.6g}"
+
+    for r in rows:
+        ls = f"{{{r['labels']}}}" if r["labels"] else ""
+        sign = "+" if r["delta"] >= 0 else ""
+        print(f"{r['name']:<{width}} {ls:<28} "
+              f"{fmt(r['a'])} -> {fmt(r['b'])}  ({sign}{fmt(r['delta'])})")
+    return 0
+
+
 def stats_main(argv) -> int:
     """Pretty-print a metrics snapshot: a running serve endpoint's
-    ``/metrics``, saved exposition text, or this process's registry."""
+    ``/metrics``, saved exposition text, or this process's registry —
+    optionally live (``--watch``) or as a delta of two saved snapshots
+    (``--diff``)."""
     from repro import obs
 
     ap = argparse.ArgumentParser(
@@ -348,37 +447,44 @@ def stats_main(argv) -> int:
                     help="machine-readable JSON instead of the table")
     ap.add_argument("--buckets", action="store_true",
                     help="include histogram bucket rows")
+    ap.add_argument("--watch", type=float, metavar="SECS",
+                    help="redraw the table every SECS seconds until Ctrl-C "
+                         "(live view of a serve endpoint)")
+    ap.add_argument("--diff", nargs=2, metavar=("A.json", "B.json"),
+                    help="print the metric delta between two JSON snapshots "
+                         "(stats --json output or BENCH_*.json records) "
+                         "and exit")
     args = ap.parse_args(argv)
 
-    if args.source is None:
-        text = obs.render()
-    elif args.source.startswith(("http://", "https://")):
-        from urllib.request import urlopen
+    if args.diff:
+        return _stats_diff(args.diff[0], args.diff[1], args.json)
 
-        with urlopen(args.source.rstrip("/") + "/metrics") as r:
-            text = r.read().decode()
-    elif args.source == "-":
-        text = sys.stdin.read()
-    else:
-        with open(args.source) as f:
-            text = f.read()
+    if args.watch:
+        if args.source == "-":
+            ap.error("--watch cannot re-read stdin; give a URL or file")
+        if args.watch <= 0:
+            ap.error("--watch needs a positive interval")
+        try:
+            while True:
+                samples = obs.parse_prometheus(_stats_fetch(args.source))
+                table = _metrics_table(samples, args.buckets)
+                # clear screen + home, then one coherent frame
+                sys.stdout.write(
+                    f"\x1b[2J\x1b[H{args.source or '(process registry)'}  "
+                    f"every {args.watch:g}s  (Ctrl-C to stop)\n{table}\n")
+                sys.stdout.flush()
+                time.sleep(args.watch)
+        except KeyboardInterrupt:
+            return 0
 
-    samples = obs.parse_prometheus(text)
+    samples = obs.parse_prometheus(_stats_fetch(args.source))
     if args.json:
         json.dump({name: [{"labels": lbl, "value": val}
                           for lbl, val in rows]
                    for name, rows in samples.items()}, sys.stdout, indent=1)
         print()
         return 0
-    width = max((len(n) for n in samples), default=10)
-    for name, rows in samples.items():
-        if not args.buckets and name.endswith("_bucket"):
-            continue
-        for lbl, val in rows:
-            ls = ",".join(f"{k}={v}" for k, v in lbl.items())
-            ls = f"{{{ls}}}" if ls else ""
-            v = int(val) if float(val).is_integer() else round(val, 6)
-            print(f"{name:<{width}} {ls:<28} {v}")
+    print(_metrics_table(samples, args.buckets))
     return 0
 
 

@@ -1,18 +1,31 @@
-"""repro.obs — unified observability: metrics registry + span tracing.
+"""repro.obs — unified observability: metrics, traces, events, sampling.
 
-Two stdlib-only modules:
+Five stdlib-only modules:
 
 * :mod:`repro.obs.registry` — thread-safe ``Counter``/``Gauge``/
-  ``Histogram`` with labels, a process-wide default ``REGISTRY``, and
-  Prometheus text exposition (``render``) / JSON snapshots (``snapshot``).
+  ``Histogram`` (with OpenMetrics exemplars) with labels, a process-wide
+  default ``REGISTRY``, and Prometheus text exposition (``render``) /
+  JSON snapshots (``snapshot``).
 * :mod:`repro.obs.trace` — ``with span("encode", chunk=i):`` span API
   exporting Chrome trace-event JSON (Perfetto-viewable), disabled by
   default at near-zero cost, with cross-process merge for the cluster
   engine's per-rank traces.
+* :mod:`repro.obs.context` — request-scoped correlation: a contextvars
+  request ID (``X-CZ-Request-Id`` at the HTTP front) stamped onto every
+  span and event a request touches, plus bounded per-request span
+  collection.
+* :mod:`repro.obs.events` — structured JSON-lines event log (level, ts,
+  request_id, fields); the in-package replacement for ``print``
+  diagnostics.
+* :mod:`repro.obs.sampling` — always-on tail-based trace sampling: every
+  serve request is traced into its request context, and completed traces
+  are kept only on error or above the live latency-tail threshold, within
+  a byte budget (``GET /debug/traces``).
 
 Every tier (pipeline, container reader, store backends, cluster engine,
-serve) instruments through this package; ``cz-compress ... --trace`` and
-``cz-compress stats`` surface it on the CLI.
+device kernels, serve) instruments through this package;
+``cz-compress ... --trace`` and ``cz-compress stats`` surface it on the
+CLI.
 """
 from repro.obs.registry import (  # noqa: F401
     DEFAULT_BUCKETS,
@@ -38,11 +51,19 @@ from repro.obs.trace import (  # noqa: F401
     traced,
     tracing,
 )
+from repro.obs import context  # noqa: F401
+from repro.obs import events  # noqa: F401
+from repro.obs import sampling  # noqa: F401
 from repro.obs import trace  # noqa: F401
+from repro.obs.context import RequestContext, new_request_id, request_id  # noqa: F401
+from repro.obs.events import event  # noqa: F401
+from repro.obs.sampling import TailSampler  # noqa: F401
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Metric", "Registry", "REGISTRY",
     "DEFAULT_BUCKETS", "FAST_BUCKETS", "counter", "gauge", "histogram",
     "render", "snapshot", "parse_prometheus",
     "Tracer", "TRACER", "span", "traced", "tracing", "trace", "merge_traces",
+    "context", "RequestContext", "new_request_id", "request_id",
+    "events", "event", "sampling", "TailSampler",
 ]

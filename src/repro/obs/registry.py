@@ -34,6 +34,7 @@ from __future__ import annotations
 import bisect
 import re
 import threading
+import time
 from typing import Iterator
 
 __all__ = ["Counter", "Gauge", "Histogram", "Metric", "Registry", "REGISTRY",
@@ -173,11 +174,12 @@ class Gauge(Metric):
 
 
 class _HistSeries:
-    __slots__ = ("counts", "sum")
+    __slots__ = ("counts", "sum", "exemplars")
 
     def __init__(self, nbuckets: int):
         self.counts = [0] * nbuckets   # per-bucket (not cumulative); last=+Inf
         self.sum = 0.0
+        self.exemplars: dict | None = None  # lazily {bucket_i: exemplar}
 
 
 class Histogram(Metric):
@@ -218,6 +220,33 @@ class Histogram(Metric):
             cum += c
             rows.append((bound, cum))
         return {"buckets": rows, "sum": total, "count": cum}
+
+    def exemplar(self, value: float, trace_id: str, **labels) -> None:
+        """Attach an exemplar to the bucket ``value`` falls in — the
+        OpenMetrics link from a ``/metrics`` bucket to a kept trace ID (the
+        tail sampler calls this for every retained trace).  One exemplar
+        per bucket is kept (latest wins)."""
+        i = bisect.bisect_left(self.bounds, value)
+        key = self._key(labels)
+        with self._lock:
+            s = self._series.get(key)
+            if s is None:
+                s = self._series[key] = self._zero()
+            if s.exemplars is None:
+                s.exemplars = {}
+            s.exemplars[i] = {"trace_id": str(trace_id),
+                              "value": float(value),
+                              "ts": round(time.time(), 3)}
+
+    def exemplars(self, **labels) -> dict:
+        """``{le_bound: {"trace_id", "value", "ts"}}`` for one series
+        (empty if none attached)."""
+        key = self._key(labels)
+        with self._lock:
+            s = self._series.get(key)
+            ex = dict(s.exemplars) if s is not None and s.exemplars else {}
+        bounds = self.bounds + (float("inf"),)
+        return {bounds[i]: dict(v) for i, v in ex.items()}
 
     def load(self, snap: dict, **labels) -> None:
         """Overwrite one series from a :meth:`snapshot`-shaped dict (the
@@ -332,11 +361,19 @@ class Registry:
             if isinstance(m, Histogram):
                 for labels, _ in m.samples():
                     snap = m.snapshot(**labels)
+                    ex = m.exemplars(**labels)
                     values = tuple(labels[k] for k in m.labelnames)
                     for bound, cum in snap["buckets"]:
                         le = "+Inf" if bound == float("inf") else repr(bound)
                         ls = _labelstr(m.labelnames, values, f'le="{le}"')
-                        lines.append(f"{m.name}_bucket{ls} {cum}")
+                        line = f"{m.name}_bucket{ls} {cum}"
+                        e = ex.get(bound)
+                        if e is not None:
+                            # OpenMetrics exemplar syntax: links this bucket
+                            # to a kept tail-trace ID in /debug/traces
+                            line += (f' # {{trace_id="{_escape(e["trace_id"])}"'
+                                     f'}} {e["value"]} {e["ts"]}')
+                        lines.append(line)
                     ls = _labelstr(m.labelnames, values)
                     lines.append(f"{m.name}_sum{ls} {snap['sum']}")
                     lines.append(f"{m.name}_count{ls} {snap['count']}")
@@ -414,6 +451,11 @@ def parse_prometheus(text: str) -> dict[str, list[tuple[dict, float]]]:
         line = line.strip()
         if not line or line.startswith("#"):
             continue
+        # OpenMetrics exemplar suffix ('value # {labels} ex_value ts') —
+        # tolerated and dropped: exemplars link buckets to trace IDs for
+        # humans/Perfetto, parse keeps the sample shape stable
+        if " # " in line:
+            line = line.split(" # ", 1)[0].rstrip()
         m = _SAMPLE_RE.match(line)
         if not m:
             raise ValueError(f"unparseable exposition line: {line!r}")

@@ -29,8 +29,10 @@ import os
 import threading
 import time
 
+from repro.obs import context as _context
+
 __all__ = ["Tracer", "TRACER", "span", "traced", "tracing", "enable",
-           "disable", "reset", "save", "merge_traces"]
+           "disable", "record", "reset", "save", "merge_traces"]
 
 
 class _NullSpan:
@@ -61,9 +63,24 @@ class _Span:
         return self
 
     def __exit__(self, *exc):
-        self._tracer.record(self._name, self._t0, time.perf_counter_ns(),
-                            **self._args)
+        _emit(self._tracer, self._name, self._t0, time.perf_counter_ns(),
+              self._args)
         return False
+
+
+def _emit(tracer: "Tracer", name: str, t0_ns: int, t1_ns: int,
+          args: dict) -> None:
+    """Deliver one completed span to the tracer *and* the active request
+    context: the request ID is stamped onto the tracer event (so one slow
+    query is findable on the Perfetto timeline) and, when the context is
+    collecting, the span joins the per-request timeline the tail sampler
+    may keep."""
+    ctx = _context.current()
+    if ctx is not None:
+        if args.get("rid") is None:
+            args = {**args, "rid": ctx.rid} if args else {"rid": ctx.rid}
+        ctx.record(name, t0_ns, t1_ns, args)
+    tracer.record(name, t0_ns, t1_ns, **args)
 
 
 class Tracer:
@@ -223,10 +240,26 @@ TRACER = Tracer()
 
 
 def span(name: str, **args):
-    """``with span("encode", chunk=i): ...`` against the process tracer."""
-    if not TRACER.enabled:
-        return _NULL
-    return _Span(TRACER, name, args)
+    """``with span("encode", chunk=i): ...`` against the process tracer.
+
+    Live when the process tracer is enabled **or** the calling thread is
+    inside a collecting request context (the serve tier's tail sampling) —
+    otherwise the shared no-op singleton, so uninstrumented runs pay two
+    cheap checks."""
+    if TRACER.enabled:
+        return _Span(TRACER, name, args)
+    ctx = _context.current()
+    if ctx is not None and ctx.collecting:
+        return _Span(TRACER, name, args)
+    return _NULL
+
+
+def record(name: str, t0_ns: int, t1_ns: int, **args) -> None:
+    """Record one already-timed span against the process tracer *and* the
+    active request context (instrumentation that computes byte counts after
+    the fact uses this instead of :func:`span`)."""
+    if TRACER.enabled or _context.current() is not None:
+        _emit(TRACER, name, t0_ns, t1_ns, args)
 
 
 def traced(name: str | None = None, **cargs):
@@ -239,9 +272,7 @@ def traced(name: str | None = None, **cargs):
 
         @functools.wraps(fn)
         def wrapper(*a, **k):
-            if not TRACER.enabled:
-                return fn(*a, **k)
-            with TRACER.span(label, **cargs):
+            with span(label, **cargs):
                 return fn(*a, **k)
 
         return wrapper

@@ -18,9 +18,23 @@ Endpoints
 ``GET /healthz``
     Liveness probe (``200 ok``).
 ``GET /metrics``
-    Prometheus text format: query count, request-latency histogram,
-    region- and chunk-cache hits/misses, bytes decoded vs bytes served,
-    coalesced flights, responses by status code.
+    Prometheus text format: query count, request-latency histogram (with
+    OpenMetrics exemplars pointing at kept tail traces), region- and
+    chunk-cache hits/misses, bytes decoded vs bytes served, coalesced
+    flights, tail-sampling counters, responses by status code.
+``GET /debug/traces``
+    Tail-sampled trace retention: summaries of every kept trace (errored
+    or slow-tail requests only) plus sampler stats.
+``GET /debug/traces/{request_id}[?format=chrome]``
+    One kept trace in full — ``format=chrome`` re-shapes it as a Chrome
+    trace-event document loadable in Perfetto.
+``GET /debug/events[?n=50]``
+    The tail of the in-process structured event ring.
+
+Request correlation: every response carries an ``X-CZ-Request-Id`` header
+— minted per request, or echoed from the client's own header when it sends
+a well-formed one — and the same ID is stamped on every span and event the
+request touches, kept tail traces included.
 
 Concurrency: one thread per connection (``ThreadingHTTPServer``) with a
 bounded decode-admission semaphore (``max_inflight``), and all duplicate
@@ -33,6 +47,7 @@ import collections
 import io
 import json
 import threading
+import time
 from http.client import HTTPConnection
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
@@ -40,6 +55,9 @@ from urllib.parse import parse_qs, urlparse
 import numpy as np
 
 from repro import obs
+from repro.obs import context as _context
+from repro.obs import events as _events
+from repro.obs.sampling import chrome_trace
 
 from .region import FieldRegionServer
 
@@ -94,6 +112,21 @@ def render_metrics(region: FieldRegionServer,
             "Chunk fetches that joined another request's in-flight decode.",
             s["flights_joined"])
     reg.register(region.latency)  # live cz_serve_request_seconds histogram
+    if getattr(region, "sampler", None) is not None:
+        counter("cz_serve_traces_sampled_total",
+                "Requests whose tail-sampling keep/drop decision ran.",
+                s["trace_sampled"])
+        kept = reg.counter("cz_serve_traces_kept_total",
+                           "Tail traces kept, by reason.",
+                           labelnames=("reason",))
+        kept.set_total(s["trace_kept_error"], reason="error")
+        kept.set_total(s["trace_kept_slow"], reason="slow")
+        counter("cz_serve_traces_evicted_total",
+                "Kept traces evicted by the byte budget.",
+                s["trace_evicted"])
+        reg.gauge("cz_serve_trace_bytes",
+                  "Bytes of tail traces currently retained."
+                  ).set(s["trace_bytes"])
     if responses is not None:
         resp = reg.counter("cz_serve_http_responses_total",
                            "HTTP responses by status code.",
@@ -124,9 +157,13 @@ class _RegionHandler(BaseHTTPRequestHandler):
     def _send(self, code: int, body: bytes, ctype: str,
               headers: dict | None = None) -> None:
         self._responded = True
+        self._status = code
         self.send_response(code)
         self.send_header("Content-Type", ctype)
         self.send_header("Content-Length", str(len(body)))
+        rid = getattr(self, "_rid", None)
+        if rid is not None:
+            self.send_header("X-CZ-Request-Id", rid)
         for k, v in (headers or {}).items():
             self.send_header(k, v)
         self.end_headers()
@@ -152,29 +189,50 @@ class _RegionHandler(BaseHTTPRequestHandler):
 
     def do_GET(self):  # noqa: N802 (http.server API)
         self._responded = False
+        self._status = 0
         url = urlparse(self.path)
-        try:
-            if url.path == "/healthz":
-                self._send(200, b"ok\n", "text/plain; charset=utf-8")
-            elif url.path == "/metrics":
-                body = render_metrics(self.server.region,
-                                      self.server.response_counts()).encode()
-                self._send(200, body,
-                           "text/plain; version=0.0.4; charset=utf-8")
-            elif url.path == "/v1/manifest":
-                self._json(200, self.server.region.manifest())
-            elif url.path.startswith("/v1/region/"):
-                self._region(url)
-            else:
-                self._error(404, f"no route {url.path}")
-        except (BrokenPipeError, ConnectionResetError):
-            self.close_connection = True  # client went away mid-response
-        except KeyError as e:
-            self._error(404, str(e.args[0]) if e.args else str(e))
-        except ValueError as e:
-            self._error(400, str(e))
-        except Exception as e:  # a handler bug must not kill the thread pool
-            self._error(500, f"{type(e).__name__}: {e}")
+        sampler = getattr(self.server.region, "sampler", None)
+        rid = _context.clean_id(self.headers.get("X-CZ-Request-Id"))
+        t0 = time.perf_counter()
+        with _context.request(rid, collect=sampler is not None) as ctx:
+            self._rid = ctx.rid
+            try:
+                if url.path == "/healthz":
+                    self._send(200, b"ok\n", "text/plain; charset=utf-8")
+                elif url.path == "/metrics":
+                    body = render_metrics(
+                        self.server.region,
+                        self.server.response_counts()).encode()
+                    self._send(200, body,
+                               "text/plain; version=0.0.4; charset=utf-8")
+                elif url.path == "/v1/manifest":
+                    self._json(200, self.server.region.manifest())
+                elif url.path.startswith("/v1/region/"):
+                    self._region(url)
+                elif url.path.startswith("/debug/"):
+                    self._debug(url)
+                else:
+                    self._error(404, f"no route {url.path}")
+            except (BrokenPipeError, ConnectionResetError):
+                self.close_connection = True  # client went away mid-response
+            except KeyError as e:
+                self._error(404, str(e.args[0]) if e.args else str(e))
+            except ValueError as e:
+                self._error(400, str(e))
+            except Exception as e:  # a bug must not kill the thread pool
+                self._error(500, f"{type(e).__name__}: {e}")
+            dt = time.perf_counter() - t0
+            code = self._status
+            _events.event("http.request",
+                          level=("error" if code >= 500
+                                 else "warn" if code >= 400 else "info"),
+                          method="GET", path=url.path, code=code,
+                          dur_ms=round(dt * 1e3, 3))
+            if sampler is not None and code >= 400:
+                # HTTP-layer failures (bad params, unknown routes) never
+                # reach query(); finalize them here — the per-context latch
+                # keeps this a no-op when query() already decided
+                sampler.finish(ctx, dt, error=f"http {code}")
 
     def do_POST(self):  # noqa: N802
         self._responded = False
@@ -235,6 +293,34 @@ class _RegionHandler(BaseHTTPRequestHandler):
                            "X-CZ-Dtype": str(arr.dtype),
                        })
 
+    def _debug(self, url) -> None:
+        q = parse_qs(url.query)
+        if url.path == "/debug/events":
+            try:
+                n = int(q.get("n", ["50"])[-1])
+            except ValueError:
+                raise ValueError("n must be an integer")
+            self._json(200, {"events": _events.tail(n)})
+            return
+        sampler = getattr(self.server.region, "sampler", None)
+        if sampler is None:
+            raise KeyError("tail sampling is disabled on this server")
+        if url.path == "/debug/traces":
+            self._json(200, {"traces": sampler.traces(),
+                             "stats": sampler.stats()})
+            return
+        parts = url.path.split("/")  # ['', 'debug', 'traces', request_id]
+        if len(parts) != 4 or parts[2] != "traces" or not parts[3]:
+            raise ValueError("expected /debug/traces[/{request_id}]")
+        rec = sampler.get(parts[3])  # KeyError -> 404
+        fmt = q.get("format", ["json"])[-1]
+        if fmt == "chrome":
+            self._json(200, chrome_trace(rec))
+        elif fmt == "json":
+            self._json(200, rec)
+        else:
+            raise ValueError(f"unknown format {fmt!r} (json or chrome)")
+
 
 class RegionHTTPServer(ThreadingHTTPServer):
     """Threaded HTTP server over one :class:`FieldRegionServer`.
@@ -253,12 +339,17 @@ class RegionHTTPServer(ThreadingHTTPServer):
     def __init__(self, dataset, host: str = "127.0.0.1", port: int = 8423,
                  cache_bytes: int = 64 << 20, cache_readers: int = 16,
                  cache_chunks: int = 32, max_inflight: int = 8,
-                 verbose: bool = False):
+                 verbose: bool = False, sample: bool = True,
+                 trace_budget_bytes: int = 4 << 20,
+                 trace_slow_ms: float | None = None):
         self._owns_region = not isinstance(dataset, FieldRegionServer)
         self.region = (FieldRegionServer(dataset, cache_readers=cache_readers,
                                          cache_chunks=cache_chunks,
                                          cache_bytes=cache_bytes,
-                                         max_inflight=max(1, int(max_inflight)))
+                                         max_inflight=max(1, int(max_inflight)),
+                                         sample=sample,
+                                         trace_budget_bytes=trace_budget_bytes,
+                                         trace_slow_ms=trace_slow_ms)
                        if self._owns_region else dataset)
         self.verbose = verbose
         self._responses = collections.Counter()
@@ -407,6 +498,23 @@ class Client:
                              f"{len(hits)} samples — add more labels")
         return hits[0]
 
+    def traces(self) -> dict:
+        """The ``/debug/traces`` listing: kept tail traces + sampler
+        stats."""
+        return json.loads(self._ok("/debug/traces")[1])
+
+    def trace(self, request_id: str, chrome: bool = False) -> dict:
+        """One kept tail trace in full (``chrome=True`` fetches the
+        Perfetto-loadable reshaping)."""
+        path = f"/debug/traces/{request_id}"
+        if chrome:
+            path += "?format=chrome"
+        return json.loads(self._ok(path)[1])
+
+    def events(self, n: int = 50) -> list[dict]:
+        """The tail of the server's structured event ring."""
+        return json.loads(self._ok(f"/debug/events?n={int(n)}")[1])["events"]
+
     def healthz(self) -> bool:
         return self._request("/healthz")[0] == 200
 
@@ -448,25 +556,45 @@ def main(argv=None) -> int:
     ap.add_argument("--trace", metavar="OUT.json",
                     help="collect spans while serving and write a Chrome "
                          "trace (view in Perfetto) on shutdown")
+    ap.add_argument("--no-sample", action="store_true",
+                    help="disable always-on tail-based trace sampling")
+    ap.add_argument("--trace-budget-mb", type=float, default=4.0,
+                    help="byte budget for kept tail traces (MiB)")
+    ap.add_argument("--trace-slow-ms", type=float, default=None,
+                    help="fixed slow-trace threshold in ms (default: track "
+                         "the live p99 of request latency)")
+    ap.add_argument("--events", metavar="OUT.jsonl",
+                    help="append structured events as JSON lines to a file")
     args = ap.parse_args(argv)
 
     if args.trace:
         obs.trace.enable()
+    if args.events:
+        _events.configure(path=args.events)
     srv = RegionHTTPServer(args.dataset, host=args.host, port=args.port,
                            cache_bytes=int(args.cache_mb * 2**20),
                            cache_readers=args.cache_readers,
                            cache_chunks=args.cache_chunks,
-                           max_inflight=args.workers, verbose=args.verbose)
+                           max_inflight=args.workers, verbose=args.verbose,
+                           sample=not args.no_sample,
+                           trace_budget_bytes=int(args.trace_budget_mb
+                                                  * 2**20),
+                           trace_slow_ms=args.trace_slow_ms)
     qs = ", ".join(srv.region.ds.quantities) or "(empty)"
     print(f"serving {args.dataset} [{qs}] at {srv.url}")
     print(f"  GET {srv.url}/v1/region/{{quantity}}/{{t}}?lo=x,y,z&hi=x,y,z")
     print(f"  GET {srv.url}/v1/manifest | /healthz | /metrics")
+    if not args.no_sample:
+        print(f"  GET {srv.url}/debug/traces | /debug/traces/{{id}} "
+              f"| /debug/events")
     try:
         srv.serve_forever()
     except KeyboardInterrupt:
         print("shutting down")
     finally:
         srv.close()
+        if args.events:
+            _events.LOG.close()
         if args.trace:
             obs.trace.disable()
             print(f"trace written to {obs.trace.save(args.trace)}")

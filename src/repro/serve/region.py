@@ -26,7 +26,9 @@ import threading
 import time
 
 from repro import obs
+from repro.obs import context as _context
 from repro.obs import trace
+from repro.obs.sampling import TailSampler
 
 from .cache import RegionCache
 from .scheduler import ChunkScheduler, SingleFlight
@@ -76,11 +78,24 @@ class FieldRegionServer:
         unbounded).  Deliberately scoped to the decode path only: cache
         hits and flight joins never wait on it, so a burst of cold requests
         cannot serialize the zero-cost hot path behind decodes.
+    sample:
+        Tail-based trace sampling (on by default): every query runs inside
+        a collecting request context and its trace is *kept* only on error
+        or slow-tail latency — see :class:`repro.obs.sampling.TailSampler`.
+        ``False`` turns the sampler off entirely (requests still get
+        correlation IDs at the HTTP front).
+    trace_budget_bytes:
+        Byte budget for retained tail traces (oldest evicted first).
+    trace_slow_ms:
+        Fixed slow threshold in milliseconds; ``None`` (default) tracks the
+        live p99 of this server's own latency histogram.
     """
 
     def __init__(self, dataset, cache_readers: int = 16,
                  cache_chunks: int = 32, cache_bytes: int = 64 << 20,
-                 max_inflight: int | None = None):
+                 max_inflight: int | None = None, sample: bool = True,
+                 trace_budget_bytes: int = 4 << 20,
+                 trace_slow_ms: float | None = None):
         from repro.store import CZDataset
 
         self._owns_dataset = isinstance(dataset, (str, bytes)) or \
@@ -100,6 +115,11 @@ class FieldRegionServer:
         self.queries = 0
         self.bytes_served = 0
         self.latency = LatencyHistogram()
+        slow_s = None if trace_slow_ms is None else float(trace_slow_ms) / 1e3
+        self.sampler = (TailSampler(self.latency,
+                                    budget_bytes=trace_budget_bytes,
+                                    slow_s=slow_s)
+                        if sample else None)
 
     # -- queries -----------------------------------------------------------
 
@@ -115,16 +135,35 @@ class FieldRegionServer:
             raise IOError("FieldRegionServer is closed")
         key = (str(quantity), int(t),
                tuple(int(v) for v in lo), tuple(int(v) for v in hi))
-        t0 = time.perf_counter()
-        with trace.span("serve.query", quantity=key[0], t=key[1]):
-            out = self.cache.get(key)
-            if out is None:
-                # coalesce identical in-flight regions, then chunk-level
-                # flights inside read_box take care of partial overlaps
-                out = self._region_sf.do(
-                    key, lambda: self._decode_region(key))
-        dt = time.perf_counter() - t0
-        self.latency.observe(dt)
+        # correlation scope: the HTTP front opens one per request (and its
+        # ID wins); direct in-process callers get one here so the tail
+        # sampler sees every query either way
+        ctx = _context.current()
+        own = (_context.request(collect=True)
+               if ctx is None and self.sampler is not None
+               else contextlib.nullcontext(ctx))
+        with own as ctx:
+            t0 = time.perf_counter()
+            error = None
+            try:
+                with trace.span("serve.query", quantity=key[0], t=key[1]):
+                    out = self.cache.get(key)
+                    if out is None:
+                        # coalesce identical in-flight regions, then
+                        # chunk-level flights inside read_box take care of
+                        # partial overlaps
+                        out = self._region_sf.do(
+                            key, lambda: self._decode_region(key))
+            except BaseException as e:
+                error = f"{type(e).__name__}: {e}"
+                raise
+            finally:
+                # observe errors too — the tail sampler's slow threshold
+                # and the kept-trace duration must agree with /metrics
+                dt = time.perf_counter() - t0
+                self.latency.observe(dt)
+                if self.sampler is not None:
+                    self.sampler.finish(ctx, dt, error=error)
         with self._lock:
             self.queries += 1
             self.bytes_served += out.nbytes
@@ -162,6 +201,9 @@ class FieldRegionServer:
         s.update(self.scheduler.stats())
         s["region_flights_led"] = self._region_sf.led
         s["region_flights_joined"] = self._region_sf.joined
+        if self.sampler is not None:
+            s.update({f"trace_{k}": v
+                      for k, v in self.sampler.stats().items()})
         return s
 
     # -- lifecycle ---------------------------------------------------------

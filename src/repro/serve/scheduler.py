@@ -17,45 +17,84 @@ from __future__ import annotations
 
 import concurrent.futures
 import threading
+import time
 
 import numpy as np
 
+from repro.obs import context as _context
+from repro.obs import trace
+
 __all__ = ["SingleFlight", "ChunkScheduler"]
+
+
+class _Flight:
+    """One in-flight computation: the shared future plus the request
+    correlation needed for coalescing-aware traces — the leader's request
+    ID, and the IDs of every request that parked on this flight instead of
+    doing the work itself."""
+
+    __slots__ = ("future", "leader_rid", "followers")
+
+    def __init__(self, leader_rid: str | None):
+        self.future: concurrent.futures.Future = concurrent.futures.Future()
+        self.leader_rid = leader_rid
+        self.followers: list[str] = []
 
 
 class SingleFlight:
     """Generic duplicate-call suppressor: concurrent :meth:`do` calls with
     the same key run ``fn`` once and all observe its result (or its
     exception).  Calls that arrive after the flight lands run ``fn`` again —
-    long-term memory is the *cache's* job, not the scheduler's."""
+    long-term memory is the *cache's* job, not the scheduler's.
+
+    Coalescing is request-correlated: a follower's request ID is appended
+    to the flight (under the lock) and lands on the **leader's**
+    ``serve.flight`` span, so a kept tail trace of the leader shows exactly
+    which other requests drafted behind it; each follower's own timeline
+    gets a ``serve.flight.wait`` span naming the leader it parked on."""
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._flights: dict[object, concurrent.futures.Future] = {}
+        self._flights: dict[object, _Flight] = {}
         self.led = 0        # calls that executed fn
         self.joined = 0     # calls coalesced onto an existing flight
 
     def do(self, key, fn):
+        rid = _context.request_id()
         with self._lock:
-            fut = self._flights.get(key)
-            leader = fut is None
+            flight = self._flights.get(key)
+            leader = flight is None
             if leader:
-                fut = self._flights[key] = concurrent.futures.Future()
+                flight = self._flights[key] = _Flight(rid)
                 self.led += 1
             else:
                 self.joined += 1
+                if rid is not None:
+                    flight.followers.append(rid)
         if leader:
+            t0 = time.perf_counter_ns()
             try:
-                fut.set_result(fn())
+                flight.future.set_result(fn())
             except BaseException as e:
-                fut.set_exception(e)
+                flight.future.set_exception(e)
             finally:
                 # land the flight *after* the result is set: late arrivals
                 # start a fresh flight (and hit the cache) instead of joining
-                # a completed one
+                # a completed one.  Popping under the lock also freezes the
+                # follower list — nobody can join a landed flight.
                 with self._lock:
                     self._flights.pop(key, None)
-        return fut.result()
+                    followers = list(flight.followers)
+                if followers:
+                    trace.record("serve.flight", t0, time.perf_counter_ns(),
+                                 key=str(key), followers=followers)
+            return flight.future.result()
+        t0 = time.perf_counter_ns()
+        try:
+            return flight.future.result()
+        finally:
+            trace.record("serve.flight.wait", t0, time.perf_counter_ns(),
+                         key=str(key), leader=flight.leader_rid)
 
 
 class ChunkScheduler:

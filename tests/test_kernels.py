@@ -181,3 +181,35 @@ def test_wavelet_parity_property(b, n, kind, levels, seed):
     back = ops.wavelet_inverse(got, kind=kind, levels=levels, interpret=True)
     np.testing.assert_allclose(np.asarray(back), np.asarray(x),
                                rtol=1e-5, atol=1e-4 * 50.0)
+
+
+def test_kernel_metrics_split_compile_from_execute():
+    """The device-tier instrumentation distinguishes the first call per
+    signature (jit compile) from steady-state execution: compiles_total
+    advances once per new signature, calls_total per call, and
+    cz_kernel_seconds grows separate compile/execute series."""
+    from repro import obs
+
+    dev = __import__("jax").default_backend()
+    kernel = "lorenzo_encode"
+    lbl = {"kernel": kernel, "device": dev}
+    compiles = obs.REGISTRY.get("cz_kernel_compiles_total")
+    calls = obs.REGISTRY.get("cz_kernel_calls_total")
+    seconds = obs.REGISTRY.get("cz_kernel_seconds")
+
+    x = blocks(2, 8, seed=991)  # fresh shape: unseen by earlier tests
+    c0, n0 = compiles.value(**lbl), calls.value(**lbl)
+    ops.lorenzo_encode(x, eps=2e-3, interpret=True)
+    assert compiles.value(**lbl) == c0 + 1
+    assert calls.value(**lbl) == n0 + 1
+    for _ in range(2):  # same signature: execute, no new compile
+        ops.lorenzo_encode(x, eps=2e-3, interpret=True)
+    assert compiles.value(**lbl) == c0 + 1
+    assert calls.value(**lbl) == n0 + 3
+    # a new eps is a new static value -> new jit cache entry -> compile
+    ops.lorenzo_encode(x, eps=3e-3, interpret=True)
+    assert compiles.value(**lbl) == c0 + 2
+
+    comp = seconds.snapshot(**lbl, phase="compile")
+    execd = seconds.snapshot(**lbl, phase="execute")
+    assert comp["count"] >= 2 and execd["count"] >= 2

@@ -438,6 +438,10 @@ SERVE_METRIC_NAMES = [
     "cz_serve_chunks_decoded_total",
     "cz_serve_coalesced_requests_total",
     "cz_serve_request_seconds",
+    "cz_serve_traces_sampled_total",
+    "cz_serve_traces_kept_total",
+    "cz_serve_traces_evicted_total",
+    "cz_serve_trace_bytes",
     "cz_serve_http_responses_total",
 ]
 

@@ -1,0 +1,452 @@
+"""PR 8 acceptance: request-correlated observability end to end.
+
+One request ID minted (or honored) at the HTTP front must show up in four
+places at once — the ``X-CZ-Request-Id`` response header, the kept tail
+trace at ``/debug/traces/{id}``, the structured event lines, and the
+``/metrics`` latency-bucket exemplar — including the coalesced-duplicate
+case where the follower's ID is recorded on the leader's flight span.
+Plus unit coverage for the three new obs modules (context, events,
+sampling)."""
+import json
+import threading
+import time
+from http.client import HTTPConnection
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import CompressionSpec, Pipeline
+from repro.obs import context as obs_context
+from repro.obs import events as obs_events
+from repro.obs.sampling import TailSampler, chrome_trace
+from repro.serve import Client, RegionHTTPServer
+from repro.store import CZDataset
+
+N = 16
+BS = 8
+SPEC = CompressionSpec(scheme="raw", block_size=BS, buffer_bytes=1 << 12)
+
+
+@pytest.fixture(autouse=True)
+def _tracer_off():
+    obs.TRACER.disable()
+    obs.TRACER.reset()
+    yield
+    obs.TRACER.disable()
+    obs.TRACER.reset()
+
+
+def _make_dataset(root):
+    rng = np.random.default_rng(8)
+    with CZDataset(root, "a", spec=SPEC) as ds:
+        ds.append({"p": rng.normal(size=(N, N, N)).astype(np.float32)},
+                  time=0.0)
+    return root
+
+
+def _slow_decode(monkeypatch, seconds):
+    orig = Pipeline.decompress_chunk
+
+    def slow(self, *a, **k):
+        time.sleep(seconds)
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(Pipeline, "decompress_chunk", slow)
+
+
+def _get(srv, path, rid=None):
+    """One GET returning (status, headers, parsed-or-raw body)."""
+    host, port = srv.server_address[:2]
+    conn = HTTPConnection(host, port, timeout=30)
+    try:
+        conn.request("GET", path,
+                     headers={"X-CZ-Request-Id": rid} if rid else {})
+        r = conn.getresponse()
+        return r.status, dict(r.getheaders()), r.read()
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# context unit coverage
+# ---------------------------------------------------------------------------
+
+def test_request_context_mint_honor_and_nest():
+    assert obs_context.request_id() is None
+    with obs_context.request() as outer:
+        assert obs_context.request_id() == outer.rid
+        assert len(outer.rid) == 16
+        with obs_context.request("client-chosen") as inner:
+            assert obs_context.request_id() == "client-chosen"
+            assert inner.rid == "client-chosen"
+        assert obs_context.request_id() == outer.rid  # token reset
+    assert obs_context.request_id() is None
+
+
+@pytest.mark.parametrize("raw,want", [
+    ("abc-123.X_z", "abc-123.X_z"),
+    ("  ok  ", None),            # embedded whitespace is not a clean ID
+    ("", None),
+    (None, None),
+    ("bad id", None),            # spaces
+    ("-leading", None),          # must start alphanumeric
+    ("x" * 200, None),           # too long
+])
+def test_clean_id(raw, want):
+    assert obs_context.clean_id(raw) == want
+
+
+def test_context_collection_is_bounded():
+    with obs_context.request(collect=True, max_events=4) as ctx:
+        for i in range(10):
+            with obs.span("work", i=i):
+                pass
+    assert len(ctx.events) == 4
+    assert ctx.dropped == 6
+    assert all(ev["args"]["rid"] == ctx.rid for ev in ctx.events)
+
+
+def test_span_collects_into_context_without_tracer():
+    assert not obs.TRACER.enabled
+    with obs_context.request(collect=True) as ctx:
+        with obs.span("inner", tag=7):
+            pass
+        t0 = time.perf_counter_ns()
+        obs.trace.record("post", t0, t0 + 1000, tag=8)
+    names = [ev["name"] for ev in ctx.events]
+    assert names == ["inner", "post"]
+    assert ctx.events[0]["args"]["tag"] == 7
+    assert obs.TRACER.events() == []  # nothing leaked into the tracer
+
+
+# ---------------------------------------------------------------------------
+# events unit coverage
+# ---------------------------------------------------------------------------
+
+def test_event_log_levels_ring_and_jsonl(tmp_path):
+    log = obs_events.EventLog(ring=3, level="info")
+    path = tmp_path / "events.jsonl"
+    log.configure(path=str(path))
+    assert log.event("dropped", level="debug") is None
+    with obs_context.request("evt-rid"):
+        rec = log.event("served", level="warn", code=404, q="p")
+    assert rec["request_id"] == "evt-rid" and rec["code"] == 404
+    for i in range(4):
+        log.event(f"e{i}")
+    log.close()
+    assert [r["event"] for r in log.tail(10)] == ["e1", "e2", "e3"]  # ring=3
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert [ln["event"] for ln in lines] == ["served", "e0", "e1", "e2", "e3"]
+    assert lines[0]["request_id"] == "evt-rid"
+    assert log.suppressed == 1 and log.emitted == 5
+
+
+def test_event_log_survives_torn_sink(tmp_path):
+    log = obs_events.EventLog()
+    stream = open(tmp_path / "t.jsonl", "w")
+    log.configure(stream=stream)
+    stream.close()
+    log.event("after-close")  # must not raise; sink silently dropped
+    assert log.tail(1)[0]["event"] == "after-close"
+
+
+# ---------------------------------------------------------------------------
+# sampler unit coverage
+# ---------------------------------------------------------------------------
+
+def _finished_ctx(rid="t-0", nev=1):
+    ctx = obs_context.RequestContext(rid, collect=True)
+    for i in range(nev):
+        t0 = time.perf_counter_ns()
+        ctx.record("ev", t0, t0 + 5000, {"i": i})
+    return ctx
+
+
+def test_sampler_keeps_error_and_slow_only():
+    hist = obs.Histogram("cz_t_lat_seconds", "t", buckets=(0.01, 0.1))
+    s = TailSampler(hist, slow_s=0.05)
+    assert s.finish(_finished_ctx("fast"), 0.001) is False
+    assert s.finish(_finished_ctx("slow"), 0.2) is True
+    assert s.finish(_finished_ctx("err"), 0.001, error="boom") is True
+    kept = {t["request_id"]: t for t in s.traces()}
+    assert set(kept) == {"slow", "err"}
+    assert kept["slow"]["reason"] == "slow" and kept["err"]["reason"] == "error"
+    assert s.get("err")["error"] == "boom"
+    with pytest.raises(KeyError):
+        s.get("fast")
+    st = s.stats()
+    assert st["sampled"] == 3 and st["kept_error"] == 1 and st["kept_slow"] == 1
+
+
+def test_sampler_finish_is_idempotent_per_context():
+    hist = obs.Histogram("cz_t_lat2_seconds", "t", buckets=(0.01,))
+    s = TailSampler(hist, slow_s=0.0)
+    ctx = _finished_ctx("once")
+    assert s.finish(ctx, 1.0) is True
+    assert s.finish(ctx, 1.0) is False  # latched
+    assert s.stats()["sampled"] == 1
+
+
+def test_sampler_byte_budget_evicts_oldest():
+    hist = obs.Histogram("cz_t_lat3_seconds", "t", buckets=(0.01,))
+    probe = TailSampler(hist, slow_s=0.0)
+    probe.finish(_finished_ctx("probe"), 1.0)
+    one = probe.stats()["bytes"]  # bytes of a single kept trace
+
+    # room for one trace but not two: keeping "b" must evict "a"
+    s = TailSampler(hist, slow_s=0.0, budget_bytes=int(one * 1.5))
+    s.finish(_finished_ctx("a"), 1.0)
+    s.finish(_finished_ctx("b"), 1.0)
+    assert [t["request_id"] for t in s.traces()] == ["b"]
+    assert s.stats()["evicted"] == 1
+    assert s.stats()["bytes"] <= s.budget_bytes
+
+    # a budget smaller than any single trace retains nothing (hard cap)
+    tiny = TailSampler(hist, slow_s=0.0, budget_bytes=1)
+    tiny.finish(_finished_ctx("c"), 1.0)
+    assert tiny.traces() == [] and tiny.stats()["bytes"] == 0
+
+
+def test_sampler_dynamic_threshold_tracks_tail():
+    hist = obs.Histogram("cz_t_lat4_seconds", "t", buckets=(0.01, 0.1, 1.0))
+    s = TailSampler(hist, min_count=10, default_slow_s=9.9)
+    assert s.threshold() == 9.9  # cold start: below min_count
+    for _ in range(99):
+        hist.observe(0.001)
+    hist.observe(0.5)
+    # 99% of observations are <= 0.01 -> the live p99 estimate is that
+    # bucket's bound; the 0.5 s straggler sits above it and would be kept
+    assert s.threshold() == 0.01
+    assert 0.5 >= s.threshold()
+    # traffic shifts slower: the threshold follows the new p99 upward
+    for _ in range(900):
+        hist.observe(0.05)
+    assert s.threshold() == 0.1
+
+
+def test_chrome_trace_export_shape():
+    hist = obs.Histogram("cz_t_lat5_seconds", "t", buckets=(0.01,))
+    s = TailSampler(hist, slow_s=0.0)
+    s.finish(_finished_ctx("ct", nev=3), 1.0)
+    doc = chrome_trace(s.get("ct"))
+    assert doc["metadata"]["request_id"] == "ct"
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(evs) == 3 and all(e["dur"] == 5.0 for e in evs)
+
+
+def test_exemplar_rendered_and_parse_tolerant():
+    reg = obs.Registry()
+    h = reg.histogram("cz_t_ex_seconds", "t", buckets=(0.01, 0.1))
+    h.observe(0.05)
+    h.exemplar(0.05, "trace-xyz")
+    text = reg.render()
+    line = next(ln for ln in text.splitlines()
+                if 'le="0.1"' in ln and "cz_t_ex_seconds_bucket" in ln)
+    assert '# {trace_id="trace-xyz"}' in line
+    parsed = obs.parse_prometheus(text)
+    assert parsed["cz_t_ex_seconds_bucket"]
+    assert ({"le": "0.1"}, 1.0) in parsed["cz_t_ex_seconds_bucket"]
+
+
+# ---------------------------------------------------------------------------
+# e2e: one slow request correlated across header, trace, events, exemplar
+# ---------------------------------------------------------------------------
+
+def test_request_id_minted_and_echoed(tmp_path):
+    root = _make_dataset(str(tmp_path / "ds"))
+    with RegionHTTPServer(root, port=0).start() as srv:
+        # minted: present and well-formed on every response, 404s included
+        for path in ("/healthz", "/metrics", "/nope"):
+            _, headers, _ = _get(srv, path)
+            rid = headers.get("X-CZ-Request-Id")
+            assert rid and obs_context.clean_id(rid) == rid
+        # honored: a clean client-supplied ID is echoed verbatim...
+        _, headers, _ = _get(srv, "/healthz", rid="my-req-007")
+        assert headers["X-CZ-Request-Id"] == "my-req-007"
+        # ...a malformed one is replaced, not reflected
+        _, headers, _ = _get(srv, "/healthz", rid="bad id!")
+        assert headers["X-CZ-Request-Id"] != "bad id!"
+
+
+def test_slow_request_correlated_end_to_end(tmp_path, monkeypatch):
+    root = _make_dataset(str(tmp_path / "ds"))
+    _slow_decode(monkeypatch, 0.06)
+    with RegionHTTPServer(root, port=0, trace_slow_ms=30).start() as srv:
+        status, headers, _ = _get(
+            srv, f"/v1/region/p/0?lo=0,0,0&hi={BS},{BS},{BS}",
+            rid="e2e-slow-1")
+        assert status == 200
+        rid = headers["X-CZ-Request-Id"]
+        assert rid == "e2e-slow-1"
+
+        with Client(srv.url) as c:
+            doc = c.traces()
+            rec = c.trace(rid)
+            chrome = c.trace(rid, chrome=True)
+            text = c.metrics()
+            evts = c.events(200)
+
+        # kept tail trace, same ID, with the spans the request touched
+        assert rid in [t["request_id"] for t in doc["traces"]]
+        assert rec["reason"] == "slow" and rec["duration_ms"] >= 30
+        names = [ev["name"] for ev in rec["events"]]
+        assert "serve.query" in names and "fetch" in names
+        assert all(ev["args"]["rid"] == rid for ev in rec["events"])
+        assert chrome["metadata"]["request_id"] == rid
+
+        # structured event line for the same request
+        mine = [e for e in evts if e.get("request_id") == rid]
+        assert any(e["event"] == "http.request" and e["code"] == 200
+                   for e in mine)
+
+        # /metrics: sampler counters + a bucket exemplar pointing at a kept
+        # trace (latest keep wins the bucket, so match any retained ID)
+        kept_ids = {t["request_id"] for t in doc["traces"]}
+        assert any(f'trace_id="{k}"' in text for k in kept_ids)
+        md = obs.parse_prometheus(text)
+        assert md["cz_serve_traces_kept_total"]
+        assert sum(v for _, v in md["cz_serve_traces_kept_total"]) >= 1
+
+
+def test_error_request_kept_with_http_status(tmp_path):
+    root = _make_dataset(str(tmp_path / "ds"))
+    with RegionHTTPServer(root, port=0, trace_slow_ms=10_000).start() as srv:
+        status, headers, _ = _get(
+            srv, "/v1/region/p/0?lo=0,0&hi=4,4,4", rid="e2e-bad-1")
+        assert status == 400
+        rec_ids = None
+        with Client(srv.url) as c:
+            rec_ids = {t["request_id"]: t for t in c.traces()["traces"]}
+        assert headers["X-CZ-Request-Id"] == "e2e-bad-1"
+        assert rec_ids["e2e-bad-1"]["reason"] == "error"
+        assert "http 400" in rec_ids["e2e-bad-1"]["error"]
+
+
+def test_no_sample_disables_debug_traces(tmp_path):
+    root = _make_dataset(str(tmp_path / "ds"))
+    with RegionHTTPServer(root, port=0, sample=False).start() as srv:
+        status, headers, _ = _get(
+            srv, f"/v1/region/p/0?lo=0,0,0&hi={BS},{BS},{BS}")
+        assert status == 200
+        assert headers["X-CZ-Request-Id"]  # correlation survives opt-out
+        assert _get(srv, "/debug/traces")[0] == 404
+        assert "cz_serve_traces_sampled_total" not in Client(srv.url).metrics()
+
+
+def test_coalesced_follower_recorded_on_leader_span(tmp_path, monkeypatch):
+    """Two concurrent identical requests: the leader decodes, the follower
+    parks on the flight.  The leader's kept trace must carry the follower's
+    request ID on its ``serve.flight`` span, and the follower's trace must
+    name its leader on ``serve.flight.wait``."""
+    root = _make_dataset(str(tmp_path / "ds"))
+    _slow_decode(monkeypatch, 0.15)
+    with RegionHTTPServer(root, port=0, trace_slow_ms=1,
+                          max_inflight=4).start() as srv:
+        path = f"/v1/region/p/0?lo=0,0,0&hi={N},{N},{N}"
+        started = threading.Event()
+        results = {}
+
+        def fetch(rid, wait_s):
+            if wait_s:
+                started.wait()
+                time.sleep(wait_s)
+            else:
+                started.set()
+            results[rid] = _get(srv, path, rid=rid)[0]
+
+        t1 = threading.Thread(target=fetch, args=("e2e-lead", 0))
+        t2 = threading.Thread(target=fetch, args=("e2e-follow", 0.05))
+        t1.start(), t2.start()
+        t1.join(), t2.join()
+        assert results == {"e2e-lead": 200, "e2e-follow": 200}
+
+        with Client(srv.url) as c:
+            lead = c.trace("e2e-lead")
+            follow = c.trace("e2e-follow")
+
+    flights = [ev for ev in lead["events"] if ev["name"] == "serve.flight"]
+    assert flights, "leader trace lost its flight span"
+    followers = [f for ev in flights for f in ev["args"]["followers"]]
+    assert "e2e-follow" in followers
+    waits = [ev for ev in follow["events"]
+             if ev["name"] == "serve.flight.wait"]
+    assert waits and waits[0]["args"]["leader"] == "e2e-lead"
+
+
+# ---------------------------------------------------------------------------
+# cz-compress stats: --diff
+# ---------------------------------------------------------------------------
+
+def test_stats_diff_cli(tmp_path, capsys):
+    from repro.launch.compress import stats_main
+
+    a = {"cz_x_total": [{"labels": {}, "value": 3}],
+         "cz_lat_seconds": [{"labels": {"q": "p"}, "sum": 1.0, "count": 4}]}
+    b = {"schema": 1, "name": "serve", "params": {}, "metrics": {},
+         "registry": {"cz_x_total": {
+             "kind": "counter", "help": "x", "labelnames": [],
+             "samples": [{"labels": {}, "value": 10}]},
+             "cz_lat_seconds": {
+             "kind": "histogram", "help": "l", "labelnames": ["q"],
+             "samples": [{"labels": {"q": "p"}, "buckets": [],
+                          "sum": 2.5, "count": 9}]}}}
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    pa.write_text(json.dumps(a))
+    pb.write_text(json.dumps(b))
+
+    assert stats_main(["--diff", str(pa), str(pb), "--json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    changed = {(r["name"], r["labels"]): r for r in out["changed"]}
+    assert changed[("cz_x_total", "")]["delta"] == 7
+    assert changed[("cz_lat_seconds_count", "q=p")]["delta"] == 5
+    assert changed[("cz_lat_seconds_sum", "q=p")]["delta"] == 1.5
+
+    assert stats_main(["--diff", str(pa), str(pb)]) == 0
+    text = capsys.readouterr().out
+    assert "cz_x_total" in text and "3 -> 10" in text and "(+7)" in text
+
+
+# ---------------------------------------------------------------------------
+# documentation + hygiene lints
+
+
+def test_readme_documents_every_registered_metric():
+    """The README metric table must name every metric the code registers —
+    global-registry ones (import side effects below) plus the serve-tier
+    names built per-scrape by ``render_metrics``."""
+    import pathlib
+
+    import repro.cluster.engine  # noqa: F401  (register cz_cluster_*)
+    import repro.core.container  # noqa: F401  (cz_reader_*)
+    import repro.core.pipeline  # noqa: F401  (cz_pipeline_*)
+    import repro.core.schemes._device  # noqa: F401  (cz_kernel_fallbacks)
+    import repro.kernels.ops  # noqa: F401  (cz_kernel_*)
+    import repro.store.backends.instrument  # noqa: F401  (cz_store_*)
+    from tests.test_obs import SERVE_METRIC_NAMES
+
+    readme = (pathlib.Path(__file__).parent.parent / "README.md").read_text()
+    names = {m.name for m in obs.REGISTRY} | set(SERVE_METRIC_NAMES)
+    missing = sorted(n for n in names if n not in readme)
+    assert not missing, f"metrics registered but not in README.md: {missing}"
+
+
+def test_no_print_in_library_code():
+    """``print(`` is banned inside src/repro outside the CLI surfaces
+    (``launch/`` and the ``serve`` HTTP entry point) — library code reports
+    through repro.obs.  Mirrors the ruff T20 config for environments
+    without ruff."""
+    import pathlib
+    import tokenize
+
+    src = pathlib.Path(__file__).parent.parent / "src" / "repro"
+    allowed = {src / "serve" / "http.py"}
+    offenders = []
+    for path in sorted(src.rglob("*.py")):
+        if path in allowed or (src / "launch") in path.parents:
+            continue
+        with tokenize.open(path) as fh:
+            for tok in tokenize.generate_tokens(fh.readline):
+                if tok.type == tokenize.NAME and tok.string == "print":
+                    offenders.append(f"{path.relative_to(src)}:{tok.start[0]}")
+    assert not offenders, f"print() in library code: {offenders}"
