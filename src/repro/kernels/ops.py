@@ -10,18 +10,28 @@ compiles on) is a **compile**, later calls are steady-state **execute**, and
 the two phases get separate span names (``kernel.compile`` /
 ``kernel.execute``) and separate ``cz_kernel_seconds`` series — a
 compilation stall and a slow steady-state kernel are different problems and
-must not share a histogram.  Timings call ``jax.block_until_ready`` so
-asynchronous dispatch can't flatter the numbers.
+must not share a histogram.
+
+Timing is synchronized (``jax.block_until_ready``) only when someone is
+looking: on first-call compiles (jit compilation is host-synchronous
+anyway), while the process tracer is enabled, or inside a collecting
+request context (the serve tier's tail sampling) — then async dispatch
+can't flatter the numbers.  Otherwise the wrapper records dispatch time
+only and returns the unforced value, preserving JAX's async-dispatch
+pipelining on accelerator backends.  ``CZ_KERNEL_SYNC=1``/``0`` in the
+environment (or assigning :data:`SYNC`) forces the choice either way.
 """
 from __future__ import annotations
 
 import functools
+import os
 import threading
 import time
 
 import jax
 
 from repro import obs
+from repro.obs import context as _context
 from repro.obs import trace
 
 from .lorenzo import lorenzo_decode_pallas, lorenzo_encode_pallas
@@ -46,8 +56,19 @@ _CALLS = obs.counter(
     labelnames=("kernel", "device"))
 _SECONDS = obs.histogram(
     "cz_kernel_seconds",
-    "Kernel wall time (block_until_ready), split by compile/execute phase.",
+    "Kernel wall time split by compile/execute phase (block_until_ready "
+    "on compiles and while tracing/tail collection is active; async "
+    "dispatch time otherwise).",
     buckets=obs.FAST_BUCKETS, labelnames=("kernel", "device", "phase"))
+
+#: tri-state host-device sync override for kernel timing: ``True`` forces
+#: ``block_until_ready`` on every call, ``False`` never blocks, ``None``
+#: (default) blocks only when the timing is observable — first-call
+#: compile, process tracer enabled, or a collecting request context.
+#: Seeded from ``CZ_KERNEL_SYNC`` when set.
+SYNC: bool | None = (None if "CZ_KERNEL_SYNC" not in os.environ
+                     else os.environ["CZ_KERNEL_SYNC"].lower()
+                     not in ("0", "false", ""))
 
 
 def _sig(x):
@@ -84,8 +105,19 @@ def _instrument(name: str):
                     seen.add(key)
             device = jax.default_backend()
             phase = "compile" if first else "execute"
+            sync = SYNC
+            if sync is None:
+                # block only when the timing is observable: compiles are
+                # host-synchronous anyway, and an active tracer/collecting
+                # request context needs honest span durations; steady-state
+                # uninstrumented calls keep async dispatch pipelining
+                ctx = _context.current()
+                sync = (first or trace.tracing()
+                        or (ctx is not None and ctx.collecting))
             t0 = time.perf_counter_ns()
-            out = jax.block_until_ready(fn(*a, **k))
+            out = fn(*a, **k)
+            if sync:
+                out = jax.block_until_ready(out)
             t1 = time.perf_counter_ns()
             if first:
                 _COMPILES.inc(kernel=name, device=device)

@@ -3,9 +3,10 @@
 Five stdlib-only modules:
 
 * :mod:`repro.obs.registry` — thread-safe ``Counter``/``Gauge``/
-  ``Histogram`` (with OpenMetrics exemplars) with labels, a process-wide
-  default ``REGISTRY``, and Prometheus text exposition (``render``) /
-  JSON snapshots (``snapshot``).
+  ``Histogram`` with labels, a process-wide default ``REGISTRY``, and
+  Prometheus text exposition (``render``; ``openmetrics=True`` emits an
+  OpenMetrics document with histogram exemplars) / JSON snapshots
+  (``snapshot``).
 * :mod:`repro.obs.trace` — ``with span("encode", chunk=i):`` span API
   exporting Chrome trace-event JSON (Perfetto-viewable), disabled by
   default at near-zero cost, with cross-process merge for the cluster

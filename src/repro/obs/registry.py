@@ -15,8 +15,11 @@ Three metric kinds, all label-aware and safe under concurrent updates:
   (cumulative ``le`` buckets plus ``_sum``/``_count``).
 
 A :class:`Registry` owns an ordered set of uniquely-named metrics and
-renders them as Prometheus text format 0.0.4 (:meth:`Registry.render`) or
-a JSON-able snapshot (:meth:`Registry.snapshot`).  ``REGISTRY`` is the
+renders them as Prometheus text format 0.0.4 (:meth:`Registry.render`),
+as an OpenMetrics 1.0 document (``render(openmetrics=True)`` — the only
+format in which histogram exemplars are emitted, since the legacy 0.0.4
+parser rejects exemplar syntax), or a JSON-able snapshot
+(:meth:`Registry.snapshot`).  ``REGISTRY`` is the
 process-wide default — module-level :func:`counter` / :func:`gauge` /
 :func:`histogram` are get-or-create against it, so instrumented modules
 can register at import time and re-imports are idempotent.
@@ -352,16 +355,34 @@ class Registry:
 
     # -- exposition ----------------------------------------------------------
 
-    def render(self) -> str:
-        """Prometheus text format 0.0.4, metrics in registration order."""
+    def render(self, openmetrics: bool = False) -> str:
+        """Text exposition, metrics in registration order.
+
+        The default is Prometheus text format 0.0.4 with **no** exemplars —
+        the legacy parser (selected by ``text/plain; version=0.0.4``) errors
+        on exemplar syntax, which would fail the whole scrape.  With
+        ``openmetrics=True`` the output is an OpenMetrics 1.0 document
+        instead: counter families drop their ``_total`` suffix in
+        HELP/TYPE, histogram buckets carry their exemplars, and the
+        document ends with ``# EOF`` — serve it only to scrapers that
+        negotiated ``application/openmetrics-text``.
+        """
         lines: list[str] = []
         for m in self:
-            lines.append(f"# HELP {m.name} {m.help}")
-            lines.append(f"# TYPE {m.name} {m.kind}")
+            family, kind = m.name, m.kind
+            if openmetrics and kind == "counter":
+                if family.endswith("_total"):
+                    # OpenMetrics counters: family name is suffix-free, the
+                    # sample keeps the _total suffix
+                    family = family[:-len("_total")]
+                else:
+                    kind = "unknown"  # _total-less counter: stay parseable
+            lines.append(f"# HELP {family} {m.help}")
+            lines.append(f"# TYPE {family} {kind}")
             if isinstance(m, Histogram):
                 for labels, _ in m.samples():
                     snap = m.snapshot(**labels)
-                    ex = m.exemplars(**labels)
+                    ex = m.exemplars(**labels) if openmetrics else {}
                     values = tuple(labels[k] for k in m.labelnames)
                     for bound, cum in snap["buckets"]:
                         le = "+Inf" if bound == float("inf") else repr(bound)
@@ -382,6 +403,8 @@ class Registry:
                     values = tuple(labels[k] for k in m.labelnames)
                     lines.append(
                         f"{m.name}{_labelstr(m.labelnames, values)} {value}")
+        if openmetrics:
+            lines.append("# EOF")
         return "\n".join(lines) + "\n"
 
     def snapshot(self) -> dict:
@@ -420,8 +443,8 @@ def histogram(name, help, buckets=DEFAULT_BUCKETS, labelnames=()) -> Histogram:
     return REGISTRY.histogram(name, help, buckets, labelnames)
 
 
-def render() -> str:
-    return REGISTRY.render()
+def render(openmetrics: bool = False) -> str:
+    return REGISTRY.render(openmetrics=openmetrics)
 
 
 def snapshot() -> dict:
@@ -437,6 +460,29 @@ _SAMPLE_RE = re.compile(
 _PAIR_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 
 
+def _strip_exemplar(line: str) -> str:
+    """Drop an OpenMetrics exemplar suffix (``... # {labels} value ts``).
+
+    The ``#`` that starts an exemplar is the first one *outside* quoted
+    label values — a ``#`` inside a quoted value (an escaped error message,
+    say) is sample content and must survive."""
+    in_quotes = False
+    i, n = 0, len(line)
+    while i < n:
+        ch = line[i]
+        if in_quotes:
+            if ch == "\\":
+                i += 1  # escaped char: skip it
+            elif ch == '"':
+                in_quotes = False
+        elif ch == '"':
+            in_quotes = True
+        elif ch == "#":
+            return line[:i].rstrip()
+        i += 1
+    return line
+
+
 def parse_prometheus(text: str) -> dict[str, list[tuple[dict, float]]]:
     """Parse text exposition into ``{name: [(labels, value), ...]}``.
 
@@ -444,18 +490,15 @@ def parse_prometheus(text: str) -> dict[str, list[tuple[dict, float]]]:
     (``..._bucket``/``..._sum``/``..._count``).  The structured inverse of
     :meth:`Registry.render` — tests and benchmarks use it (via
     ``serve.Client.metrics_dict``) instead of string-grepping exposition
-    text.
+    text.  Both output formats parse: OpenMetrics exemplars are dropped
+    (they link buckets to trace IDs for humans/Perfetto; parse keeps the
+    sample shape stable) and ``# EOF`` is skipped as a comment.
     """
     out: dict[str, list[tuple[dict, float]]] = {}
     for line in text.splitlines():
-        line = line.strip()
+        line = _strip_exemplar(line.strip())
         if not line or line.startswith("#"):
             continue
-        # OpenMetrics exemplar suffix ('value # {labels} ex_value ts') —
-        # tolerated and dropped: exemplars link buckets to trace IDs for
-        # humans/Perfetto, parse keeps the sample shape stable
-        if " # " in line:
-            line = line.split(" # ", 1)[0].rstrip()
         m = _SAMPLE_RE.match(line)
         if not m:
             raise ValueError(f"unparseable exposition line: {line!r}")

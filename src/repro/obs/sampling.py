@@ -15,7 +15,9 @@ completion.  The flow:
 3. kept traces live in a byte-budgeted FIFO (oldest evicted first) exposed
    at ``GET /debug/traces`` / ``/debug/traces/{id}``, and each keep
    attaches an OpenMetrics exemplar to the latency histogram — the
-   ``/metrics`` bucket points at the trace that exemplifies it.
+   ``/metrics`` bucket points at the trace that exemplifies it (exemplars
+   reach scrapers only on OpenMetrics-negotiated renders; the legacy
+   0.0.4 exposition stays exemplar-free).
 
 Everything else is dropped on the floor at request end: steady-state
 traffic pays one context allocation and a handful of bounded list appends

@@ -18,10 +18,14 @@ Endpoints
 ``GET /healthz``
     Liveness probe (``200 ok``).
 ``GET /metrics``
-    Prometheus text format: query count, request-latency histogram (with
-    OpenMetrics exemplars pointing at kept tail traces), region- and
-    chunk-cache hits/misses, bytes decoded vs bytes served, coalesced
-    flights, tail-sampling counters, responses by status code.
+    Metrics exposition: query count, request-latency histogram, region-
+    and chunk-cache hits/misses, bytes decoded vs bytes served, coalesced
+    flights, tail-sampling counters, responses by status code.  Content
+    negotiated: scrapers whose ``Accept`` header names
+    ``application/openmetrics-text`` (Prometheus does by default) get an
+    OpenMetrics 1.0 document whose latency buckets carry exemplars
+    pointing at kept tail traces; everyone else gets plain text format
+    0.0.4, exemplar-free — the legacy parser rejects exemplar syntax.
 ``GET /debug/traces``
     Tail-sampled trace retention: summaries of every kept trace (errored
     or slow-tail requests only) plus sampler stats.
@@ -65,9 +69,11 @@ __all__ = ["RegionHTTPServer", "Client", "render_metrics", "main"]
 
 
 def render_metrics(region: FieldRegionServer,
-                   responses: dict[int, int] | None = None) -> str:
-    """Prometheus text-format (0.0.4) rendering of one region server's
-    counters, through :class:`repro.obs.Registry`.
+                   responses: dict[int, int] | None = None,
+                   openmetrics: bool = False) -> str:
+    """Text-exposition rendering of one region server's counters, through
+    :class:`repro.obs.Registry` — Prometheus 0.0.4 by default, OpenMetrics
+    1.0 (with latency-bucket exemplars) when ``openmetrics`` is set.
 
     A fresh registry is assembled per scrape from the server's counter
     snapshot — registration order reproduces the historical hand-rolled
@@ -133,7 +139,7 @@ def render_metrics(region: FieldRegionServer,
                            labelnames=("code",))
         for code in sorted(responses):
             resp.set_total(responses[code], code=code)
-    return reg.render()
+    return reg.render(openmetrics=openmetrics)
 
 
 class _RegionHandler(BaseHTTPRequestHandler):
@@ -200,10 +206,15 @@ class _RegionHandler(BaseHTTPRequestHandler):
                 if url.path == "/healthz":
                     self._send(200, b"ok\n", "text/plain; charset=utf-8")
                 elif url.path == "/metrics":
+                    om = ("application/openmetrics-text"
+                          in self.headers.get("Accept", ""))
                     body = render_metrics(
                         self.server.region,
-                        self.server.response_counts()).encode()
+                        self.server.response_counts(),
+                        openmetrics=om).encode()
                     self._send(200, body,
+                               "application/openmetrics-text; "
+                               "version=1.0.0; charset=utf-8" if om else
                                "text/plain; version=0.0.4; charset=utf-8")
                 elif url.path == "/v1/manifest":
                     self._json(200, self.server.region.manifest())
@@ -416,13 +427,14 @@ class Client:
         self.timeout = timeout
         self._conn: HTTPConnection | None = None
 
-    def _request(self, path: str) -> tuple[int, dict, bytes]:
+    def _request(self, path: str,
+                 headers: dict | None = None) -> tuple[int, dict, bytes]:
         for attempt in (0, 1):
             if self._conn is None:
                 self._conn = HTTPConnection(self.host, self.port,
                                             timeout=self.timeout)
             try:
-                self._conn.request("GET", path)
+                self._conn.request("GET", path, headers=headers or {})
                 r = self._conn.getresponse()
                 return r.status, dict(r.getheaders()), r.read()
             except (ConnectionError, OSError):
@@ -433,8 +445,9 @@ class Client:
                     raise
         raise AssertionError("unreachable")
 
-    def _ok(self, path: str) -> tuple[dict, bytes]:
-        status, headers, body = self._request(path)
+    def _ok(self, path: str, headers: dict | None = None
+            ) -> tuple[dict, bytes]:
+        status, headers, body = self._request(path, headers)
         if status != 200:
             try:
                 msg = json.loads(body)["error"]
@@ -464,8 +477,13 @@ class Client:
     def manifest(self) -> dict:
         return json.loads(self._ok("/v1/manifest")[1])
 
-    def metrics(self) -> str:
-        return self._ok("/metrics")[1].decode()
+    def metrics(self, openmetrics: bool = False) -> str:
+        """The ``/metrics`` exposition — 0.0.4 text by default;
+        ``openmetrics=True`` negotiates the OpenMetrics document (the one
+        carrying latency-bucket exemplars)."""
+        hdrs = ({"Accept": "application/openmetrics-text; version=1.0.0"}
+                if openmetrics else None)
+        return self._ok("/metrics", hdrs)[1].decode()
 
     def metrics_dict(self) -> dict[str, list[tuple[dict, float]]]:
         """Parsed ``/metrics``: ``{name: [(labels, value), ...]}`` (histogram

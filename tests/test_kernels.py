@@ -213,3 +213,47 @@ def test_kernel_metrics_split_compile_from_execute():
     comp = seconds.snapshot(**lbl, phase="compile")
     execd = seconds.snapshot(**lbl, phase="execute")
     assert comp["count"] >= 2 and execd["count"] >= 2
+
+
+def test_kernel_sync_gated_on_observability(monkeypatch):
+    """block_until_ready runs only when the timing is observable — first-
+    call compiles, an enabled tracer, or a collecting request context —
+    so steady-state uninstrumented calls keep async dispatch (the
+    production path on accelerator backends).  SYNC forces either way."""
+    import jax
+
+    from repro import obs
+    from repro.obs import context as obs_context
+
+    assert not obs.TRACER.enabled
+    syncs = {"n": 0}
+    real = jax.block_until_ready
+
+    def counting(x):
+        syncs["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", counting)
+
+    x = blocks(3, 8, seed=771)
+    ops.lorenzo_encode(x, eps=5e-3, interpret=True)  # fresh sig: compile
+    assert syncs["n"] == 1
+    ops.lorenzo_encode(x, eps=5e-3, interpret=True)  # unobserved execute
+    assert syncs["n"] == 1
+    with obs_context.request(collect=True):  # tail collection active
+        ops.lorenzo_encode(x, eps=5e-3, interpret=True)
+    assert syncs["n"] == 2
+    obs.trace.enable()
+    try:
+        ops.lorenzo_encode(x, eps=5e-3, interpret=True)  # tracer active
+    finally:
+        obs.trace.disable()
+        obs.trace.reset()
+    assert syncs["n"] == 3
+    monkeypatch.setattr(ops, "SYNC", False)  # hard off wins over collection
+    with obs_context.request(collect=True):
+        ops.lorenzo_encode(x, eps=5e-3, interpret=True)
+    assert syncs["n"] == 3
+    monkeypatch.setattr(ops, "SYNC", True)  # hard on syncs unobserved calls
+    ops.lorenzo_encode(x, eps=5e-3, interpret=True)
+    assert syncs["n"] == 4

@@ -235,18 +235,48 @@ def test_chrome_trace_export_shape():
     assert len(evs) == 3 and all(e["dur"] == 5.0 for e in evs)
 
 
-def test_exemplar_rendered_and_parse_tolerant():
+def test_exemplar_rendered_only_in_openmetrics_and_parse_tolerant():
     reg = obs.Registry()
+    reg.counter("cz_t_ex_total", "t").inc(2)
     h = reg.histogram("cz_t_ex_seconds", "t", buckets=(0.01, 0.1))
     h.observe(0.05)
     h.exemplar(0.05, "trace-xyz")
+
+    # default 0.0.4 exposition: exemplar-free — the legacy Prometheus
+    # parser errors on exemplar syntax, failing the whole scrape
     text = reg.render()
-    line = next(ln for ln in text.splitlines()
+    assert "trace-xyz" not in text and "# EOF" not in text
+    assert "# TYPE cz_t_ex_total counter" in text
+
+    # OpenMetrics document: exemplar attached, _total-stripped counter
+    # family, '# EOF' terminator
+    om = reg.render(openmetrics=True)
+    line = next(ln for ln in om.splitlines()
                 if 'le="0.1"' in ln and "cz_t_ex_seconds_bucket" in ln)
     assert '# {trace_id="trace-xyz"}' in line
-    parsed = obs.parse_prometheus(text)
-    assert parsed["cz_t_ex_seconds_bucket"]
-    assert ({"le": "0.1"}, 1.0) in parsed["cz_t_ex_seconds_bucket"]
+    assert "# TYPE cz_t_ex counter" in om
+    assert "cz_t_ex_total 2" in om.splitlines()
+    assert om.endswith("# EOF\n")
+
+    # both formats parse to the same samples
+    for doc in (text, om):
+        parsed = obs.parse_prometheus(doc)
+        assert ({"le": "0.1"}, 1.0) in parsed["cz_t_ex_seconds_bucket"]
+        assert parsed["cz_t_ex_total"] == [({}, 2.0)]
+
+
+def test_parse_keeps_hash_inside_quoted_label_values():
+    # a '#' inside a quoted label value is sample content, not an exemplar
+    line = 'cz_t_err_total{msg="boom # not \\"an\\" exemplar"} 1\n'
+    parsed = obs.parse_prometheus(line)
+    assert parsed["cz_t_err_total"] == \
+        [({"msg": 'boom # not "an" exemplar'}, 1.0)]
+    # ...while a real exemplar after such a value is still stripped
+    with_ex = ('cz_t_err_seconds_bucket{msg="a # b",le="0.1"} 3 '
+               '# {trace_id="t-1"} 0.05 1.0\n')
+    parsed = obs.parse_prometheus(with_ex)
+    assert parsed["cz_t_err_seconds_bucket"] == \
+        [({"msg": "a # b", "le": "0.1"}, 3.0)]
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +315,7 @@ def test_slow_request_correlated_end_to_end(tmp_path, monkeypatch):
             rec = c.trace(rid)
             chrome = c.trace(rid, chrome=True)
             text = c.metrics()
+            om = c.metrics(openmetrics=True)
             evts = c.events(200)
 
         # kept tail trace, same ID, with the spans the request touched
@@ -300,13 +331,18 @@ def test_slow_request_correlated_end_to_end(tmp_path, monkeypatch):
         assert any(e["event"] == "http.request" and e["code"] == 200
                    for e in mine)
 
-        # /metrics: sampler counters + a bucket exemplar pointing at a kept
-        # trace (latest keep wins the bucket, so match any retained ID)
+        # /metrics: sampler counters; the default 0.0.4 scrape must stay
+        # exemplar-free (the legacy parser rejects exemplar syntax), while
+        # the negotiated OpenMetrics document carries a bucket exemplar
+        # pointing at a kept trace (latest keep wins the bucket, so match
+        # any retained ID)
         kept_ids = {t["request_id"] for t in doc["traces"]}
-        assert any(f'trace_id="{k}"' in text for k in kept_ids)
-        md = obs.parse_prometheus(text)
-        assert md["cz_serve_traces_kept_total"]
-        assert sum(v for _, v in md["cz_serve_traces_kept_total"]) >= 1
+        assert "trace_id=" not in text
+        assert any(f'trace_id="{k}"' in om for k in kept_ids)
+        assert om.endswith("# EOF\n")
+        for md in (obs.parse_prometheus(text), obs.parse_prometheus(om)):
+            assert md["cz_serve_traces_kept_total"]
+            assert sum(v for _, v in md["cz_serve_traces_kept_total"]) >= 1
 
 
 def test_error_request_kept_with_http_status(tmp_path):
@@ -317,7 +353,13 @@ def test_error_request_kept_with_http_status(tmp_path):
         assert status == 400
         rec_ids = None
         with Client(srv.url) as c:
-            rec_ids = {t["request_id"]: t for t in c.traces()["traces"]}
+            # HTTP-layer failures finish the sampler just after the response
+            # bytes hit the wire — poll briefly for the keep to land
+            for _ in range(50):
+                rec_ids = {t["request_id"]: t for t in c.traces()["traces"]}
+                if "e2e-bad-1" in rec_ids:
+                    break
+                time.sleep(0.02)
         assert headers["X-CZ-Request-Id"] == "e2e-bad-1"
         assert rec_ids["e2e-bad-1"]["reason"] == "error"
         assert "http 400" in rec_ids["e2e-bad-1"]["error"]
