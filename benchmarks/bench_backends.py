@@ -12,9 +12,19 @@ cost, and what does the read path ask of an object store?
 * **amplification** — RangeStore's request counters over the cold pass:
   bytes fetched vs bytes stored, and requests per query.  This is the
   honesty check that region reads stay byte-ranged on S3-style backends.
+* **http** — the same cold/warm queries through ``HttpStore`` against a
+  loopback :class:`StaticFileServer` over the file backend's directory,
+  with its own amplification readout.  The requests-per-query figure is
+  hard-asserted equal to the range row: going remote must not change what
+  the read path asks of the store.
+* **prefetch** — the cold pass on a latency-injected RangeStore with
+  ``prefetch`` off vs on.  Request and byte counts are hard-asserted
+  identical (prefetch reorders fetches, it must never add any); the
+  wall-clock speedup is emitted but not asserted (CI machines jitter).
 """
 from __future__ import annotations
 
+import os
 import shutil
 import tempfile
 import time
@@ -23,8 +33,22 @@ import numpy as np
 
 from repro.core import CompressionSpec
 from repro.store import CZDataset, FileStore, MemoryStore, RangeStore
+from repro.store.backends import HttpStore, StaticFileServer
 
 from .common import dataset, emit, save_json
+
+
+class _SlowRangeStore(RangeStore):
+    """RangeStore with injected per-get latency — a stand-in for a remote
+    object store, so prefetch has real round-trips to overlap."""
+
+    def __init__(self, latency_s: float = 0.002):
+        super().__init__()
+        self.latency_s = latency_s
+
+    def get(self, key, byte_range=None):
+        time.sleep(self.latency_s)
+        return super().get(key, byte_range)
 
 
 def _queries(n: int, box: int, k: int, seed: int = 11) -> np.ndarray:
@@ -104,6 +128,75 @@ def run(quick: bool = True):
     emit("backends_range_amplification",
          results["backends"]["range"]["requests_per_query"] * 1e6,
          f"fetched{amp['bytes_fetched']}_stored{amp['bytes_stored']}")
+
+    # -- http: the file backend's directory, served over loopback ----------
+    stored = sum(os.path.getsize(os.path.join(dp, f))
+                 for dp, _, fs in os.walk(f"{tmp}/ds") for f in fs)
+    with StaticFileServer(f"{tmp}/ds") as srv, HttpStore(srv.url) as store:
+        before = store.stats()
+        t0 = time.perf_counter()
+        with CZDataset(store, cache_chunks=4) as ds:
+            for lo in lows:
+                ds.read_box(qois[0], 0, lo, lo + box)
+            cold_s = time.perf_counter() - t0
+            after = store.stats()
+            ds.read_box(qois[0], 0, lows[0], lows[0] + box)
+            t0 = time.perf_counter()
+            for lo in lows:
+                ds.read_box(qois[0], 0, lo, lo + box)
+            warm_s = time.perf_counter() - t0
+    http_amp = {
+        "range_requests": after["range_requests"] - before["range_requests"],
+        "bytes_fetched": after["bytes_fetched"] - before["bytes_fetched"],
+        "bytes_stored": stored,
+    }
+    http_row = {
+        "cold_us_per_query": cold_s / n_queries * 1e6,
+        "warm_us_per_query": warm_s / n_queries * 1e6,
+        "amplification": http_amp,
+        "fetched_over_stored": http_amp["bytes_fetched"] / stored,
+        "requests_per_query": http_amp["range_requests"] / n_queries,
+    }
+    results["backends"]["http"] = http_row
+    emit("backends_cold_http", http_row["cold_us_per_query"],
+         f"{n_queries}q_box{box}")
+    emit("backends_warm_http", http_row["warm_us_per_query"],
+         f"{n_queries}q_box{box}")
+    # parity check: a remote root asks exactly what an object store does
+    assert http_row["requests_per_query"] == \
+        results["backends"]["range"]["requests_per_query"], \
+        f"http amplification drifted from range: {http_row} vs " \
+        f"{results['backends']['range']}"
+
+    # -- prefetch: overlap round-trips on a latency-injected store ---------
+    prefetch_rows = {}
+    for depth in (0, 4):
+        store = _SlowRangeStore()
+        with CZDataset(store, "a", spec=spec, workers=4) as ds:
+            for k in range(steps):
+                ds.append({q: f + np.float32(k) for q, f in fields.items()},
+                          time=float(k))
+        before = store.stats()
+        t0 = time.perf_counter()
+        with CZDataset(store, cache_chunks=4, prefetch=depth) as ds:
+            for lo in lows:
+                ds.read_box(qois[0], 0, lo, lo + box)
+        cold_s = time.perf_counter() - t0
+        after = store.stats()
+        prefetch_rows[depth] = {
+            "cold_us_per_query": cold_s / n_queries * 1e6,
+            "range_requests": after["range_requests"] - before["range_requests"],
+            "bytes_fetched": after["bytes_fetched"] - before["bytes_fetched"],
+        }
+    r0, r4 = prefetch_rows[0], prefetch_rows[4]
+    # hard invariant: prefetch reorders fetches but never adds any
+    assert (r4["range_requests"], r4["bytes_fetched"]) == \
+        (r0["range_requests"], r0["bytes_fetched"]), \
+        f"prefetch changed request amplification: {prefetch_rows}"
+    speedup = r0["cold_us_per_query"] / r4["cold_us_per_query"]
+    results["prefetch"] = {"rows": prefetch_rows, "cold_speedup": speedup}
+    emit("backends_prefetch_cold", r4["cold_us_per_query"],
+         f"speedup{speedup:.2f}x_{r4['range_requests']}req")
 
     shutil.rmtree(tmp, ignore_errors=True)
     path = save_json("backends", results)

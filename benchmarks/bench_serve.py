@@ -116,7 +116,7 @@ def _traces_readout(srv, err_rid: str, echoed: str | None) -> dict:
     }
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, prefetch: int = 0):
     n_threads = 4 if quick else 8
     n_req = 60 if quick else 400         # per thread
     box = 24
@@ -135,7 +135,7 @@ def run(quick: bool = True):
     lows = rng.integers(0, n - box, (n_regions, 3))
     weights = _zipf_weights(n_regions)
     srv_kw = dict(port=0, cache_bytes=32 << 20, cache_chunks=32,
-                  max_inflight=n_threads)
+                  max_inflight=n_threads, prefetch=prefetch)
 
     # phase 1: sampling disabled — the overhead baseline
     with RegionHTTPServer(root, sample=False, **srv_kw) as srv:
@@ -166,6 +166,7 @@ def run(quick: bool = True):
 
     results = {
         "n": n, "box": box, "threads": n_threads, "requests": total,
+        "prefetch": prefetch,
         "n_regions": n_regions, "wall_s": wall, "rps": rps,
         "p50_ms": float(p50), "p99_ms": float(p99),
         "p50_nosample_ms": base_p50,
@@ -201,5 +202,7 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run (also the default under benchmarks.run)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="reader-side chunk prefetch depth (0 disables)")
     args = ap.parse_args()
-    run(quick=not args.full)
+    run(quick=not args.full, prefetch=args.prefetch)

@@ -34,6 +34,7 @@ touched): no open file handles, no seeks, S3-shaped access.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import io
 import json
@@ -66,6 +67,9 @@ _FETCH_SECONDS = obs.histogram("cz_reader_fetch_seconds",
 _DECODE_SECONDS = obs.histogram("cz_reader_decode_seconds",
                                 "Cold-chunk decode wall time.",
                                 buckets=obs.FAST_BUCKETS)
+_PREFETCHED = obs.counter("cz_reader_prefetch_chunks_total",
+                          "Prefetcher chunk outcomes by result.",
+                          labelnames=("result",))
 
 
 def _source(path, store: stores.Store | None) -> tuple[stores.Store, str]:
@@ -355,6 +359,133 @@ def describe(path: str, verify: bool = False,
     return out
 
 
+_PREFETCH_POOL = None
+_PREFETCH_POOL_GUARD = threading.Lock()
+
+
+def _prefetch_pool():
+    """Shared daemon pool for prefetch batches.  Separate from the store
+    layer's I/O pool (``shared_io_pool``): a batch task here fans out into
+    ``store.get_many``, which may submit to *that* pool — one pool for both
+    would deadlock once saturated with waiting parents."""
+    global _PREFETCH_POOL
+    with _PREFETCH_POOL_GUARD:
+        if _PREFETCH_POOL is None:
+            _PREFETCH_POOL = concurrent.futures.ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="cz-prefetch")
+        return _PREFETCH_POOL
+
+
+class ChunkPrefetcher:
+    """Overlaps upcoming chunks' store fetches with the current chunk's
+    decode — the async half of the remote read path.
+
+    ``read_box`` walks its covering chunks in a known order, so while chunk
+    *i* inflates, the byte-range gets for chunks *i+1 .. i+depth* can
+    already be on the wire (one ``store.get_many`` batch per scheduling
+    step, pipelined by remote backends).  ``fetch_chunk`` then consumes the
+    prefetched bytes via :meth:`take` instead of issuing its own get.
+
+    Discipline, so prefetch can never change results or duplicate work:
+
+    * a chunk already in the reader's decode cache, already in flight here,
+      or claimed by the caller's ``skip`` predicate (the serve tier passes
+      ``SingleFlight.in_flight``) is not scheduled;
+    * the buffer is bounded (``max_buffered``, default ``2×depth``): the
+      oldest unconsumed entry is evicted and simply refetched on demand if
+      its turn ever comes — eviction is a perf event, not an error;
+    * a failed or evicted prefetch makes :meth:`take` return ``None`` and
+      the caller falls back to a direct ``store.get`` — the prefetcher is
+      purely advisory.
+
+    Outcomes are counted in
+    ``cz_reader_prefetch_chunks_total{result=issued|used|evicted|failed}``.
+    """
+
+    def __init__(self, reader: "FieldReader", depth: int = 2,
+                 max_buffered: int | None = None):
+        self.reader = reader
+        self.depth = max(1, int(depth))
+        self.max_buffered = int(max_buffered or 2 * self.depth)
+        self._pending: collections.OrderedDict[
+            int, concurrent.futures.Future] = collections.OrderedDict()
+        self._guard = threading.Lock()
+        self._closed = False
+
+    def schedule(self, cis, skip=None) -> int:
+        """Issue ranged fetches for the chunk indices not already cached,
+        in flight, or skipped.  Returns how many were newly issued."""
+        todo = []
+        with self._guard:
+            if self._closed:
+                return 0
+            for ci in cis:
+                ci = int(ci)
+                if ci in self._pending or ci in self.reader._cache:
+                    continue
+                if skip is not None and skip(ci):
+                    continue
+                fut = concurrent.futures.Future()
+                self._pending[ci] = fut
+                todo.append((ci, fut))
+            while len(self._pending) > self.max_buffered:
+                _ci, old = self._pending.popitem(last=False)
+                old.cancel()  # batch may still be running: set_* is guarded
+                _PREFETCHED.inc(result="evicted")
+        if todo:
+            _PREFETCHED.inc(len(todo), result="issued")
+            _prefetch_pool().submit(self._fetch_batch, todo)
+        return len(todo)
+
+    def _fetch_batch(self, todo):
+        r = self.reader
+        reqs = []
+        for ci, _fut in todo:
+            off = int(r._chunk_off[ci])
+            reqs.append((r.key, (off, off + r.header["chunk_sizes"][ci])))
+        try:
+            results = r.store.get_many(reqs)
+        except BaseException as e:  # delivered through the futures
+            for _ci, fut in todo:
+                if not fut.cancelled():
+                    try:
+                        fut.set_exception(e)
+                    except concurrent.futures.InvalidStateError:
+                        pass
+            return
+        for (_ci, fut), data in zip(todo, results):
+            try:
+                fut.set_result(data)
+            except concurrent.futures.InvalidStateError:
+                pass  # evicted while the batch was in flight
+
+    def take(self, ci: int) -> bytes | None:
+        """Prefetched compressed bytes for ``ci`` (waiting on an in-flight
+        batch), or ``None`` when the chunk was never scheduled, was evicted,
+        or its fetch failed — callers fall back to a direct get."""
+        with self._guard:
+            fut = self._pending.pop(int(ci), None)
+        if fut is None:
+            return None
+        try:
+            data = fut.result()
+        except (concurrent.futures.CancelledError, Exception):
+            _PREFETCHED.inc(result="failed")
+            return None
+        if len(data) != self.reader.header["chunk_sizes"][ci]:
+            _PREFETCHED.inc(result="failed")  # short read: refetch directly
+            return None
+        _PREFETCHED.inc(result="used")
+        return data
+
+    def close(self) -> None:
+        with self._guard:
+            self._closed = True
+            for fut in self._pending.values():
+                fut.cancel()
+            self._pending.clear()
+
+
 class FieldReader:
     """Random block/region access with an LRU chunk cache (paper's
     decompressor).  Thread-safe: chunk inflation and the cache are guarded by
@@ -371,7 +502,8 @@ class FieldReader:
 
     def __init__(self, path: str, cache_chunks: int = 8,
                  device: str | None = None,
-                 store: stores.Store | None = None):
+                 store: stores.Store | None = None,
+                 prefetch: int = 0):
         self.path = str(path)
         self.store, self.key = _source(path, store)
         self.header, data_start, _ = _fetch_header(self.store, self.key)
@@ -394,6 +526,9 @@ class FieldReader:
         self._closed = False
         self.cache_hits = 0
         self.cache_misses = 0
+        self.prefetch = max(0, int(prefetch))
+        self._prefetcher = (ChunkPrefetcher(self, depth=self.prefetch)
+                            if self.prefetch else None)
 
     @property
     def nchunks(self) -> int:
@@ -418,6 +553,8 @@ class FieldReader:
         chunk cache.  There is no file handle to release — any later fetch
         raises ``ValueError`` (a holder that outlives its owner's close must
         fail loudly, not resurrect a retired cache)."""
+        if self._prefetcher is not None:
+            self._prefetcher.close()
         with self._lock:
             self._closed = True
             self._cache.clear()
@@ -450,8 +587,11 @@ class FieldReader:
             _READS.inc(result="miss")
             off = int(self._chunk_off[ci])
             t0 = time.perf_counter_ns()
-            buf = self.store.get(
-                self.key, (off, off + self.header["chunk_sizes"][ci]))
+            buf = (self._prefetcher.take(ci)
+                   if self._prefetcher is not None else None)
+            if buf is None:
+                buf = self.store.get(
+                    self.key, (off, off + self.header["chunk_sizes"][ci]))
             t1 = time.perf_counter_ns()
             out = self._pipe.decompress_chunk(buf, self._chunk_nblk[ci], self.format)
             t2 = time.perf_counter_ns()
@@ -495,7 +635,8 @@ class FieldReader:
         return self._chunk(ci)[off]
 
     def read_box(self, lo: tuple[int, int, int],
-                 hi: tuple[int, int, int], chunk_getter=None) -> np.ndarray:
+                 hi: tuple[int, int, int], chunk_getter=None,
+                 prefetch_skip=None) -> np.ndarray:
         """Decode the sub-box ``[lo, hi)`` touching only the covering chunks.
 
         The box is assembled block by block through the LRU chunk cache — the
@@ -503,6 +644,13 @@ class FieldReader:
         the chunks that were.  ``chunk_getter`` substitutes another
         ``ci -> chunk array`` source (e.g. the serve tier's single-flight
         scheduler) for the reader's own ``_chunk``.
+
+        With ``prefetch`` enabled on the reader, the walk schedules the next
+        ``prefetch`` chunks' byte-range fetches just before decoding each
+        chunk, so wire time overlaps decode time.  ``prefetch_skip`` vetoes
+        individual chunk indices (the serve tier passes its single-flight
+        in-flight check so prefetch never duplicates a fetch another request
+        is already performing).
         """
         lo = tuple(int(v) for v in lo)
         hi = tuple(int(v) for v in hi)
@@ -510,8 +658,30 @@ class FieldReader:
         bs = self.spec.block_size
         blocks = self.box_blocks(lo, hi)  # validates the box
         out = np.empty(tuple(b - a for a, b in zip(lo, hi)), self.dtype)
+        pf = self._prefetcher
+        sched = None
+        if pf is not None:
+            order: list[int] = []
+            for b in blocks:  # distinct covering chunks, visit order
+                c = self.block_chunk(*b)[0]
+                if not order or order[-1] != c:
+                    order.append(c)
+            pos = {c: i for i, c in enumerate(order)}
+            fired: set[int] = set()
+
+            def sched(ci):
+                i = pos[ci]
+                if i in fired:
+                    return
+                fired.add(i)
+                upcoming = order[i + 1:i + 1 + pf.depth]
+                if upcoming:
+                    pf.schedule(upcoming, skip=prefetch_skip)
+
         for bx, by, bz in blocks:
             ci, off = self.block_chunk(bx, by, bz)
+            if sched is not None:
+                sched(ci)  # next chunks' fetches ride while this one decodes
             block = get(ci)[off]
             # intersection of this block's extent with the box
             b0 = (bx * bs, by * bs, bz * bs)

@@ -16,14 +16,18 @@ Examples:
   cz-compress inspect --json DATASET            # machine-readable tables
   cz-compress gc --dry-run DATASET              # list orphaned members
   cz-compress serve DATASET --port 8423         # HTTP region-query service
+  cz-compress serve http://fileserver/run42 --prefetch 4  # remote dataset root
   cz-compress parallel --ranks 4 --trace t.json # merged per-rank Chrome trace
   cz-compress stats http://127.0.0.1:8423       # pretty-print live /metrics
 
 DATASET is a directory path or a store URL (``file:///data/run42``,
-``mem://scratch`` — see repro.store.backends): inspect, gc, and serve work
-over any registered backend.  ``--trace OUT.json`` on compress/parallel/
-serve collects repro.obs spans and writes a Chrome trace-event file —
-open it at https://ui.perfetto.dev.
+``mem://scratch``, ``http://host/ds`` — see repro.store.backends): inspect,
+gc, and serve work over any registered backend; http(s):// roots are
+read-only (any static file server exporting a dataset directory, e.g.
+``python -m repro.store.backends.http DIR``) and get retry/backoff by
+default (``--retries``/``--timeout`` on serve).  ``--trace OUT.json`` on
+compress/parallel/serve collects repro.obs spans and writes a Chrome
+trace-event file — open it at https://ui.perfetto.dev.
 """
 from __future__ import annotations
 

@@ -50,9 +50,10 @@ from __future__ import annotations
 import collections
 import io
 import json
+import socket
 import threading
 import time
-from http.client import HTTPConnection
+from http.client import HTTPConnection, HTTPException
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
@@ -62,6 +63,7 @@ from repro import obs
 from repro.obs import context as _context
 from repro.obs import events as _events
 from repro.obs.sampling import chrome_trace
+from repro.store.backends import open_store
 
 from .region import FieldRegionServer
 
@@ -352,7 +354,8 @@ class RegionHTTPServer(ThreadingHTTPServer):
                  cache_chunks: int = 32, max_inflight: int = 8,
                  verbose: bool = False, sample: bool = True,
                  trace_budget_bytes: int = 4 << 20,
-                 trace_slow_ms: float | None = None):
+                 trace_slow_ms: float | None = None,
+                 prefetch: int = 0):
         self._owns_region = not isinstance(dataset, FieldRegionServer)
         self.region = (FieldRegionServer(dataset, cache_readers=cache_readers,
                                          cache_chunks=cache_chunks,
@@ -360,12 +363,15 @@ class RegionHTTPServer(ThreadingHTTPServer):
                                          max_inflight=max(1, int(max_inflight)),
                                          sample=sample,
                                          trace_budget_bytes=trace_budget_bytes,
-                                         trace_slow_ms=trace_slow_ms)
+                                         trace_slow_ms=trace_slow_ms,
+                                         prefetch=prefetch)
                        if self._owns_region else dataset)
         self.verbose = verbose
         self._responses = collections.Counter()
         self._resp_lock = threading.Lock()
         self._thread: threading.Thread | None = None
+        self._conns: set = set()
+        self._conn_lock = threading.Lock()
         self.closed = False
         try:
             super().__init__((host, port), _RegionHandler)
@@ -398,6 +404,17 @@ class RegionHTTPServer(ThreadingHTTPServer):
         self._thread.start()
         return self
 
+    def get_request(self):
+        request, addr = super().get_request()
+        with self._conn_lock:
+            self._conns.add(request)
+        return request, addr
+
+    def shutdown_request(self, request):
+        with self._conn_lock:
+            self._conns.discard(request)
+        super().shutdown_request(request)
+
     def close(self) -> None:
         if self.closed:
             return
@@ -406,6 +423,21 @@ class RegionHTTPServer(ThreadingHTTPServer):
             self.shutdown()
             self._thread.join(timeout=5)
         self.server_close()
+        # Sever lingering keep-alive connections so their handler threads
+        # exit now — otherwise a client's pooled socket stays "alive" and
+        # gets answered by a zombie handler over a closed dataset.
+        with self._conn_lock:
+            stale = list(self._conns)
+            self._conns.clear()
+        for request in stale:
+            try:
+                request.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                request.close()
+            except OSError:
+                pass
         if self._owns_region:
             self.region.close()
 
@@ -429,6 +461,15 @@ class Client:
 
     def _request(self, path: str,
                  headers: dict | None = None) -> tuple[int, dict, bytes]:
+        """The single retry-once helper **every** client GET goes through
+        (`/v1/region`, `/v1/manifest`, `/metrics`, `/debug/*`, `/healthz`):
+        a request that trips over a stale keep-alive connection — the server
+        restarted or idle-timed the socket since the last call — is replayed
+        once on a fresh connection.  Safe because the API surface is
+        idempotent GETs.  ``http.client`` faults (``CannotSendRequest``
+        after a half-drained response, ``BadStatusLine`` on a torn reply)
+        get the same treatment as socket-level ``OSError``s: both mean
+        "this connection is dead", not "this request failed"."""
         for attempt in (0, 1):
             if self._conn is None:
                 self._conn = HTTPConnection(self.host, self.port,
@@ -437,9 +478,7 @@ class Client:
                 self._conn.request("GET", path, headers=headers or {})
                 r = self._conn.getresponse()
                 return r.status, dict(r.getheaders()), r.read()
-            except (ConnectionError, OSError):
-                # stale keep-alive (server restarted / idle timeout): retry
-                # once on a fresh connection
+            except (HTTPException, ConnectionError, OSError):
                 self.close()
                 if attempt:
                     raise
@@ -557,7 +596,7 @@ def main(argv=None) -> int:
         description="HTTP region-query service over a CZDataset: "
                     "/v1/region, /v1/manifest, /healthz, /metrics.")
     ap.add_argument("dataset", help="CZDataset directory or store URL "
-                    "(file://, mem://, any registered backend)")
+                    "(file://, mem://, http://, any registered backend)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8423,
                     help="0 picks an ephemeral port (printed on start)")
@@ -583,13 +622,30 @@ def main(argv=None) -> int:
                          "the live p99 of request latency)")
     ap.add_argument("--events", metavar="OUT.jsonl",
                     help="append structured events as JSON lines to a file")
+    ap.add_argument("--prefetch", type=int, default=0, metavar="N",
+                    help="chunks each reader fetches ahead of decode during "
+                         "a region query (0 = off; worth 2-8 over remote "
+                         "stores)")
+    ap.add_argument("--retries", type=int, default=None, metavar="N",
+                    help="store-level retries on transient faults (default: "
+                         "2 for remote backends like http://, 0 otherwise; "
+                         "0 disables)")
+    ap.add_argument("--timeout", type=float, default=None, metavar="SEC",
+                    help="per-request store socket timeout and retry "
+                         "deadline (default: backend's own)")
     args = ap.parse_args(argv)
 
     if args.trace:
         obs.trace.enable()
     if args.events:
         _events.configure(path=args.events)
-    srv = RegionHTTPServer(args.dataset, host=args.host, port=args.port,
+    # resolve the root here (rather than inside CZDataset) when a policy
+    # knob is set, so the retry/timeout wrapping is applied exactly once
+    dataset = args.dataset
+    if args.retries is not None or args.timeout is not None:
+        dataset = open_store(dataset, retries=args.retries,
+                             timeout=args.timeout)
+    srv = RegionHTTPServer(dataset, host=args.host, port=args.port,
                            cache_bytes=int(args.cache_mb * 2**20),
                            cache_readers=args.cache_readers,
                            cache_chunks=args.cache_chunks,
@@ -597,7 +653,8 @@ def main(argv=None) -> int:
                            sample=not args.no_sample,
                            trace_budget_bytes=int(args.trace_budget_mb
                                                   * 2**20),
-                           trace_slow_ms=args.trace_slow_ms)
+                           trace_slow_ms=args.trace_slow_ms,
+                           prefetch=args.prefetch)
     qs = ", ".join(srv.region.ds.quantities) or "(empty)"
     print(f"serving {args.dataset} [{qs}] at {srv.url}")
     print(f"  GET {srv.url}/v1/region/{{quantity}}/{{t}}?lo=x,y,z&hi=x,y,z")

@@ -65,11 +65,13 @@ class FieldRegionServer:
     ----------
     dataset:
         A :class:`repro.store.CZDataset` **or** a dataset root — a local
-        path or a store URL (``file://``, ``mem://``, any registered
-        backend); the serve tier is backend-agnostic.  A root is opened —
-        and therefore closed — by this server; a dataset object is
-        borrowed, and :meth:`close` leaves it untouched (the caller opened
-        it, the caller closes it).
+        path, a store URL (``file://``, ``mem://``, ``http://``, any
+        registered backend), or a :class:`~repro.store.backends.Store`
+        instance (the serve CLI passes a policy-wrapped store this way);
+        the serve tier is backend-agnostic.  A root is opened — and
+        therefore closed — by this server; a dataset object is borrowed,
+        and :meth:`close` leaves it untouched (the caller opened it, the
+        caller closes it).
     cache_bytes:
         Byte budget for the decoded-region LRU (``0`` disables it; chunk
         caching below is unaffected).
@@ -89,21 +91,32 @@ class FieldRegionServer:
     trace_slow_ms:
         Fixed slow threshold in milliseconds; ``None`` (default) tracks the
         live p99 of this server's own latency histogram.
+    prefetch:
+        Chunks each reader fetches ahead of decode during a region query
+        (``0`` = off).  Worth enabling over latency-bearing remote stores
+        (``http://``); applies only to roots this server opens itself (a
+        borrowed CZDataset keeps its own setting).
     """
 
     def __init__(self, dataset, cache_readers: int = 16,
                  cache_chunks: int = 32, cache_bytes: int = 64 << 20,
                  max_inflight: int | None = None, sample: bool = True,
                  trace_budget_bytes: int = 4 << 20,
-                 trace_slow_ms: float | None = None):
+                 trace_slow_ms: float | None = None,
+                 prefetch: int = 0):
         from repro.store import CZDataset
+        from repro.store.backends import Store
 
-        self._owns_dataset = isinstance(dataset, (str, bytes)) or \
+        # a path, URL, or bare Store is a *root* we open (and own) a
+        # read-only dataset over; a CZDataset instance is borrowed as-is
+        self._owns_dataset = isinstance(dataset, (str, bytes, Store)) or \
             hasattr(dataset, "__fspath__")
         if self._owns_dataset:
-            dataset = CZDataset(str(dataset), mode="r",
+            root = dataset if isinstance(dataset, Store) else str(dataset)
+            dataset = CZDataset(root, mode="r",
                                 cache_readers=cache_readers,
-                                cache_chunks=cache_chunks)
+                                cache_chunks=cache_chunks,
+                                prefetch=prefetch)
         self.ds = dataset
         self.closed = False
         self.cache = RegionCache(cache_bytes)

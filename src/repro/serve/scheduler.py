@@ -59,6 +59,13 @@ class SingleFlight:
         self.led = 0        # calls that executed fn
         self.joined = 0     # calls coalesced onto an existing flight
 
+    def in_flight(self, key) -> bool:
+        """Whether a flight for ``key`` is currently airborne — the veto the
+        reader's prefetcher consults so it never issues a byte-range fetch
+        another request's decode is already performing."""
+        with self._lock:
+            return key in self._flights
+
     def do(self, key, fn):
         rid = _context.request_id()
         with self._lock:
@@ -134,7 +141,9 @@ class ChunkScheduler:
                 out = pinned[ci] = self._chunk(reader, ci)
             return out
 
-        return reader.read_box(lo, hi, chunk_getter=get)
+        return reader.read_box(
+            lo, hi, chunk_getter=get,
+            prefetch_skip=lambda ci: self._sf.in_flight((reader.path, ci)))
 
     def _chunk(self, reader, ci: int) -> np.ndarray:
         return self._sf.do((reader.path, ci),

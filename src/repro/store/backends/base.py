@@ -8,6 +8,9 @@ put and byte-range get can hold a dataset:
 * :meth:`Store.get` — fetch an object, optionally a byte range of it (the
   random-access path: ``FieldReader`` pulls footers and chunks with ranged
   gets and never holds an open handle);
+* :meth:`Store.get_many` — batched ranged gets (default: a sequential
+  loop); remote backends override with a pipelined fetch so prefetch can
+  overlap round-trips with decode;
 * :meth:`Store.put` — write a whole object (members are immutable once
   written, so there is no partial update to express);
 * :meth:`Store.put_atomic` — all-or-nothing overwrite, the manifest commit
@@ -32,8 +35,10 @@ import abc
 import contextlib
 import io
 import threading
+from concurrent.futures import ThreadPoolExecutor
 
-__all__ = ["Store", "StoreKeyError", "check_key"]
+__all__ = ["Store", "StoreKeyError", "StoreRangeError", "check_key",
+           "check_range", "shared_io_pool"]
 
 
 class StoreKeyError(KeyError):
@@ -41,6 +46,52 @@ class StoreKeyError(KeyError):
 
     def __str__(self):  # KeyError repr()s its arg; keep messages readable
         return self.args[0] if self.args else ""
+
+
+class StoreRangeError(IOError):
+    """A ranged get started at or past the object's end (HTTP 416).
+
+    Permanent like :class:`StoreKeyError` — the request can never succeed
+    against the object as stored — so retry layers must not retry it.
+    """
+
+    def __init__(self, key: str, start: int, size: int):
+        super().__init__(
+            f"range start {start} is at/past the end of {key!r} "
+            f"({size if size >= 0 else 'unknown'} bytes)")
+        self.key = key
+        self.start = int(start)
+        self.size = int(size)
+
+
+def check_range(key: str, start: int, size: int) -> int:
+    """Validate a range start against an object of ``size`` bytes, per the
+    :meth:`Store.get` contract: ``start == 0`` is always in range (an empty
+    object reads as ``b""``), any other start must fall strictly inside the
+    object.  Returns ``start`` as an int."""
+    start = int(start)
+    if start < 0:
+        raise ValueError(f"byte_range start must be >= 0, got {start}")
+    if start and start >= size:
+        raise StoreRangeError(key, start, size)
+    return start
+
+
+_IO_POOL: ThreadPoolExecutor | None = None
+_IO_POOL_GUARD = threading.Lock()
+
+
+def shared_io_pool() -> ThreadPoolExecutor:
+    """Process-wide daemon pool for pipelined store I/O (``get_many``
+    overrides).  Deliberately separate from the reader-side prefetch pool in
+    :mod:`repro.core.container` — a prefetch task fanning out through
+    ``get_many`` must never wait on its own pool for the nested work."""
+    global _IO_POOL
+    with _IO_POOL_GUARD:
+        if _IO_POOL is None:
+            _IO_POOL = ThreadPoolExecutor(
+                max_workers=8, thread_name_prefix="cz-store-io")
+        return _IO_POOL
 
 
 def check_key(key: str) -> str:
@@ -86,6 +137,11 @@ class Store(abc.ABC):
     #: for backends that are only constructed programmatically.
     scheme: str | None = None
 
+    #: True for backends that cross a network (HttpStore): ``open_store``
+    #: wraps these in a RetryStore by default so transient faults are
+    #: absorbed by policy, not by every caller.
+    remote: bool = False
+
     def __init__(self):
         self._locks: dict[str, threading.Lock] = {}
         self._locks_guard = threading.Lock()
@@ -97,8 +153,16 @@ class Store(abc.ABC):
             ) -> bytes:
         """The object at ``key``, or its ``[start, end)`` slice when
         ``byte_range`` is given (``end=None`` means to the object's end).
-        Raises :class:`StoreKeyError` for a missing key; a range beyond the
-        object's end returns the bytes that exist (HTTP-range semantics)."""
+        Raises :class:`StoreKeyError` for a missing key.
+
+        Range semantics are pinned across all backends (the HTTP-416
+        contract): a *short read is allowed only at EOF* — ``end`` past the
+        object's end returns the bytes that exist from ``start`` — but a
+        ``start`` at or past the object's end raises
+        :class:`StoreRangeError`.  ``start == 0`` is always in range, so an
+        empty object reads as ``b""`` and header probes on short objects
+        still see whatever bytes exist.  Backends validate with
+        :func:`check_range`."""
 
     @abc.abstractmethod
     def put(self, key: str, data: bytes) -> None:
@@ -117,6 +181,19 @@ class Store(abc.ABC):
         """Whether ``key`` holds an object."""
 
     # -- derived operations (override for a better native implementation) --
+
+    def get_many(self, requests) -> list[bytes]:
+        """Fetch several ``(key, byte_range)`` pairs; the async half of the
+        read path (the Zarr-v3 ``async_get`` shape).  Returns the payloads
+        in request order.  The default is a sequential loop — correct for
+        local backends where per-request latency is negligible; remote
+        backends (HttpStore, RangeStore) override with a thread-pooled
+        pipelined fetch so the reader's prefetcher overlaps round-trips.
+
+        Error semantics match N sequential :meth:`get` calls except that
+        the first failure wins and the remaining results are discarded.
+        """
+        return [self.get(key, byte_range) for key, byte_range in requests]
 
     def put_atomic(self, key: str, data: bytes) -> None:
         """All-or-nothing durable overwrite — the manifest commit primitive.

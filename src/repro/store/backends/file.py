@@ -12,7 +12,7 @@ import contextlib
 import fcntl
 import os
 
-from .base import Store, StoreKeyError, check_key
+from .base import Store, StoreKeyError, check_key, check_range
 
 __all__ = ["FileStore"]
 
@@ -49,8 +49,9 @@ class FileStore(Store):
             if byte_range is None:
                 return f.read()
             start, end = byte_range
-            f.seek(int(start))
-            return f.read(None if end is None else max(0, int(end) - int(start)))
+            start = check_range(key, start, os.fstat(f.fileno()).st_size)
+            f.seek(start)
+            return f.read(None if end is None else max(0, int(end) - start))
 
     def put(self, key, data):
         path = self.path_for(key)

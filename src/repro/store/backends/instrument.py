@@ -133,6 +133,15 @@ class InstrumentedStore(Store):
         return self._timed("get", self.inner.get, key, byte_range,
                            ranged=byte_range is not None)
 
+    def get_many(self, requests):
+        """Forward the batch to the inner store (keeping its pipelining)
+        and meter each constituent get."""
+        reqs = list(requests)
+        out = self.inner.get_many(reqs)
+        for (_key, rng), data in zip(reqs, out):
+            self.meter.record("get", len(data), ranged=rng is not None)
+        return out
+
     def put(self, key, data):
         return self._timed("put", self.inner.put, key, data,
                            nbytes=len(data))

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import threading
 
-from .base import Store, StoreKeyError, check_key
+from .base import Store, StoreKeyError, check_key, check_range
 
 __all__ = ["MemoryStore"]
 
@@ -69,7 +69,8 @@ class MemoryStore(Store):
         if byte_range is None:
             return data
         start, end = byte_range
-        return data[int(start):] if end is None else data[int(start):int(end)]
+        start = check_range(key, start, len(data))
+        return data[start:] if end is None else data[start:int(end)]
 
     def put(self, key, data):
         check_key(key)

@@ -86,7 +86,7 @@ class CZDataset:
     def __init__(self, root, mode: str = "r",
                  spec: CompressionSpec | None = None, workers: int = 1,
                  cache_readers: int = 8, cache_chunks: int = 8,
-                 stats: bool = False):
+                 stats: bool = False, prefetch: int = 0):
         if mode not in ("r", "a"):
             raise ValueError(f"mode must be 'r' or 'a', got {mode!r}")
         self.store = open_store(root)
@@ -96,6 +96,9 @@ class CZDataset:
         self._lock = threading.RLock()
         self._cache_readers = cache_readers
         self._cache_chunks = cache_chunks
+        #: chunks each reader fetches ahead during read_box (0 = off);
+        #: worth turning on for remote (http://, latency-bearing) stores
+        self._prefetch = max(0, int(prefetch))
         self._readers: collections.OrderedDict[tuple[str, int], FieldReader] = \
             collections.OrderedDict()
         self._retired_decoded = 0
@@ -267,7 +270,7 @@ class CZDataset:
                 return r
             ts = self._timestep(quantity, int(t))
             r = FieldReader(ts["file"], cache_chunks=self._cache_chunks,
-                            store=self.store)
+                            store=self.store, prefetch=self._prefetch)
             self._readers[key] = r
             while len(self._readers) > self._cache_readers:
                 _, old = self._readers.popitem(last=False)
@@ -354,6 +357,11 @@ class CZDataset:
             self._readers.clear()
             if self._writer is not None:
                 self._writer.close()
+            # backends holding OS resources (HttpStore's keep-alive pool)
+            # expose close(); local dict/dir backends don't need one
+            store_close = getattr(self.store, "close", None)
+            if callable(store_close):
+                store_close()
 
     def __enter__(self):
         return self

@@ -482,7 +482,8 @@ def test_no_print_in_library_code():
     import tokenize
 
     src = pathlib.Path(__file__).parent.parent / "src" / "repro"
-    allowed = {src / "serve" / "http.py"}
+    allowed = {src / "serve" / "http.py",
+               src / "store" / "backends" / "http.py"}  # static-server CLI
     offenders = []
     for path in sorted(src.rglob("*.py")):
         if path in allowed or (src / "launch") in path.parents:

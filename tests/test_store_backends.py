@@ -73,6 +73,34 @@ def test_put_get_roundtrip_and_ranges(store):
     assert store.get("a/b.bin") == b"xy"
 
 
+def test_range_contract(store):
+    """The pinned Store.get range semantics (HTTP-416 contract): short
+    reads only at EOF, a start at/past the object's end raises
+    StoreRangeError, start 0 is always in range."""
+    from repro.store.backends import StoreKeyError, StoreRangeError
+
+    store.put("a/b.bin", b"0123456789")
+    # short read at EOF is fine — start strictly inside the object
+    assert store.get("a/b.bin", (8, 100)) == b"89"
+    assert store.get("a/b.bin", (9, None)) == b"9"
+    # start at or past the end can never be satisfied
+    for start in (10, 11, 100):
+        for end in (None, start + 4):
+            with pytest.raises(StoreRangeError) as ei:
+                store.get("a/b.bin", (start, end))
+            assert ei.value.start == start
+            assert isinstance(ei.value, IOError)
+    # start 0 is always in range, even on an empty object
+    store.put("a/empty.bin", b"")
+    assert store.get("a/empty.bin", (0, None)) == b""
+    assert store.get("a/empty.bin", (0, 8)) == b""
+    with pytest.raises(StoreRangeError):
+        store.get("a/empty.bin", (1, None))
+    # a missing key is a key error even when the range would also be bad
+    with pytest.raises(StoreKeyError):
+        store.get("a/nope.bin", (100, None))
+
+
 def test_missing_key_raises_storekeyerror(store):
     from repro.store import StoreKeyError
 
@@ -318,6 +346,87 @@ def test_flaky_store_periodic_faults_counted():
     with pytest.raises(InjectedFault):
         flaky.get("k")                       # get #4: periodic fault
     assert flaky.faults == 2
+
+
+def test_flaky_store_put_faults():
+    """Write-path injection: ``put`` and ``put_atomic`` share one counter,
+    and the buffered ``open_write`` sink commits through ``put`` so
+    streamed member writes are injectable too."""
+    flaky = FlakyStore(MemoryStore(), fail_on_put=2)
+    flaky.put("a", b"1")                       # put #1
+    with pytest.raises(InjectedFault):
+        flaky.put_atomic("b", b"2")            # put #2: fault
+    assert flaky.faults == 1 and flaky.puts == 2
+    flaky.fail_on_put = flaky.puts + 1         # arm the next commit
+    with pytest.raises(InjectedFault):
+        with flaky.open_write("c") as f:       # commit = put #3
+            f.write(b"stream")
+    assert not flaky.inner.exists("c")         # no torn object visible
+    with flaky.open_write("c") as f:           # unarmed: commits fine
+        f.write(b"stream")
+    assert flaky.get("c") == b"stream"
+    # per-op arms cover the rest of the protocol
+    flaky.fail_on_op = {"delete": 1, "list": 1}
+    with pytest.raises(InjectedFault):
+        flaky.delete("a")
+    with pytest.raises(InjectedFault):
+        flaky.list("")
+    assert flaky.exists("a")                   # exists is never faulted
+
+
+def test_mid_append_fault_leaves_last_committed_state():
+    """A fault anywhere inside an append — member write or manifest commit
+    — must leave the dataset readable at its previous committed state:
+    members are written before the manifest's put_atomic publishes them."""
+    flaky = FlakyStore(MemoryStore())
+    with _fill(flaky):                          # 2 committed timesteps
+        pass
+    for arm in ("member", "manifest"):
+        with CZDataset(flaky, "a", spec=SPEC) as ds:
+            if arm == "member":
+                flaky.fail_on_put = flaky.puts + 1   # first member write
+            else:
+                # let both member puts through, fail the manifest commit
+                flaky.fail_on_op = {"put_atomic":
+                                    flaky.op_calls.get("put_atomic", 0) + 1}
+            with pytest.raises(InjectedFault):
+                ds.append({q: f + np.float32(9) for q, f in FIELDS.items()})
+            flaky.fail_on_put = None
+            flaky.fail_on_op = {}
+        with CZDataset(flaky) as ds:            # reopen: last committed state
+            assert ds.timesteps("p") == [0, 1]
+            np.testing.assert_array_equal(
+                ds.read_field("p", 1), FIELDS["p"] + np.float32(1))
+        # the torn append left at most orphans gc can identify, not members
+        with CZDataset(flaky, "a") as ds:
+            ds.gc()
+            assert ds.gc(dry_run=True) == []
+
+
+def test_mid_merge_fault_leaves_sidecars_intact():
+    """An injected fault during merge_manifests (its manifest put_atomic)
+    leaves the primary manifest at its previous state and the rank sidecars
+    in place, so a retried merge completes."""
+    from repro.cluster.multiwriter import RankWriter, merge_manifests
+
+    flaky = FlakyStore(MemoryStore())
+    with CZDataset(flaky, "a", spec=SPEC):
+        pass
+    for rank in range(2):
+        with RankWriter(flaky, rank) as w:
+            w.append({"p": FIELDS["p"] + np.float32(rank)}, t=rank)
+    flaky.fail_on_op = {"put_atomic":
+                        flaky.op_calls.get("put_atomic", 0) + 1}
+    with pytest.raises(InjectedFault):
+        merge_manifests(flaky)
+    flaky.fail_on_op = {}
+    with CZDataset(flaky) as ds:                 # primary manifest untouched
+        assert ds.quantities == []
+    assert merge_manifests(flaky) == 2           # retry completes the merge
+    with CZDataset(flaky) as ds:
+        assert ds.timesteps("p") == [0, 1]
+        np.testing.assert_array_equal(ds.read_field("p", 1),
+                                      FIELDS["p"] + np.float32(1))
 
 
 # ---------------------------------------------------------------------------

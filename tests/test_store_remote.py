@@ -1,0 +1,516 @@
+"""Remote read stack (ISSUE 9 acceptance): the ``http(s)://`` backend over
+a range-capable loopback static server, the RetryStore policy layer, and
+the reader-side chunk prefetcher — plus their interplay with the serve
+tier's single-flight scheduler.
+
+Four layers:
+
+* **HttpStore contract** — ranged gets, 404/416 mapping, read-only
+  enforcement, client-side slicing against a Range-ignoring server;
+* **end-to-end** — a dataset exported over loopback HTTP answers
+  ``read_box``/serve-tier region queries bit-identical to a local read;
+* **retry policy** — transient faults on get *and* put recover
+  transparently with intact caches and correct ``cz_store_retries_total``;
+  permanent errors and deadline exhaustion do not retry;
+* **prefetch** — identical results, identical request counts (the PR 6
+  amplification baseline), prefetched bytes actually consumed, eviction
+  refetches instead of crashing, and exactly one fetch per chunk under
+  concurrent duplicate requests.
+"""
+import functools
+import os
+import threading
+from http.server import SimpleHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import CompressionSpec
+from repro.obs import events as _events
+from repro.serve import Client, RegionHTTPServer, SingleFlight
+from repro.serve.scheduler import ChunkScheduler
+from repro.store import CZDataset
+from repro.store.backends import (
+    FileStore,
+    FlakyStore,
+    HttpStore,
+    InjectedFault,
+    MemoryStore,
+    RangeStore,
+    RetryStore,
+    StaticFileServer,
+    StoreDeadlineError,
+    StoreKeyError,
+    StoreRangeError,
+    open_store,
+)
+
+from test_pipeline_api import smooth_field
+
+N = 32
+BS = 16
+# 16 KiB buffers -> one 16^3 float32 block per chunk: 8 chunks per member
+SPEC = CompressionSpec(scheme="raw", block_size=BS, buffer_bytes=1 << 14)
+FIELDS = {"p": smooth_field(N, seed=3), "rho": smooth_field(N, seed=4)}
+
+
+def _counter(name, **labels):
+    m = obs.REGISTRY.get(name)
+    return 0.0 if m is None else m.value(**labels)
+
+
+def _fill(store_or_root) -> None:
+    with CZDataset(store_or_root, "a", spec=SPEC) as ds:
+        for k in range(2):
+            ds.append({q: f + np.float32(k) for q, f in FIELDS.items()},
+                      time=0.5 * k)
+
+
+@pytest.fixture(scope="module")
+def ds_dir(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("remote") / "ds")
+    _fill(root)
+    return root
+
+
+@pytest.fixture(scope="module")
+def static_srv(ds_dir):
+    with StaticFileServer(ds_dir) as srv:
+        yield srv
+
+
+# ---------------------------------------------------------------------------
+# HttpStore contract
+# ---------------------------------------------------------------------------
+
+def test_http_store_contract(tmp_path):
+    os.makedirs(tmp_path / "a")
+    (tmp_path / "a" / "b.bin").write_bytes(b"0123456789")
+    (tmp_path / "a" / "empty.bin").write_bytes(b"")
+    with StaticFileServer(tmp_path) as srv, HttpStore(srv.url) as st:
+        assert st.get("a/b.bin") == b"0123456789"
+        assert st.get("a/b.bin", (2, 5)) == b"234"
+        assert st.get("a/b.bin", (4, None)) == b"456789"
+        assert st.get("a/b.bin", (0, 0)) == b""
+        assert st.get("a/b.bin", (8, 100)) == b"89"   # short read at EOF
+        assert st.get("a/empty.bin") == b""
+        assert st.get("a/empty.bin", (0, 8)) == b""
+        for rng in ((10, None), (10, 14), (100, None), (5, 5)):
+            if rng[0] < 10:
+                continue
+            with pytest.raises(StoreRangeError):
+                st.get("a/b.bin", rng)
+        assert st.get("a/b.bin", (5, 5)) == b""       # empty span in range
+        with pytest.raises(StoreRangeError):
+            st.get("a/empty.bin", (1, None))
+        with pytest.raises(StoreKeyError):
+            st.get("a/nope.bin")
+        with pytest.raises(StoreKeyError):
+            st.get("a/nope.bin", (0, 4))
+        assert st.exists("a/b.bin") and not st.exists("a/nope.bin")
+        # pipelined batch preserves order and per-request semantics
+        assert st.get_many([("a/b.bin", (0, 2)), ("a/b.bin", (8, None)),
+                            ("a/b.bin", None)]) == \
+            [b"01", b"89", b"0123456789"]
+        s = st.stats()
+        assert s["get_requests"] >= 8 and s["range_requests"] >= 5
+
+
+def test_http_store_is_read_only(static_srv):
+    st = HttpStore(static_srv.url)
+    with pytest.raises(IOError, match="read-only"):
+        st.put("x.bin", b"nope")
+    with pytest.raises(IOError, match="read-only"):
+        st.delete("manifest.json")
+    with pytest.raises(IOError, match="enumerate"):
+        st.list("")
+    st.close()
+
+
+def test_http_store_slices_when_server_ignores_range(ds_dir):
+    """stdlib ``http.server`` answers 200-with-everything to a ranged GET;
+    the store must slice client-side and stay correct (at amplified
+    transfer cost)."""
+    handler = functools.partial(SimpleHTTPRequestHandler, directory=ds_dir)
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), handler)
+    thread = threading.Thread(target=srv.serve_forever, daemon=True)
+    thread.start()
+    try:
+        host, port = srv.server_address[:2]
+        with HttpStore(f"http://{host}:{port}") as st:
+            raw = (FileStore(ds_dir).get("manifest.json"))
+            assert st.get("manifest.json", (2, 10)) == raw[2:10]
+            assert st.get("manifest.json", (4, None)) == raw[4:]
+            with pytest.raises(StoreRangeError):
+                st.get("manifest.json", (len(raw) + 5, None))
+            # and a whole dataset still reads bit-exact through it
+            with CZDataset(st) as ds:
+                np.testing.assert_array_equal(ds.read_field("p", 0),
+                                              FIELDS["p"])
+    finally:
+        srv.shutdown()
+        thread.join(timeout=5)
+        srv.server_close()
+
+
+def test_static_server_sends_real_ranges(static_srv):
+    """The loopback server itself must answer 206 with exact slices —
+    otherwise every 'ranged' assertion in this file is vacuous."""
+    import urllib.request
+
+    req = urllib.request.Request(f"{static_srv.url}/manifest.json",
+                                 headers={"Range": "bytes=2-5"})
+    with urllib.request.urlopen(req) as r:
+        assert r.status == 206
+        body = r.read()
+    assert body == FileStore(static_srv.root).get("manifest.json")[2:6]
+    assert len(body) == 4
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over loopback HTTP
+# ---------------------------------------------------------------------------
+
+def test_http_dataset_reads_bit_identical_and_ranged(ds_dir, static_srv):
+    st = HttpStore(static_srv.url)
+    stored = sum(os.path.getsize(os.path.join(dp, f))
+                 for dp, _, fs in os.walk(ds_dir) for f in fs)
+    with CZDataset(st, cache_chunks=4) as ds:
+        assert ds.quantities == ["p", "rho"]
+        np.testing.assert_array_equal(ds.read_field("p", 0), FIELDS["p"])
+        before = st.stats()
+        np.testing.assert_array_equal(
+            ds.read_box("rho", 1, (3, 4, 5), (BS, BS, BS)),
+            (FIELDS["rho"] + np.float32(1))[3:BS, 4:BS, 5:BS])
+        delta = st.stats()["bytes_fetched"] - before["bytes_fetched"]
+        # the box touched 1 of 8 chunks of one member: byte-ranged, not
+        # whole-member (let alone whole-dataset) transfer
+        assert 0 < delta < stored / 4
+
+
+def test_http_serve_e2e_bit_identical(ds_dir, static_srv):
+    """The acceptance path: ``cz-compress serve http://<loopback>/`` —
+    a URL root resolved through open_store — answers region queries
+    bit-identical to a local read_box."""
+    with CZDataset(ds_dir) as local:
+        want_box = local.read_box("p", 1, (3, 2, 1), (30, 20, 10))
+        want_full = local.read_field("rho", 0)
+    # exactly what serve_main builds when --retries/--timeout are given
+    store = open_store(static_srv.url, retries=2, timeout=10.0)
+    assert isinstance(store, RetryStore)
+    with RegionHTTPServer(store, port=0, prefetch=2).start() as srv:
+        with Client(srv.url) as client:
+            got = client.region("p", 1, (3, 2, 1), (30, 20, 10))
+            np.testing.assert_array_equal(got, want_box)
+            np.testing.assert_array_equal(
+                client.region("rho", 0, (0, 0, 0), (N, N, N)), want_full)
+            assert client.healthz()
+
+
+def test_inspect_accepts_http_url(ds_dir, static_srv, capsys):
+    from repro.launch.compress import inspect_main
+
+    assert inspect_main([static_srv.url]) == 0
+    out = capsys.readouterr().out
+    assert "p" in out and "rho" in out
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+def _retry_store(flaky, **kw):
+    kw.setdefault("backoff", 0.001)
+    kw.setdefault("jitter", 0.0)
+    sleeps = []
+    rs = RetryStore(flaky, sleep=sleeps.append, **kw)
+    return rs, sleeps
+
+
+def test_retry_recovers_get_transparently_with_metrics():
+    flaky = FlakyStore(MemoryStore())
+    _fill(flaky)
+    rs, sleeps = _retry_store(flaky)
+    before = _counter("cz_store_retries_total", backend="flakystore",
+                      op="get")
+    with CZDataset(rs, cache_chunks=8) as ds:
+        warm = ds.read_box("p", 0, (0, 0, 0), (BS, BS, BS))
+        flaky.fail_on_get = flaky.gets + 1      # arm the next cold fetch
+        got = ds.read_box("p", 0, (BS, 0, 0), (N, BS, BS))  # no exception
+        np.testing.assert_array_equal(got, FIELDS["p"][BS:N, :BS, :BS])
+        assert flaky.faults == 1 and len(sleeps) == 1
+        # caches stayed intact across the absorbed fault
+        gets = flaky.gets
+        np.testing.assert_array_equal(
+            ds.read_box("p", 0, (0, 0, 0), (BS, BS, BS)), warm)
+        assert flaky.gets == gets
+    after = _counter("cz_store_retries_total", backend="flakystore",
+                     op="get")
+    assert after - before == 1
+    evs = [e for e in _events.tail(50) if e["event"] == "store.retry"]
+    assert evs and evs[-1]["op"] == "get"
+    assert "InjectedFault" in evs[-1]["error"]
+
+
+def test_retry_recovers_put_path():
+    """Acceptance: injected transient faults on the *write* path recover
+    via RetryStore — one armed fault per member commit and per manifest
+    commit, and the append still lands."""
+    flaky = FlakyStore(MemoryStore(), fail_on_put=1, fail_every=2)
+    rs, sleeps = _retry_store(flaky, retries=3)
+    before = (_counter("cz_store_retries_total", backend="flakystore",
+                       op="put"),
+              _counter("cz_store_retries_total", backend="flakystore",
+                       op="put_atomic"))
+    _fill(rs)  # every other commit faults once; all are absorbed
+    with CZDataset(rs) as ds:
+        assert ds.timesteps("p") == [0, 1]
+        np.testing.assert_array_equal(ds.read_field("p", 1),
+                                      FIELDS["p"] + np.float32(1))
+    assert flaky.faults >= 2 and len(sleeps) == flaky.faults
+    after = (_counter("cz_store_retries_total", backend="flakystore",
+                      op="put"),
+             _counter("cz_store_retries_total", backend="flakystore",
+                      op="put_atomic"))
+    assert sum(after) - sum(before) == flaky.faults
+
+
+def test_retry_exhaustion_reraises_with_backoff_schedule():
+    flaky = FlakyStore(MemoryStore(), fail_on_get=1, fail_every=1)
+    flaky.put("k", b"v")
+    rs, sleeps = _retry_store(flaky, retries=3, backoff=0.01,
+                              max_backoff=0.04)
+    with pytest.raises(InjectedFault):
+        rs.get("k")
+    assert flaky.gets == 4                       # 1 try + 3 retries
+    assert sleeps == [0.01, 0.02, 0.04]          # doubling, capped
+
+
+def test_retry_deadline_exceeded():
+    flaky = FlakyStore(MemoryStore(), fail_on_get=1, fail_every=1)
+    flaky.put("k", b"v")
+    rs, sleeps = _retry_store(flaky, retries=5, backoff=10.0, deadline=0.5)
+    before = _counter("cz_store_deadline_exceeded_total",
+                      backend="flakystore", op="get")
+    with pytest.raises(StoreDeadlineError, match="deadline"):
+        rs.get("k")
+    assert sleeps == []                          # abandoned before sleeping
+    after = _counter("cz_store_deadline_exceeded_total",
+                     backend="flakystore", op="get")
+    assert after - before == 1
+
+
+def test_retry_never_retries_permanent_errors():
+    mem = MemoryStore()
+    mem.put("k", b"0123456789")
+    rs, sleeps = _retry_store(FlakyStore(mem), retries=5)
+    with pytest.raises(StoreKeyError):
+        rs.get("nope")
+    with pytest.raises(StoreRangeError):
+        rs.get("k", (100, None))
+    with pytest.raises(StoreKeyError):
+        rs.delete("nope")
+    assert sleeps == []
+
+
+def test_open_store_retry_wrapping(tmp_path, static_srv):
+    # remote backends are wrapped by default; the policy can be tuned or
+    # disabled; local backends opt in explicitly
+    st = open_store(static_srv.url)
+    assert isinstance(st, RetryStore) and isinstance(st.inner, HttpStore)
+    assert st.remote and st.retries == 2
+    st.close()
+    bare = open_store(static_srv.url, retries=0)
+    assert isinstance(bare, HttpStore)
+    bare.close()
+    tuned = open_store(static_srv.url, retries=5, timeout=3.0)
+    assert isinstance(tuned, RetryStore)
+    assert tuned.retries == 5 and tuned.deadline == 3.0
+    assert tuned.inner.timeout == 3.0
+    tuned.close()
+    local = open_store(str(tmp_path / "d"), retries=3)
+    assert isinstance(local, RetryStore)
+    assert isinstance(local.inner, FileStore)
+    assert isinstance(open_store(str(tmp_path / "d")), FileStore)
+
+
+# ---------------------------------------------------------------------------
+# serve.Client: every GET path survives a server restart
+# ---------------------------------------------------------------------------
+
+def test_client_survives_server_restart_on_all_get_paths(ds_dir):
+    srv = RegionHTTPServer(ds_dir, port=0).start()
+    port = srv.server_address[1]
+    client = Client(srv.url)
+    try:
+        np.testing.assert_array_equal(
+            client.region("p", 0, (0, 0, 0), (8, 8, 8)),
+            FIELDS["p"][:8, :8, :8])
+        assert "cz_serve_queries_total" in client.metrics()
+        # restart the server on the same port: the client's pooled
+        # keep-alive socket is now stale on *every* path
+        srv.close()
+        srv = RegionHTTPServer(ds_dir, port=port).start()
+        for fetch in (client.healthz,
+                      client.manifest,
+                      client.metrics,
+                      lambda: client.region("p", 0, (0, 0, 0), (8, 8, 8)),
+                      client.traces):
+            srv.close()
+            srv = RegionHTTPServer(ds_dir, port=port).start()
+            fetch()  # must transparently retry once on a fresh connection
+    finally:
+        client.close()
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# prefetch
+# ---------------------------------------------------------------------------
+
+def _range_dataset(prefetch=0, **kw):
+    st = RangeStore()
+    _fill(st)
+    return st, CZDataset(st, prefetch=prefetch, **kw)
+
+
+def test_prefetch_bit_identical_and_request_parity():
+    """The PR 6 regression harness: prefetch may reorder fetches but must
+    not change results, request counts, or fetched-byte totals."""
+    counts = {}
+    for pf in (0, 4):
+        st, ds = _range_dataset(prefetch=pf, cache_chunks=4)
+        with ds:
+            before = st.stats()
+            np.testing.assert_array_equal(
+                ds.read_box("p", 0, (0, 0, 0), (N, N, N)), FIELDS["p"])
+            np.testing.assert_array_equal(
+                ds.read_box("rho", 1, (3, 4, 5), (19, 20, 21)),
+                (FIELDS["rho"] + np.float32(1))[3:19, 4:20, 5:21])
+            s = st.stats()
+            counts[pf] = (s["get_requests"] - before["get_requests"],
+                          s["bytes_fetched"] - before["bytes_fetched"])
+    assert counts[4] == counts[0], \
+        f"prefetch changed request/byte amplification: {counts}"
+
+
+def test_prefetch_bytes_actually_used():
+    issued0 = _counter("cz_reader_prefetch_chunks_total", result="issued")
+    used0 = _counter("cz_reader_prefetch_chunks_total", result="used")
+    st, ds = _range_dataset(prefetch=2, cache_chunks=8)
+    with ds:
+        np.testing.assert_array_equal(
+            ds.read_box("p", 0, (0, 0, 0), (N, N, N)), FIELDS["p"])
+    issued = _counter("cz_reader_prefetch_chunks_total",
+                      result="issued") - issued0
+    used = _counter("cz_reader_prefetch_chunks_total", result="used") - used0
+    # 8 covering chunks: the first is fetched directly, the rest ride ahead
+    assert issued >= 6
+    assert used == issued  # every scheduled chunk was consumed, none wasted
+
+
+def test_prefetch_evicted_chunks_are_refetched_not_crashed():
+    st, ds = _range_dataset(prefetch=1)  # max_buffered = 2
+    with ds:
+        reader = ds.reader("p", 0)
+        pf = reader._prefetcher
+        evicted0 = _counter("cz_reader_prefetch_chunks_total",
+                            result="evicted")
+        # flood the prefetcher far past its buffer bound
+        pf.schedule(range(reader.nchunks))
+        assert _counter("cz_reader_prefetch_chunks_total",
+                        result="evicted") - evicted0 >= \
+            reader.nchunks - pf.max_buffered
+        # evicted chunks simply refetch on demand; results stay exact
+        np.testing.assert_array_equal(
+            ds.read_box("p", 0, (0, 0, 0), (N, N, N)), FIELDS["p"])
+
+
+def test_prefetch_failure_falls_back_to_direct_get():
+    flaky = FlakyStore(MemoryStore())
+    _fill(flaky)
+    with CZDataset(flaky, prefetch=2) as ds:
+        reader = ds.reader("p", 0)
+        flaky.fail_on_get = flaky.gets + 1       # poison the prefetch batch
+        reader._prefetcher.schedule([0])
+        failed0 = _counter("cz_reader_prefetch_chunks_total",
+                           result="failed")
+        # the chunk decodes anyway: take() reports the failure and
+        # fetch_chunk falls back to a direct (now unarmed) get
+        np.testing.assert_array_equal(
+            ds.read_box("p", 0, (0, 0, 0), (BS, BS, BS)),
+            FIELDS["p"][:BS, :BS, :BS])
+        assert _counter("cz_reader_prefetch_chunks_total",
+                        result="failed") - failed0 == 1
+
+
+def test_prefetch_skip_predicate_vetoes_inflight_chunks():
+    """The SingleFlight coordination contract, unit level: a chunk whose
+    decode flight is airborne is never scheduled for prefetch."""
+    st, ds = _range_dataset(prefetch=2)
+    with ds:
+        reader = ds.reader("p", 0)
+        sf = SingleFlight()
+        release = threading.Event()
+        flying = threading.Event()
+
+        def slow_decode():
+            flying.set()
+            release.wait(5)
+            return reader.fetch_chunk(1)[0]
+
+        t = threading.Thread(
+            target=lambda: sf.do((reader.path, 1), slow_decode))
+        t.start()
+        flying.wait(5)
+        skip = lambda ci: sf.in_flight((reader.path, ci))
+        issued = reader._prefetcher.schedule([1, 2], skip=skip)
+        assert issued == 1                      # chunk 1 vetoed, chunk 2 ok
+        assert sf.in_flight((reader.path, 1))
+        release.set()
+        t.join(5)
+        assert not sf.in_flight((reader.path, 1))
+
+
+def test_concurrent_duplicate_requests_one_fetch_per_chunk():
+    """Prefetch + SingleFlight end-to-end: many threads demanding the same
+    box issue exactly one byte-range fetch per covering chunk — prefetch
+    never duplicates a fetch a flight already owns, and vice versa."""
+    st, ds = _range_dataset(prefetch=2, cache_chunks=32)
+    with ds:
+        sched = ChunkScheduler(ds)
+        reader = ds.reader("p", 0)               # header fetched here
+        nchunks = len(reader.box_chunks((0, 0, 0), (N, N, N)))
+        before = st.stats()["get_requests"]
+        errs = []
+
+        def query():
+            try:
+                np.testing.assert_array_equal(
+                    sched.read_box("p", 0, (0, 0, 0), (N, N, N)),
+                    FIELDS["p"])
+            except Exception as e:  # surfaced after join
+                errs.append(e)
+
+        threads = [threading.Thread(target=query) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert not errs
+        assert st.stats()["get_requests"] - before == nchunks
+        # flights beyond nchunks resolved from cache without fetching;
+        # concurrent duplicates parked on flights instead of re-decoding
+        assert sched.flights_led >= nchunks
+        assert sched.flights_joined > 0
+
+
+def test_prefetch_over_http_end_to_end(ds_dir):
+    with StaticFileServer(ds_dir) as srv, HttpStore(srv.url) as st:
+        with CZDataset(st, prefetch=4, cache_chunks=4) as ds:
+            np.testing.assert_array_equal(
+                ds.read_box("p", 1, (0, 0, 0), (N, N, N)),
+                FIELDS["p"] + np.float32(1))
+        reqs = st.stats()
+        assert reqs["range_requests"] >= 8       # still ranged, not amplified
