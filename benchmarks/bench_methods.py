@@ -1,14 +1,23 @@
 """Fig. 7/8 — PSNR vs CR for wavelets / zfpx / szx / fpzipx across QoIs,
-timesteps and resolutions.
+timesteps and resolutions — plus the ratio-at-bound frontier for the
+``auto`` meta-scheme.
 
 Expected reproductions: no single method dominates; zfpx strongest on a2;
 wavelets competitive in the visualization band; higher resolution improves
-the wavelet CR more than the others."""
+the wavelet CR more than the others.  The frontier turns "no single method
+dominates" into a feature: on a heterogeneous field, ``auto`` (per-chunk
+winner selection under an explicit abs/rel/psnr target) must achieve a
+compression ratio at least as good as the best *fixed* scheme held to the
+same per-chunk bound contract — asserted hard, for all three target modes.
+"""
 from __future__ import annotations
 
 import time
 
-from repro.core import CompressionSpec
+import numpy as np
+
+from repro.core import CompressionSpec, Pipeline
+from repro.core import blocks as blk
 from repro.fields import CloudConfig, cavitation_fields
 
 from .common import dataset, emit, eps_sweep, save_json, sweep
@@ -23,6 +32,94 @@ def _specs_for(scheme: str, eps_list):
     # fpzipx sweeps bits of precision instead of eps
     return [CompressionSpec(scheme="fpzipx", precision=p)
             for p in (28, 24, 20, 16, 12, 8)[: len(eps_list)]]
+
+
+_FRONTIER_BS = 8
+_FRONTIER_BUF = 1 << 13  # 4 blocks per chunk at 8^3 float32
+
+
+def _hetero_field(n: int = 48) -> np.ndarray:
+    """Multi-regime field, regimes aligned to 8-deep x-slabs: near-constant,
+    oscillatory, incompressible hash-noise, and a *high-magnitude* band
+    (values ~4e5 — beyond szx/lorenzo's quantizer range at tight eps, so a
+    fixed error-bounded scheme cannot hold the target everywhere) over a
+    smooth base — the setting where per-chunk winner selection beats any
+    fixed scheme.  Analytic + hashed-index noise: reproducible without an
+    RNG."""
+    g = np.mgrid[0:n, 0:n, 0:n].astype(np.float32) / n
+    f = 1.0 + 0.5 * np.sin(4 * g[0]) * np.cos(3 * g[1]) + g[2]
+    idx = np.arange(n ** 3, dtype=np.uint32).reshape(n, n, n)
+    h = ((idx * np.uint32(2654435761)) >> np.uint32(20)).astype(np.float32)
+    f[:8] = 0.25 + g[2][:8] * 1e-3                           # near-constant
+    f[8:16] += 0.3 * np.sin(40 * g[0][8:16]) * np.sin(37 * g[1][8:16])
+    f[16:24] = h[16:24] / 2048.0 - 0.5                        # hash noise
+    f[24:32] = 3e5 + 1e5 * np.sin(3 * g[0][24:32]) * np.cos(2 * g[1][24:32])
+    return f.astype(np.float32)
+
+
+def _strictest_chunk_bound(field: np.ndarray, target) -> float:
+    """The tightest per-chunk abs bound the target implies on this field —
+    the bound a *fixed* scheme with one global eps must be held to so the
+    comparison against ``auto`` is bound-for-bound fair."""
+    blocks = np.asarray(blk.blockify(field, _FRONTIER_BS))
+    bpc = max(1, _FRONTIER_BUF // (4 * _FRONTIER_BS ** 3))
+    bounds = []
+    for lo in range(0, blocks.shape[0], bpc):
+        c = blocks[lo:lo + bpc]
+        bounds.append(target.abs_bound(float(c.min()), float(c.max())))
+    return min(bounds)
+
+
+def _frontier(quick: bool) -> list[dict]:
+    """Ratio-at-bound frontier: for each target mode, auto vs every fixed
+    scheme that can honour the same per-chunk bound contract."""
+    from repro.core.schemes import SCHEMES
+    from repro.tune import Target, candidate_spec
+
+    field = _hetero_field(32 if quick else 48)
+    base = CompressionSpec(scheme="auto", block_size=_FRONTIER_BS,
+                           buffer_bytes=_FRONTIER_BUF)
+    rows = []
+    for tgt in ("abs=1e-3", "rel=1e-4", "psnr=80"):
+        target = Target.parse(tgt)
+        strict = _strictest_chunk_bound(field, target)
+        arms = {}
+        for name in sorted(SCHEMES):
+            if name == "auto":
+                continue
+            cand = candidate_spec(name, base, strict)
+            if cand is None:
+                continue  # cannot meet the bound (or rejects the dtype)
+            try:
+                r = Pipeline(cand).analyze(field)
+            except ValueError:
+                # the scheme's declared bound fits but its encoder rejects
+                # the field at this eps (szx/lorenzo quantizer range on the
+                # high-magnitude band): a fixed arm that cannot encode
+                # everywhere is out of the frontier — auto routes around it
+                rows.append({"target": tgt, "scheme": name, "eps": cand.eps,
+                             "cr": None, "psnr": None, "max_err": None})
+                continue
+            arms[name] = r["cr"]
+            rows.append({"target": tgt, "scheme": name, "eps": cand.eps,
+                         "cr": r["cr"], "psnr": r["psnr"],
+                         "max_err": r["max_err"]})
+        aspec = CompressionSpec(scheme="auto", block_size=_FRONTIER_BS,
+                                buffer_bytes=_FRONTIER_BUF,
+                                extra={"target": tgt})
+        r = Pipeline(aspec).analyze(field)
+        rows.append({"target": tgt, "scheme": "auto", "eps": None,
+                     "cr": r["cr"], "psnr": r["psnr"],
+                     "max_err": r["max_err"]})
+        best_fixed = max(arms, key=arms.get)
+        # the acceptance bar: self-driving selection dominates every fixed
+        # scheme held to the same bound, in every target mode
+        assert r["cr"] >= arms[best_fixed], (
+            f"auto CR {r['cr']:.2f} < best fixed {best_fixed} "
+            f"{arms[best_fixed]:.2f} at target {tgt}")
+        emit(f"frontier_{target.mode}_auto_vs_{best_fixed}",
+             0.0, round(r["cr"] / arms[best_fixed], 3))
+    return rows
 
 
 def run(quick: bool = True):
@@ -65,8 +162,20 @@ def run(quick: bool = True):
     a2 = [r for r in rows if r["qoi"] == "a2" and r["t"] == t_labels[-1]]
     besta2 = max(a2, key=lambda r: r["cr"] if r["psnr"] > 40 else -1)
     emit("fig7_best_on_a2", dt * 1e6 / max(len(rows), 1), besta2["scheme"])
-    return rows
+
+    frontier = _frontier(quick)
+    save_json("methods_frontier", frontier)
+    return {"frontier": frontier}
 
 
 if __name__ == "__main__":
-    run(quick=False)
+    import argparse
+
+    from .common import write_bench_record
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sweep (the harness default)")
+    args = ap.parse_args()
+    metrics = run(quick=args.quick)
+    write_bench_record("methods", {"quick": args.quick}, metrics)

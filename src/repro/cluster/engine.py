@@ -78,29 +78,30 @@ def _rank_tracing(rank, trace_path):
         trace.TRACER.save(trace_path)
 
 
-def _encode_rank(task) -> tuple[list[int], list[int], list[int]]:
+def _encode_rank(task) -> tuple[list[int], list[int], list[int], list]:
     """Worker: encode one rank's block span into a private part file.
 
-    Returns (chunk_sizes, chunk_nblocks, chunk_crc32) — the per-rank metadata
-    the parent gathers before the Exscan.
+    Returns (chunk_sizes, chunk_nblocks, chunk_crc32, chunk_records) — the
+    per-rank metadata the parent gathers before the Exscan.
     """
     spec_json, blocks_np, part_path, rank, trace_path = task
     sizes: list[int] = []
     nblks: list[int] = []
     crcs: list[int] = []
+    recs: list = []
     with _rank_tracing(rank, trace_path), \
             trace.span("encode", rank=rank, nblocks=int(blocks_np.shape[0])):
         with open(part_path, "wb") as f:
             if blocks_np.shape[0]:
                 pipe = Pipeline(CompressionSpec.from_json(spec_json))
-                for chunk, nblk in pipe.iter_chunks(blocks_np):
+                for chunk, nblk in pipe.iter_chunks(blocks_np, records=recs):
                     f.write(chunk)
                     sizes.append(len(chunk))
                     nblks.append(nblk)
                     crcs.append(zlib.crc32(chunk) & 0xFFFFFFFF)
             f.flush()
             os.fsync(f.fileno())
-    return sizes, nblks, crcs
+    return sizes, nblks, crcs, recs
 
 
 def _write_at(task) -> None:
@@ -188,8 +189,10 @@ class ParallelCompressor:
         bpc = pipe.blocks_per_chunk
         nchunks = -(-nblocks // bpc)
         if nranks == 1 or nchunks <= 1:
+            records: list = []
             return container.write_stream(
-                path, pipe.iter_chunks(data), header, fsync=fsync)
+                path, pipe.iter_chunks(data, records=records), header,
+                fsync=fsync, records=records)
         _COMPRESSIONS.inc(ranks=nranks)
 
         # when the parent is tracing, every worker task also gets a trace
@@ -219,7 +222,7 @@ class ParallelCompressor:
             t0 = time.perf_counter_ns()
             with trace.span("exscan", ranks=nranks):
                 totals = np.asarray(
-                    [sum(sizes) for sizes, _, _ in enc], np.int64)
+                    [sum(sizes) for sizes, *_ in enc], np.int64)
                 offsets = exclusive_offsets_np(totals)
             _PHASE_SECONDS.observe((time.perf_counter_ns() - t0) / 1e9,
                                    phase="exscan")
@@ -242,10 +245,11 @@ class ParallelCompressor:
                 with open(path, "r+b") as f:
                     nbytes = container.commit_footer(
                         f, header,
-                        [s for ss, _, _ in enc for s in ss],
-                        [n for _, ns, _ in enc for n in ns],
-                        [c for _, _, cs in enc for c in cs],
-                        data_start + int(totals.sum()), fsync=fsync)
+                        [s for ss, _, _, _ in enc for s in ss],
+                        [n for _, ns, _, _ in enc for n in ns],
+                        [c for _, _, cs, _ in enc for c in cs],
+                        data_start + int(totals.sum()), fsync=fsync,
+                        records=[r for _, _, _, rs in enc for r in rs])
             _PHASE_SECONDS.observe((time.perf_counter_ns() - t0) / 1e9,
                                    phase="commit")
             self._absorb_rank_traces(rank_traces)

@@ -104,7 +104,7 @@ _FOOTER_PTR = struct.Struct("<Q")
 
 def commit_footer(f, base_header: dict, sizes: list[int], nblks: list[int],
                   crcs: list[int], footer_off: int,
-                  fsync: bool = False) -> int:
+                  fsync: bool = False, records: list | None = None) -> int:
     """Append the JSON footer at ``footer_off`` and patch the magic's footer
     pointer; returns the container's total byte count.
 
@@ -112,14 +112,27 @@ def commit_footer(f, base_header: dict, sizes: list[int], nblks: list[int],
     included — it decides byte identity), shared by the streaming writer
     below and the cluster engine's rank-parallel assembly
     (``repro.cluster.engine``).
+
+    ``records`` is the per-chunk :meth:`Scheme.chunk_record` collection
+    (one entry per chunk, ``None`` where the scheme recorded nothing); it
+    becomes the footer's ``chunk_schemes`` table only when some chunk
+    actually recorded something, so single-scheme containers stay
+    byte-identical.  A ``chunk_schemes`` already present in
+    ``base_header`` (a re-written :class:`CompressedField`) is re-inserted
+    at the same position, keeping both write routes byte-identical.
     """
     header = dict(base_header)
+    recs = header.pop("chunk_schemes", None)
+    if records is not None and any(r is not None for r in records):
+        recs = records
     header.update({
         "nblocks": int(sum(nblks)),
         "chunk_nblocks": nblks,
         "chunk_sizes": sizes,
         "chunk_crc32": crcs,
     })
+    if recs is not None:
+        header["chunk_schemes"] = recs
     hbytes = json.dumps(header).encode()
     f.seek(footer_off)
     f.write(hbytes)
@@ -138,12 +151,15 @@ def commit_footer(f, base_header: dict, sizes: list[int], nblks: list[int],
 
 def write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
                  base_header: dict, fsync: bool = False,
-                 store: stores.Store | None = None) -> int:
+                 store: stores.Store | None = None,
+                 records: list | None = None) -> int:
     """Stream ``(chunk, nblk)`` pairs to a CZ2 container; one chunk in
     memory.  ``store=`` writes through a byte-store backend (``path`` is
     the key): file backends stream to a real handle, object-store backends
     buffer and commit one whole-object put (they cannot seek to patch the
-    footer pointer)."""
+    footer pointer).  ``records`` is the per-chunk record list the chunk
+    iterator fills as it drains (``Pipeline.iter_chunks(records=...)``) —
+    read only after the loop, when it is complete."""
     sizes: list[int] = []
     nblks: list[int] = []
     crcs: list[int] = []
@@ -157,7 +173,7 @@ def write_stream(path: str, chunk_iter: Iterable[tuple[bytes, int]],
             nblks.append(nblk)
             crcs.append(zlib.crc32(chunk) & 0xFFFFFFFF)
         return commit_footer(f, base_header, sizes, nblks, crcs, f.tell(),
-                             fsync=fsync)
+                             fsync=fsync, records=records)
 
 
 def build_field_header(pipe: Pipeline, source,
@@ -210,8 +226,11 @@ def write_compressed(path: str, source, spec: CompressionSpec | None = None,
         raise TypeError("spec is required when writing a raw field/blocks")
     pipe = Pipeline(spec, workers=workers)
     header, data = build_field_header(pipe, source, extra_header)
-    chunk_iter = pipe.iter_chunks(data, workers=workers, executor=executor)
-    return write_stream(path, chunk_iter, header, fsync=fsync, store=store)
+    records: list = []
+    chunk_iter = pipe.iter_chunks(data, workers=workers, executor=executor,
+                                  records=records)
+    return write_stream(path, chunk_iter, header, fsync=fsync, store=store,
+                        records=records)
 
 
 def write_field(path: str, field: np.ndarray, spec: CompressionSpec,
@@ -322,6 +341,7 @@ def describe(path: str, verify: bool = False,
     header, data_start, magic = _fetch_header(src, key)
     sizes = header["chunk_sizes"]
     crcs = header.get("chunk_crc32", [None] * len(sizes))
+    recs = header.get("chunk_schemes")
     chunks = []
     ok = True
     data = src.get(key, (data_start, data_start + int(sum(sizes)))) \
@@ -331,6 +351,11 @@ def describe(path: str, verify: bool = False,
             zip(sizes, header["chunk_nblocks"], crcs)):
         row = {"index": i, "blocks": int(nblk), "bytes": int(sz),
                "crc32": crc}
+        if recs is not None:
+            rec = recs[i] if i < len(recs) and recs[i] else {}
+            row["scheme"] = rec.get("scheme", header.get("scheme"))
+            if "eps" in rec:
+                row["eps"] = rec["eps"]
         if verify and crc is not None:
             good = (zlib.crc32(data[off:off + sz]) & 0xFFFFFFFF) == crc
             row["crc_ok"] = good
@@ -354,6 +379,13 @@ def describe(path: str, verify: bool = False,
         "spec": spec,
         "chunks": chunks,
     }
+    if recs is not None:
+        # scheme -> chunk-count histogram for mixed-scheme (auto) members
+        hist: dict[str, int] = {}
+        for row in chunks:
+            name = row.get("scheme") or header.get("scheme") or "?"
+            hist[name] = hist.get(name, 0) + 1
+        out["schemes"] = dict(sorted(hist.items()))
     if verify:
         out["crc_ok"] = ok
     return out

@@ -50,8 +50,10 @@ from .schemes import SCHEMES  # noqa: F401  (re-export)
 __all__ = ["CODEC_FORMAT", "DTYPES", "DEVICES", "CompressionSpec",
            "CompressedField", "Pipeline"]
 
-#: version of the per-chunk byte layout (v2: szx shuffles its outlier stream)
-CODEC_FORMAT = 2
+#: version of the per-chunk byte layout (v2: szx shuffles its outlier
+#: stream; v3: the ``auto`` meta-scheme's chunks carry a winner prelude —
+#: name + eps — ahead of the winner's payload)
+CODEC_FORMAT = 3
 
 #: dtypes a container can record; CZ1/headerless payloads default to float32
 DTYPES = ("float32", "float64", "float16")
@@ -203,6 +205,7 @@ class Pipeline:
 
     def iter_chunks(self, blocks_np: np.ndarray, workers: int | None = None,
                     executor: concurrent.futures.Executor | None = None,
+                    records: list | None = None,
                     ) -> Iterator[tuple[bytes, int]]:
         """Yield ``(chunk_bytes, n_blocks)`` one aggregation buffer at a time.
 
@@ -216,6 +219,11 @@ class Pipeline:
         :class:`~repro.store.ShardWriter` pool) chunk encoding is submitted to
         the pool a bounded window ahead while results are yielded strictly in
         order — the output byte stream is identical to the serial path.
+
+        ``records`` (a caller-owned list) collects each chunk's
+        :meth:`Scheme.chunk_record` in yield order — ``None`` entries for
+        schemes that record nothing; the container writer turns a non-empty
+        collection into the footer's ``chunk_schemes`` table.
         """
         spec = self.spec
         blocks_np = np.asarray(blocks_np)
@@ -228,18 +236,24 @@ class Pipeline:
                       range(0, blocks_np.shape[0], bpc))]
         block_bytes = spec.np_dtype.itemsize * spec.block_size ** 3
 
-        def encode(ci: int, lo: int, hi: int) -> bytes:
+        def encode(ci: int, lo: int, hi: int) -> tuple[bytes, dict | None]:
             t0 = time.perf_counter_ns()
             payload = self.scheme.serialize(s1, lo, hi, spec)
             chunk = lossless.encode(payload, spec.stage2)
+            rec = self.scheme.chunk_record(s1, lo, hi, spec)
             _account_encode(spec.scheme, ci, (hi - lo) * block_bytes,
                             len(chunk), t0, time.perf_counter_ns())
-            return chunk
+            return chunk, rec
+
+        def emit(chunk: bytes, rec: dict | None, nblk: int):
+            if records is not None:
+                records.append(rec)
+            return chunk, nblk
 
         nworkers = self.workers if workers is None else max(1, int(workers))
         if executor is None and nworkers <= 1:
             for ci, lo, hi in ranges:
-                yield encode(ci, lo, hi), hi - lo
+                yield emit(*encode(ci, lo, hi), hi - lo)
             return
 
         own_pool = executor is None
@@ -256,7 +270,10 @@ class Pipeline:
                 nxt = next(it, None)
                 if nxt is not None:
                     pending.append((nxt, pool.submit(encode, *nxt)))
-                yield fut.result(), hi - lo
+                chunk, rec = fut.result()
+                # the single ordered drain appends records in chunk order,
+                # so threaded collection matches the serial path exactly
+                yield emit(chunk, rec, hi - lo)
         finally:
             if own_pool:
                 pool.shutdown(wait=True, cancel_futures=True)
@@ -265,7 +282,8 @@ class Pipeline:
                         extra_header: dict | None = None) -> CompressedField:
         blocks_np = np.asarray(blocks_np)
         chunks, chunk_nblocks = [], []
-        for chunk, nblk in self.iter_chunks(blocks_np):
+        records: list = []
+        for chunk, nblk in self.iter_chunks(blocks_np, records=records):
             chunks.append(chunk)
             chunk_nblocks.append(nblk)
         header = self.base_header()
@@ -275,6 +293,8 @@ class Pipeline:
             "chunk_sizes": [len(c) for c in chunks],
             "raw_bytes": int(blocks_np.size * self.spec.np_dtype.itemsize),
         })
+        if any(r is not None for r in records):
+            header["chunk_schemes"] = records
         if extra_header:
             header.update(extra_header)
         return CompressedField(chunks, header)

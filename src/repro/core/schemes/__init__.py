@@ -105,6 +105,20 @@ class Scheme(abc.ABC):
         """
         return spec
 
+    def chunk_record(self, s1: dict, lo: int, hi: int,
+                     spec: "CompressionSpec") -> dict | None:
+        """Optional JSON-able per-chunk footer record for blocks [lo, hi),
+        called right after :meth:`serialize` for the same range.
+
+        ``None`` (the default) records nothing — containers stay
+        byte-identical.  A scheme that varies per chunk (the ``auto``
+        meta-scheme records each chunk's winning scheme + eps) returns a
+        dict; the container writer collects them into the footer's
+        ``chunk_schemes`` table so inspection tooling can describe the
+        chunk mix without decoding.
+        """
+        return None
+
     @abc.abstractmethod
     def stage1(self, blocks_np: np.ndarray, spec: "CompressionSpec") -> dict[str, np.ndarray]:
         """Device transform of a whole (nblk, bs, bs, bs) batch -> streams."""
@@ -162,5 +176,7 @@ class _SchemesView(Mapping):
 
 SCHEMES = _SchemesView()
 
-# Built-in schemes self-register on import.
+# Built-in schemes self-register on import.  ``auto`` comes last: the
+# meta-scheme delegates to whatever else is registered.
 from . import fpzipx, lorenzo, raw, szx, wavelet, zfpx  # noqa: E402,F401
+from . import auto  # noqa: E402,F401

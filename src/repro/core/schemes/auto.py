@@ -1,0 +1,123 @@
+"""The ``auto`` meta-scheme: per-chunk winner selection over the registry.
+
+``auto`` owns no transform.  For each aggregation-buffer chunk it asks the
+tuner (:mod:`repro.tune`) which registered scheme meets the spec's quality
+target at the best measured ratio, delegates encode to that winner, and
+makes the chunk **self-describing**: the serialized payload starts with a
+compact prelude —
+
+    u8 name_len | name (ascii) | f64 winner eps
+
+— followed by the winner's own byte layout.  Decode parses the prelude and
+dispatches through the registry, so mixed-scheme CZ2 containers read
+through every existing path (``read_field``, ``FieldReader``, the serve
+tier, ranked-parallel shared files) with no reader changes and no format
+break beyond the ``CODEC_FORMAT`` bump that introduces the layout.
+
+The target comes from ``spec.extra["target"]`` (``abs=V | rel=V |
+psnr=DB``; defaults to ``abs=spec.eps``) and the optional decision cache
+from ``spec.extra["tune_cache"]`` (see :mod:`repro.tune.policy`).  The
+winning scheme name + eps are also surfaced per chunk in the container
+footer (``chunk_schemes``, via :meth:`chunk_record`) so ``cz-compress
+inspect`` and dataset manifests can show the scheme mix without decoding.
+
+Decisions depend only on chunk content — never on rank, thread, or
+history (with the cache off, its default) — so the cluster engine's
+byte-identical rank-invariance guarantee holds for ``auto`` like any
+fixed scheme.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import threading
+
+import numpy as np
+
+from . import Scheme, get_scheme, register_scheme
+
+_LEN = struct.Struct("<B")
+_EPS = struct.Struct("<d")
+
+
+@register_scheme
+class AutoScheme(Scheme):
+    name = "auto"
+    #: the meta-scheme itself is host-side control flow (winner stage 1
+    #: still routes through spec.device); headers record "host"
+    device_capable = False
+
+    # tune imports stay lazy: this module is imported while the schemes
+    # package is still initializing, and repro.tune imports the registry
+
+    def validate(self, spec) -> None:
+        from repro.tune import bound
+
+        bound.target_from_spec(spec)  # parse errors -> ValueError
+        cache = spec.extra.get("tune_cache", 0) if spec.extra else 0
+        if not isinstance(cache, int) or isinstance(cache, bool) or cache < 0:
+            raise ValueError(
+                f"tune_cache must be a non-negative int, got {cache!r}")
+
+    def params(self, spec) -> dict:
+        from repro.tune import bound
+
+        p = super().params(spec)
+        p["target"] = str(bound.target_from_spec(spec))
+        return p
+
+    def error_bound(self, spec):
+        from repro.tune import bound
+
+        t = bound.target_from_spec(spec)
+        # abs targets are a hard max-abs-error contract; rel/psnr bounds
+        # are per-chunk (value-range dependent), declared best-effort here
+        # and enforced per chunk by the trial runner
+        return t.value if t.mode == "abs" else float("inf")
+
+    def stage1(self, blocks_np, spec):
+        # no batch transform: winners transform per chunk in serialize().
+        # The dict also carries the per-chunk decision memo chunk_record()
+        # reads — guarded, serialize may run on the pipeline's thread pool.
+        return {"blocks": np.asarray(blocks_np, spec.np_dtype),
+                "used": {}, "lock": threading.Lock()}
+
+    def serialize(self, s1, lo, hi, spec) -> bytes:
+        from repro.tune import bound, policy
+
+        chunk = s1["blocks"][lo:hi]
+        target = bound.target_from_spec(spec)
+        decision = policy.policy_for(spec).decide(chunk, spec, target)
+        last_err = None
+        for cand in decision.ranked:
+            sch = get_scheme(cand.scheme)
+            try:
+                ws1 = sch.stage1(chunk, cand)
+                payload = sch.serialize(ws1, 0, int(chunk.shape[0]), cand)
+            except ValueError as e:
+                # the sample passed but the full chunk did not (e.g. szx's
+                # eps/magnitude guard): fall through to the runner-up —
+                # the ranking always ends in a lossless scheme
+                last_err = e
+                continue
+            with s1["lock"]:
+                s1["used"][lo] = cand
+            nb = cand.scheme.encode("ascii")
+            return _LEN.pack(len(nb)) + nb + _EPS.pack(cand.eps) + payload
+        raise ValueError(
+            f"every ranked candidate failed on chunk [{lo}:{hi}): {last_err}")
+
+    def deserialize(self, payload, nblk, spec):
+        n = _LEN.unpack_from(payload, 0)[0]
+        name = bytes(payload[1:1 + n]).decode("ascii")
+        (eps,) = _EPS.unpack_from(payload, 1 + n)
+        wspec = dataclasses.replace(spec, scheme=name, eps=eps, extra={})
+        body = payload[1 + n + _EPS.size:]
+        return get_scheme(name).deserialize(body, nblk, wspec)
+
+    def chunk_record(self, s1, lo, hi, spec):
+        with s1["lock"]:
+            cand = s1["used"].get(lo)
+        if cand is None:
+            return None
+        return {"scheme": cand.scheme, "eps": cand.eps}

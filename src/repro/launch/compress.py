@@ -71,6 +71,31 @@ def _validated_spec(ap: argparse.ArgumentParser,
         ap.error(str(e))
 
 
+def _add_tune_args(ap: argparse.ArgumentParser) -> None:
+    """The auto-tuning knobs, shared by the serial and parallel writers."""
+    ap.add_argument("--target", default="", metavar="MODE=VALUE",
+                    help="quality target for --scheme auto: abs=1e-3 "
+                    "(max abs error), rel=1e-4 (x value range), or psnr=80 "
+                    "(dB); default abs=<--eps>")
+    ap.add_argument("--tune-cache", type=int, default=0, metavar="K",
+                    help="with --scheme auto: reuse tuning decisions for "
+                    "chunks with matching stats, re-trialling every K-th "
+                    "occurrence (0 = trial every chunk, the default)")
+
+
+def _tune_extra(ap: argparse.ArgumentParser, args) -> dict:
+    """Fold the tuning flags into ``spec.extra``; reject them for fixed
+    schemes so a typo'd --scheme never silently drops the quality target."""
+    extra = {}
+    if args.target:
+        extra["target"] = args.target
+    if args.tune_cache:
+        extra["tune_cache"] = args.tune_cache
+    if extra and args.scheme != "auto":
+        ap.error("--target/--tune-cache only apply to --scheme auto")
+    return extra
+
+
 def _is_dataset_root(path: str) -> bool:
     """Store URLs are always dataset roots; plain paths are roots iff they
     are directories (a file path is a single .cz container)."""
@@ -106,6 +131,9 @@ def _inspect_container(path: str, verify: bool = True, store=None,
           f"{'CZ1 legacy' if d['container'] == 'CZ1' else 'CZ2'}, "
           f"chunk format {d['format']})")
     print(f"  scheme       {d['scheme']}  params {d['scheme_params']}")
+    if d.get("schemes"):
+        mix = "  ".join(f"{name} x{cnt}" for name, cnt in d["schemes"].items())
+        print(f"  chunk mix    {mix}")
     print(f"  dtype        {d['dtype']}")
     shape = d["field_shape"] if d["field_shape"] is not None else "(block batch)"
     print(f"  field_shape  {shape}  "
@@ -115,7 +143,9 @@ def _inspect_container(path: str, verify: bool = True, store=None,
               f"{d['raw_bytes']} raw "
               f"(CR {d['raw_bytes']/max(1, d['compressed_bytes']):.2f}x)")
     ok = True
-    print(f"  {'chunk':>5} {'blocks':>7} {'bytes':>10}  crc32")
+    mixed = bool(d.get("schemes"))
+    scheme_col = f" {'scheme':>8}" if mixed else ""
+    print(f"  {'chunk':>5} {'blocks':>7} {'bytes':>10}{scheme_col}  crc32")
     for row in d["chunks"]:
         crc = row["crc32"]
         if crc is None:
@@ -126,7 +156,9 @@ def _inspect_container(path: str, verify: bool = True, store=None,
             good = row["crc_ok"]
             ok &= good
             verdict = f"{crc:08x} {'ok' if good else 'MISMATCH'}"
-        print(f"  {row['index']:>5} {row['blocks']:>7} {row['bytes']:>10}  {verdict}")
+        col = f" {row.get('scheme', '?'):>8}" if mixed else ""
+        print(f"  {row['index']:>5} {row['blocks']:>7} {row['bytes']:>10}"
+              f"{col}  {verdict}")
     print(f"  CRC verify   {'ok' if ok else 'FAILED'}")
     return ok
 
@@ -164,7 +196,7 @@ def _stats_table(root: str) -> int:
                 cr = compression_ratio(ts["raw_bytes"], ts["bytes"])
                 p = ts.get("psnr", "-")
                 if p is None:
-                    p = "inf"       # lossless member (recorded as null)
+                    p = "exact"     # bit-exact member (recorded as null)
                 elif isinstance(p, float):
                     p = f"{p:.2f}"
                 e = ts.get("max_err", "-")
@@ -281,6 +313,7 @@ def parallel_main(argv) -> int:
                     help=f"stage-1 routing, one of {DEVICES} (jax = the "
                     "jit'd Pallas kernel wrappers)")
     ap.add_argument("--buffer-bytes", type=int, default=1 << 20)
+    _add_tune_args(ap)
     ap.add_argument("--out", default="artifacts/fields",
                     help="output directory (plain path or file:// URL)")
     ap.add_argument("--check-identical", action="store_true",
@@ -297,7 +330,7 @@ def parallel_main(argv) -> int:
         block_size=args.block_size, shuffle=args.shuffle,
         zero_bits=args.zero_bits, stage2=args.stage2,
         precision=args.precision, device=args.device,
-        buffer_bytes=args.buffer_bytes))
+        buffer_bytes=args.buffer_bytes, extra=_tune_extra(ap, args)))
     if args.source == "npy":
         fields = {"field": np.load(args.npy).astype(np.float32)}
     else:
@@ -523,6 +556,7 @@ def main(argv=None):
     ap.add_argument("--zero-bits", type=int, default=0)
     ap.add_argument("--stage2", default="zlib")
     ap.add_argument("--precision", type=int, default=32)
+    _add_tune_args(ap)
     ap.add_argument("--device", default=None,
                     help=f"stage-1 routing, one of {DEVICES} (jax = the "
                     "jit'd Pallas kernel wrappers).  With --decompress, "
@@ -566,7 +600,8 @@ def _serial_body(ap: argparse.ArgumentParser, args) -> None:
         scheme=args.scheme, wavelet=args.wavelet, eps=args.eps,
         block_size=args.block_size, shuffle=args.shuffle,
         zero_bits=args.zero_bits, stage2=args.stage2,
-        precision=args.precision, device=args.device or "host"))
+        precision=args.precision, device=args.device or "host",
+        extra=_tune_extra(ap, args)))
     os.makedirs(args.out, exist_ok=True)
 
     if args.source == "npy":

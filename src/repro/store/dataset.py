@@ -232,6 +232,13 @@ class CZDataset:
                     store=self.store)
                 rec = {"t": t, "time": time, "file": rel, "bytes": int(nbytes),
                        "raw_bytes": int(field.nbytes)}
+                if member_spec.scheme == "auto":
+                    # surface the chunk-scheme mix in the manifest (and so in
+                    # /v1/manifest + inspect --stats) without a decode pass
+                    mix = container.describe(
+                        rel, verify=False, store=self.store).get("schemes")
+                    if mix:
+                        rec["schemes"] = mix
                 if self._stats:
                     rec.update(_member_stats(
                         field, container.read_field(rel, store=self.store)))

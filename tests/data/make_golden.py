@@ -8,7 +8,12 @@ decodes them byte-exact — a future ``CODEC_FORMAT`` bump (or a scheme layout
 change without a ``decode_spec`` shim) fails loudly instead of silently
 corrupting old archives.  Only regenerate when a change is *supposed* to
 alter the fixtures, and say why in the commit.
+
+``--only STEM[,STEM...]`` regenerates just the named fixtures (e.g.
+``--only cz2_auto``) — adding a new fixture must not rewrite the committed
+bytes of the existing ones.
 """
+import argparse
 import json
 import os
 import struct
@@ -35,9 +40,31 @@ def golden_field() -> np.ndarray:
     return (f + h.astype(np.float32) / 255.0 * 0.1).astype(np.float32)
 
 
+def golden_auto_field() -> np.ndarray:
+    """Heterogeneous field for the mixed-scheme (``auto``) fixture: regimes
+    aligned with the 8^3 block raster — constant, smooth, and hash-noise
+    chunks — so the tuner's per-chunk winners genuinely differ within one
+    container.  Analytic + hashed-index noise: reproducible from source
+    forever, independent of any RNG implementation."""
+    g = np.mgrid[0:N, 0:N, 0:N].astype(np.float32) / N
+    f = 2.0 + np.sin(5 * g[0]) * np.cos(4 * g[1]) + g[2]
+    idx = np.arange(N ** 3, dtype=np.uint32).reshape(N, N, N)
+    h = ((idx * np.uint32(2654435761)) >> np.uint32(20)).astype(np.float32)
+    f[:8, :8, :] = 0.5                           # constant blocks
+    f[8:, 8:, :] = h[8:, 8:, :] / 2048.0 - 1.0   # incompressible blocks
+    return f.astype(np.float32)
+
+
 def spec_for(scheme: str) -> CompressionSpec:
     return CompressionSpec(scheme=scheme, eps=1e-3, block_size=BS,
                            buffer_bytes=1 << 13).validate()
+
+
+def auto_spec() -> CompressionSpec:
+    # 2 KiB buffer -> one 8^3 float32 block per chunk: every block-aligned
+    # regime of golden_auto_field gets its own tuning decision
+    return CompressionSpec(scheme="auto", eps=1e-3, block_size=BS,
+                           buffer_bytes=1 << 11).validate()
 
 
 def write_cz1(path: str, field: np.ndarray, spec: CompressionSpec,
@@ -82,20 +109,40 @@ def write_cz1(path: str, field: np.ndarray, spec: CompressionSpec,
             f.write(c)
 
 
-def main() -> None:
+def main(only: str | None = None) -> None:
+    todo = set(only.split(",")) if only else None
+
+    def want(stem: str) -> bool:
+        return todo is None or stem in todo
+
     field = golden_field()
-    np.save(os.path.join(HERE, "golden_input.npy"), field)
+    if want("golden_input"):
+        np.save(os.path.join(HERE, "golden_input.npy"), field)
 
     for scheme, legacy_szx in (("raw", False), ("szx", True)):
+        if not want(f"cz1_{scheme}"):
+            continue
         path = os.path.join(HERE, f"cz1_{scheme}.cz")
         write_cz1(path, field, spec_for(scheme), legacy_szx)
         np.save(os.path.join(HERE, f"cz1_{scheme}.decoded.npy"),
                 container.read_field(path))
 
     for scheme in ("wavelet", "lorenzo", "zfpx"):
+        if not want(f"cz2_{scheme}"):
+            continue
         path = os.path.join(HERE, f"cz2_{scheme}.cz")
         container.write_field(path, field, spec_for(scheme))
         np.save(os.path.join(HERE, f"cz2_{scheme}.decoded.npy"),
+                container.read_field(path))
+
+    if want("cz2_auto"):
+        auto_field = golden_auto_field()
+        np.save(os.path.join(HERE, "golden_auto_input.npy"), auto_field)
+        path = os.path.join(HERE, "cz2_auto.cz")
+        container.write_field(path, auto_field, auto_spec())
+        mix = container.describe(path)["schemes"]
+        assert len(mix) >= 2, f"auto fixture must mix schemes, got {mix}"
+        np.save(os.path.join(HERE, "cz2_auto.decoded.npy"),
                 container.read_field(path))
 
     for name in sorted(os.listdir(HERE)):
@@ -104,4 +151,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated fixture stems to regenerate "
+                         "(default: all)")
+    main(ap.parse_args().only)

@@ -70,6 +70,39 @@ def test_rank_invariance_byte_identical(engine, scheme, tmp_path):
     assert dec.shape == FIELD.shape
 
 
+def test_rank_invariance_auto_mixed_schemes(engine, tmp_path):
+    """Acceptance: the ``auto`` meta-scheme keeps the engine's byte-identity
+    guarantee even when its per-chunk decisions actually mix schemes — the
+    tuner's choice is a pure function of chunk content, never of rank."""
+    # regimes aligned with the 16^3 block raster so different chunks
+    # genuinely favor different schemes (constant octant -> raw wins at
+    # rel targets, noise octant -> lorenzo, smooth elsewhere -> szx)
+    rng = np.random.default_rng(7)
+    field = np.asarray(FIELD, np.float32).copy()
+    field[:16, :16, :16] = 0.125
+    field[16:, 16:, 16:] = rng.normal(0, 0.4, (16, 16, 16)).astype(np.float32)
+    spec = CompressionSpec(scheme="auto", eps=1e-3, block_size=BS,
+                           buffer_bytes=1 << 14,
+                           extra={"target": "rel=1e-4"})
+    serial = os.path.join(tmp_path, "serial.cz")
+    n_serial = container.write_field(serial, field, spec)
+    with open(serial, "rb") as f:
+        ref = f.read()
+    for ranks in (1, 2, 4):
+        path = os.path.join(tmp_path, f"r{ranks}.cz")
+        n = engine.compress(path, field, spec, ranks=ranks)
+        assert n == n_serial
+        with open(path, "rb") as f:
+            assert f.read() == ref, \
+                f"auto ranks={ranks} differs from the serial writer"
+    d = container.describe(os.path.join(tmp_path, "r4.cz"))
+    assert len(d["schemes"]) >= 2, f"expected a scheme mix, got {d['schemes']}"
+    assert sum(d["schemes"].values()) == len(d["chunks"])
+    dec = container.read_field(os.path.join(tmp_path, "r4.cz"))
+    rngv = float(field.max() - field.min())
+    assert np.max(np.abs(field - dec)) <= 1e-4 * rngv * (1 + 1e-6)
+
+
 def test_engine_more_ranks_than_chunks(engine, tmp_path):
     """Ranks beyond the chunk count contribute zero bytes, not corruption."""
     spec = CompressionSpec(scheme="raw", block_size=BS, buffer_bytes=1 << 22)
@@ -490,14 +523,17 @@ def test_append_stats_recorded_and_inspectable(tmp_path, capsys):
     out = capsys.readouterr().out
     assert "PSNR" in out and "p" in out
 
-    # lossless members record psnr=None (JSON has no Infinity) -> 'inf'
+    # bit-exact members record psnr=None (JSON has no Infinity); the table
+    # renders that as 'exact', not a misleading numeric 'inf'
     root2 = os.path.join(tmp_path, "ds2")
     with CZDataset(root2, "a", spec=SPEC, stats=True) as ds:
         ds.append({"p": FIELD})
         assert ds.timestep_info("p", 0)["psnr"] is None
         assert ds.timestep_info("p", 0)["max_err"] == 0.0
     assert inspect_main(["--stats", root2]) == 0
-    assert "inf" in capsys.readouterr().out
+    out2 = capsys.readouterr().out
+    assert "exact" in out2
+    assert "inf" not in out2
 
 
 def test_rank_writer_stats(tmp_path):

@@ -24,6 +24,7 @@ GOLDENS = [
     ("cz2_wavelet", 2, "wavelet", False),
     ("cz2_lorenzo", 2, "lorenzo", False),
     ("cz2_zfpx", 2, "zfpx", False),
+    ("cz2_auto", 2, "auto", False),
 ]
 
 
@@ -61,6 +62,22 @@ def test_golden_headers_pin_their_generation(stem, gen, scheme, lossless):
     if gen == 1:
         # seed-era specs had no dtype/device keys; both must default cleanly
         assert "device" not in header["spec"] and "dtype" not in header["spec"]
+
+
+def test_golden_auto_fixture_is_genuinely_mixed():
+    """The committed ``auto`` fixture pins a *mixed-scheme* container: the
+    footer records at least two distinct per-chunk winners, each chunk's
+    prelude dispatches its own decoder, and the whole decode honours the
+    abs target relative to the committed input."""
+    path = _fixture("cz2_auto.cz")
+    d = container.describe(path, verify=True)
+    assert d["crc_ok"]
+    assert len(d["schemes"]) >= 2, d["schemes"]
+    assert sum(d["schemes"].values()) == len(d["chunks"])
+    assert all("scheme" in row for row in d["chunks"])
+    field = np.load(_fixture("golden_auto_input.npy"))
+    err = np.max(np.abs(container.read_field(path) - field))
+    assert err <= 1e-3 * (1 + 1e-4), err  # default target: abs=spec.eps
 
 
 def test_golden_error_bound_still_holds():

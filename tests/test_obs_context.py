@@ -465,6 +465,8 @@ def test_readme_documents_every_registered_metric():
     import repro.core.schemes._device  # noqa: F401  (cz_kernel_fallbacks)
     import repro.kernels.ops  # noqa: F401  (cz_kernel_*)
     import repro.store.backends.instrument  # noqa: F401  (cz_store_*)
+    import repro.tune.policy  # noqa: F401  (cz_tune_cache_hits)
+    import repro.tune.trial  # noqa: F401  (cz_tune_trials/decision)
     from tests.test_obs import SERVE_METRIC_NAMES
 
     readme = (pathlib.Path(__file__).parent.parent / "README.md").read_text()

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    CODEC_FORMAT,
     CompressionSpec,
     Pipeline,
     SCHEMES,
@@ -195,7 +196,7 @@ def test_cz2_header_records_scheme_and_format(tmp_path):
     container.write_field(path, FIELD, CompressionSpec(scheme="zfpx",
                                                        block_size=16))
     r = container.FieldReader(path)
-    assert r.header["format"] == 2
+    assert r.header["format"] == CODEC_FORMAT
     assert r.header["scheme"] == "zfpx"
     assert r.header["scheme_params"] == {"eps": 1e-3, "device": "host"}
     r.close()

@@ -1,0 +1,312 @@
+"""repro.tune coverage: target parsing and bound math, candidate eps
+inversion, deterministic sampling, the ``auto`` meta-scheme's per-chunk
+bound contract in every target mode, the decision cache, and the CLI /
+dataset surfaces that expose the per-chunk scheme mix."""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CODEC_FORMAT, CompressionSpec, container
+from repro.core import blocks as blk
+from repro.core.schemes import get_scheme
+from repro.launch import compress as cli
+from repro.store import CZDataset
+from repro.tune import (DecisionPolicy, Target, candidate_spec,
+                        chunk_signature, policy_for, sample_blocks,
+                        target_from_spec)
+from repro.tune import policy as policy_mod
+
+N, BS = 16, 8
+# 2 KiB buffer -> one 8^3 float32 block per chunk: every block gets its own
+# tuning decision, so block-aligned regimes force a genuinely mixed container
+AUTO_SPEC = CompressionSpec(scheme="auto", eps=1e-3, block_size=BS,
+                            buffer_bytes=1 << 11)
+
+
+def hetero_field() -> np.ndarray:
+    """Block-raster-aligned regimes: constant, hash-noise, smooth."""
+    g = np.mgrid[0:N, 0:N, 0:N].astype(np.float32) / N
+    f = 2.0 + np.sin(5 * g[0]) * np.cos(4 * g[1]) + g[2]
+    idx = np.arange(N ** 3, dtype=np.uint32).reshape(N, N, N)
+    h = ((idx * np.uint32(2654435761)) >> np.uint32(20)).astype(np.float32)
+    f[:BS, :BS, :] = 0.5
+    f[BS:, BS:, :] = h[BS:, BS:, :] / 2048.0 - 1.0
+    return f.astype(np.float32)
+
+
+def chunks_of(field: np.ndarray, spec: CompressionSpec):
+    blocks = np.asarray(blk.blockify(field, spec.block_size))
+    bpc = max(1, spec.buffer_bytes // (4 * spec.block_size ** 3))
+    return [blocks[lo:lo + bpc] for lo in range(0, blocks.shape[0], bpc)]
+
+
+# ---------------------------------------------------------------------------
+# Target: parsing, rendering, bound math
+# ---------------------------------------------------------------------------
+
+def test_target_parse_render_roundtrip():
+    for text, mode, value in (("abs=1e-3", "abs", 1e-3),
+                              ("rel=1e-4", "rel", 1e-4),
+                              ("psnr=80", "psnr", 80.0),
+                              (" psnr =80", "psnr", 80.0)):
+        t = Target.parse(text)
+        assert (t.mode, t.value) == (mode, value)
+        assert Target.parse(str(t)) == t
+
+
+@pytest.mark.parametrize("bad", ["", "abs", "abs=", "abs=nope", "snr=40",
+                                 "abs=-1", "abs=0", "psnr=inf", "abs=nan"])
+def test_target_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        Target.parse(bad)
+
+
+def test_target_abs_bound_math():
+    assert Target("abs", 2e-3).abs_bound(-5.0, 17.0) == 2e-3
+    assert Target("rel", 1e-4).abs_bound(1.0, 3.0) == pytest.approx(2e-4)
+    # psnr (paper Eq. 1) via the uniform-error model: a = rng*sqrt(3)/(2*10^(dB/20))
+    got = Target("psnr", 80.0).abs_bound(0.0, 2.0)
+    assert got == pytest.approx(2.0 * math.sqrt(3.0) / (2.0 * 1e4))
+    # constant data: rel/psnr collapse to 0 -> only lossless stays admissible
+    assert Target("rel", 1e-4).abs_bound(1.5, 1.5) == 0.0
+    assert Target("psnr", 80.0).abs_bound(1.5, 1.5) == 0.0
+
+
+def test_target_from_spec_default_is_abs_eps():
+    spec = CompressionSpec(scheme="auto", eps=5e-4)
+    assert target_from_spec(spec) == Target("abs", 5e-4)
+    spec = CompressionSpec(scheme="auto", extra={"target": "psnr=60"})
+    assert target_from_spec(spec) == Target("psnr", 60.0)
+
+
+# ---------------------------------------------------------------------------
+# candidate_spec: inverting each scheme's declared error_bound contract
+# ---------------------------------------------------------------------------
+
+def test_candidate_spec_inverts_declared_bounds():
+    base = CompressionSpec(scheme="auto", block_size=BS)
+    bound = 1e-3
+    for name in ("wavelet", "zfpx", "szx", "lorenzo"):
+        cand = candidate_spec(name, base, bound)
+        assert cand is not None and cand.scheme == name
+        got = get_scheme(name).error_bound(cand)
+        assert got == pytest.approx(bound), (name, got)
+        # the eps actually differs per scheme (szx eps=bound, wavelet 100x
+        # tighter): the inversion is per-contract, not a copy
+        assert cand.eps == pytest.approx(
+            bound / get_scheme(name).error_bound(
+                CompressionSpec(scheme=name, eps=1.0, block_size=BS)))
+
+
+def test_candidate_spec_lossless_and_impossible():
+    base = CompressionSpec(scheme="auto", block_size=BS)
+    raw = candidate_spec("raw", base, 1e-3)
+    assert raw is not None and get_scheme("raw").error_bound(raw) is None
+    # a zero bound is unmeetable by any lossy scheme but fine for lossless
+    assert candidate_spec("szx", base, 0.0) is None
+    assert candidate_spec("raw", base, 0.0) is not None
+
+
+# ---------------------------------------------------------------------------
+# sampling: deterministic, content-independent stride
+# ---------------------------------------------------------------------------
+
+def test_sample_blocks_even_stride_includes_block_zero():
+    blocks = np.arange(10 * 2, dtype=np.float32).reshape(10, 2)
+    s = sample_blocks(blocks, max_blocks=4)
+    np.testing.assert_array_equal(s, blocks[[0, 3, 6, 9]])
+    # small chunks pass through whole
+    np.testing.assert_array_equal(sample_blocks(blocks[:3], 4), blocks[:3])
+
+
+# ---------------------------------------------------------------------------
+# the auto scheme: per-chunk bound contract in every target mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tgt", ["abs=1e-3", "rel=1e-4", "psnr=80"])
+def test_auto_roundtrip_holds_per_chunk_bound(tmp_path, tgt):
+    field = hetero_field()
+    spec = CompressionSpec(scheme="auto", block_size=BS,
+                           buffer_bytes=1 << 11, extra={"target": tgt})
+    path = os.path.join(tmp_path, "f.cz")
+    container.write_field(path, field, spec)
+    dec = container.read_field(path)
+    target = Target.parse(tgt)
+    for orig, got in zip(chunks_of(field, spec), chunks_of(dec, spec)):
+        bound = target.abs_bound(float(orig.min()), float(orig.max()))
+        err = float(np.max(np.abs(orig.astype(np.float64)
+                                  - got.astype(np.float64))))
+        ulp = float(np.spacing(np.float32(np.abs(orig).max() or 1.0)))
+        assert err <= bound * (1 + 1e-6) + ulp, (tgt, err, bound)
+
+
+def test_auto_container_is_mixed_and_self_describing(tmp_path):
+    path = os.path.join(tmp_path, "f.cz")
+    container.write_field(path, hetero_field(), AUTO_SPEC)
+    d = container.describe(path, verify=True)
+    assert d["crc_ok"] and d["format"] == CODEC_FORMAT
+    assert len(d["schemes"]) >= 2, d["schemes"]
+    assert sum(d["schemes"].values()) == len(d["chunks"])
+    for row in d["chunks"]:
+        assert row["scheme"] in d["schemes"] and row["eps"] > 0
+    assert d["scheme_params"]["target"] == "abs=0.001"
+
+
+def test_auto_mixed_container_region_read(tmp_path):
+    """FieldReader must dispatch each chunk's own decoder on a partial read
+    of a mixed-scheme container."""
+    field = hetero_field()
+    path = os.path.join(tmp_path, "f.cz")
+    container.write_field(path, field, AUTO_SPEC)
+    lo, hi = (2, 1, 3), (14, 7, 12)  # x spans both halves, y only the first
+    with container.FieldReader(path) as r:
+        box = r.read_box(lo, hi)
+        assert 0 < r.chunks_decoded < r.nchunks
+    ref = field[lo[0]:hi[0], lo[1]:hi[1], lo[2]:hi[2]]
+    assert np.max(np.abs(box - ref)) <= 1e-3 * (1 + 1e-6)
+
+
+def test_auto_validate_rejects_bad_knobs():
+    with pytest.raises(ValueError):
+        CompressionSpec(scheme="auto", extra={"target": "snr=40"}).validate()
+    with pytest.raises(ValueError):
+        CompressionSpec(scheme="auto", extra={"tune_cache": -1}).validate()
+    with pytest.raises(ValueError):
+        CompressionSpec(scheme="auto", extra={"tune_cache": True}).validate()
+    CompressionSpec(scheme="auto", extra={"target": "psnr=80",
+                                          "tune_cache": 3}).validate()
+
+
+def test_auto_error_bound_declaration():
+    sch = get_scheme("auto")
+    assert sch.error_bound(
+        CompressionSpec(scheme="auto", eps=2e-3)) == 2e-3
+    assert sch.error_bound(CompressionSpec(
+        scheme="auto", extra={"target": "psnr=80"})) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# decision policy: trial-every-chunk default, opt-in signature cache
+# ---------------------------------------------------------------------------
+
+def test_chunk_signature_separates_regimes():
+    rng = np.random.default_rng(7)
+    a = rng.normal(0, 1.0, (4, BS ** 3)).astype(np.float32)
+    assert chunk_signature(a) == chunk_signature(a.copy())
+    assert chunk_signature(a) != chunk_signature(a * 4.0)  # 2 octaves apart
+    assert chunk_signature(np.full((4, BS ** 3), 1.5, np.float32)) \
+        != chunk_signature(a)
+
+
+def test_policy_cache_hits_and_periodic_retrial(monkeypatch):
+    calls = []
+    real = policy_mod.run_trials
+    monkeypatch.setattr(policy_mod, "run_trials",
+                        lambda b, s, t: calls.append(1) or real(b, s, t))
+    spec = CompressionSpec(scheme="auto", block_size=BS)
+    chunk = np.linspace(0, 1, 2 * BS ** 3,
+                        dtype=np.float32).reshape(2, BS, BS, BS)
+    hits0 = policy_mod._CACHE_HITS.value()
+
+    pol = DecisionPolicy(retrial_every=2)
+    decisions = [pol.decide(chunk, spec, Target("abs", 1e-3))
+                 for _ in range(4)]
+    # occurrences 0 and 2 trial (first + periodic re-trial), 1 and 3 hit
+    assert len(calls) == 2
+    assert policy_mod._CACHE_HITS.value() - hits0 == 2
+    assert all(d.winner == decisions[0].winner for d in decisions)
+
+    # default policy (cache off) trials every chunk
+    calls.clear()
+    for _ in range(3):
+        DecisionPolicy(0).decide(chunk, spec, Target("abs", 1e-3))
+    assert len(calls) == 3
+
+
+def test_policy_for_is_per_spec_and_tracks_the_knob():
+    a = CompressionSpec(scheme="auto", block_size=BS,
+                        extra={"tune_cache": 4})
+    assert policy_for(a) is policy_for(a)
+    assert policy_for(a).retrial_every == 4
+    b = CompressionSpec(scheme="auto", block_size=BS)
+    assert policy_for(b).retrial_every == 0
+    assert policy_for(a) is not policy_for(b)
+
+
+# ---------------------------------------------------------------------------
+# CLI: tuning flags, inspect's chunk-mix surfaces
+# ---------------------------------------------------------------------------
+
+def test_cli_target_rejected_for_fixed_schemes(tmp_path, capsys):
+    with pytest.raises(SystemExit) as e:
+        cli.main(["--scheme", "szx", "--target", "abs=1e-3",
+                  "--out", str(tmp_path)])
+    assert e.value.code == 2
+    assert "only apply to --scheme auto" in capsys.readouterr().err
+
+
+def test_cli_auto_end_to_end_npy(tmp_path, capsys):
+    npy = os.path.join(tmp_path, "in.npy")
+    np.save(npy, hetero_field())
+    cli.main(["--source", "npy", "--npy", npy, "--scheme", "auto",
+              "--target", "rel=1e-4", "--block-size", str(BS),
+              "--out", str(tmp_path)])
+    capsys.readouterr()
+    path = os.path.join(tmp_path, "field.cz")
+    assert container.describe(path)["scheme_params"]["target"] == "rel=0.0001"
+    with open(os.path.join(tmp_path, "report.json")) as f:
+        assert json.load(f)["spec"]["extra"]["target"] == "rel=1e-4"
+
+
+def test_cli_inspect_prints_chunk_mix(tmp_path, capsys):
+    path = os.path.join(tmp_path, "f.cz")
+    container.write_field(path, hetero_field(), AUTO_SPEC)
+    assert cli.inspect_main([path]) == 0
+    out = capsys.readouterr().out
+    assert "chunk mix" in out
+    assert "scheme" in out  # the per-chunk column header
+    for name, cnt in container.describe(path)["schemes"].items():
+        assert f"{name} x{cnt}" in out
+
+    assert cli.inspect_main(["--json", path]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["schemes"] == container.describe(path)["schemes"]
+    assert all("scheme" in row for row in doc["chunks"])
+
+
+def test_cli_inspect_fixed_scheme_has_no_mix_column(tmp_path, capsys):
+    path = os.path.join(tmp_path, "f.cz")
+    container.write_field(path, hetero_field(),
+                          CompressionSpec(scheme="szx", eps=1e-3,
+                                          block_size=BS))
+    assert cli.inspect_main([path]) == 0
+    out = capsys.readouterr().out
+    assert "chunk mix" not in out
+
+
+# ---------------------------------------------------------------------------
+# dataset tier: the scheme mix travels into the manifest
+# ---------------------------------------------------------------------------
+
+def test_dataset_auto_member_records_scheme_mix(tmp_path):
+    root = os.path.join(tmp_path, "ds")
+    field = hetero_field()
+    with CZDataset(root, "a", spec=AUTO_SPEC) as ds:
+        ds.append({"p": field}, time=9.4)
+    with CZDataset(root) as ds:
+        rec = ds.timestep_info("p")[0]
+        assert len(rec["schemes"]) >= 2
+        assert rec["schemes"] == \
+            container.describe(rec["file"], verify=False,
+                               store=ds.store)["schemes"]
+        # and through the /v1/manifest serializer
+        man = ds.describe()
+        assert man["quantities"]["p"]["timesteps"][0]["schemes"] \
+            == rec["schemes"]
+        lo, hi = (3, 2, 4), (13, 12, 15)
+        box = ds.read_box("p", 0, lo, hi)
+        ref = field[lo[0]:hi[0], lo[1]:hi[1], lo[2]:hi[2]]
+        assert np.max(np.abs(box - ref)) <= 1e-3 * (1 + 1e-6)
